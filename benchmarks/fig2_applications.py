@@ -1,0 +1,137 @@
+"""Figure 2 analogue — application-level benefit of RowClone(-ZI).
+
+Paper Fig. 2: IPC improvement + DRAM energy reduction for six copy/init-
+intensive benchmarks.  Serving/training analogues here, each run with
+RowClone ON (FPM+PSM+ZI) vs OFF (baseline copies, materialized zeros):
+
+  forkbench   — admission + fork(4) + divergent decode (CoW-heavy; paper's
+                fork microbenchmark)
+  buz-init    — bulk allocation/zeroing of fresh KV blocks (paper's shell/
+                bootup zeroing profile)
+  checkpoint  — training with per-N-step checkpoint: async CoW snapshot vs
+                blocking write (paper's process checkpointing)
+  migrate     — slab rebalance via PSM vs freeing+recomputing the moved
+                sequences (paper's page-migration application)
+
+Readouts: wall-clock on this host, plus bytes-through-each-path derived
+deltas (the quantity the paper's energy numbers are made of).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import RowCloneConfig, get_config
+from repro.core.migration import execute as migrate_execute, plan_rebalance
+from repro.launch.serve import ServingEngine
+from repro.launch.train import train_loop
+from repro.models import build_model, split_params
+
+
+def _mk_engine(cfg, params, on: bool, max_seqs=16):
+    rc = RowCloneConfig(enable_fpm=on, enable_psm=on, enable_zi=on)
+    return ServingEngine(cfg, params, max_seqs=max_seqs, rc=rc)
+
+
+def _forkbench(cfg, params, on: bool) -> Dict:
+    eng = _mk_engine(cfg, params, on)
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    sid = eng.add_request(rng.integers(2, cfg.vocab_size,
+                                       size=48).astype(np.int32))
+    eng.fork(sid, 4)
+    for _ in range(6):
+        eng.decode_round()
+    dt = time.perf_counter() - t0
+    s = eng.engine.stats
+    return dict(wall_s=dt,
+                bytes_compute=s.bytes_baseline,
+                bytes_dma=s.bytes_fpm,
+                bytes_avoided=s.bytes_avoided,
+                tokens=6 * len(eng.cache.seqs))
+
+
+def _buz_init(cfg, params, on: bool) -> Dict:
+    eng = _mk_engine(cfg, params, on, max_seqs=32)
+    t0 = time.perf_counter()
+    sids = []
+    for i in range(24):
+        sids.append(eng.cache.new_sequence(prompt_len=64))
+    if not on:
+        # baseline must materialize zeros for every fresh block
+        pend = eng.engine.alloc.pending_zero(
+            [b for s in sids for b in eng.cache.blocks_of(s)])
+        eng.engine.materialize_zeros(pend)
+    dt = time.perf_counter() - t0
+    s = eng.engine.stats
+    nblk = sum(len(eng.cache.blocks_of(s_)) for s_ in sids)
+    return dict(wall_s=dt, blocks=nblk,
+                bytes_avoided=s.bytes_avoided,
+                zero_lazy=s.zero_lazy, zero_mat=s.zero_materialized)
+
+
+def _checkpoint(on: bool) -> Dict:
+    import tempfile
+    d = tempfile.mkdtemp()
+    t0 = time.perf_counter()
+    train_loop("yi-6b", steps=12, batch=2, seq_len=64, smoke=True,
+               ckpt_dir=d, checkpoint_every=3, log_every=100)
+    dt = time.perf_counter() - t0
+    return dict(wall_s=dt, checkpoints=4)
+
+
+def _checkpoint_blocking() -> Dict:
+    import tempfile
+
+    from repro.checkpoint.manager import CheckpointManager
+    orig = CheckpointManager.__init__
+
+    def patched(self, directory, keep=3, async_save=True):
+        orig(self, directory, keep=keep, async_save=False)
+
+    CheckpointManager.__init__ = patched
+    try:
+        return _checkpoint(False)
+    finally:
+        CheckpointManager.__init__ = orig
+
+
+def _migrate(cfg, params, on: bool) -> Dict:
+    eng = _mk_engine(cfg, params, on)
+    rng = np.random.default_rng(1)
+    for _ in range(4):
+        sid = eng.cache.new_sequence(prompt_len=64, prefer_slab=0)
+        eng.engine.alloc.mark_written(eng.cache.blocks_of(sid))
+    t0 = time.perf_counter()
+    plan = plan_rebalance(eng.cache)
+    stats = migrate_execute(plan, eng.cache, chunk_blocks=8)
+    dt = time.perf_counter() - t0
+    return dict(wall_s=dt, moved=stats["moved_blocks"],
+                bytes_ici=eng.engine.stats.bytes_psm,
+                bytes_compute=eng.engine.stats.bytes_baseline)
+
+
+def run() -> List[Dict]:
+    cfg = get_config("llama3.2-3b").reduced()
+    model = build_model(cfg)
+    params, _ = split_params(model.init_params(jax.random.key(0)))
+    rows = []
+    for name, fn in [("forkbench", _forkbench), ("buz-init", _buz_init),
+                     ("migrate", _migrate)]:
+        off = fn(cfg, params, False)
+        on = fn(cfg, params, True)
+        rows.append(dict(app=name, rowclone="off", **off))
+        rows.append(dict(app=name, rowclone="on", **on))
+        rows.append(dict(app=name, rowclone="speedup",
+                         wall_s=off["wall_s"] / max(on["wall_s"], 1e-9)))
+    off = _checkpoint_blocking()
+    on = _checkpoint(True)
+    rows.append(dict(app="checkpoint", rowclone="off", **off))
+    rows.append(dict(app="checkpoint", rowclone="on", **on))
+    rows.append(dict(app="checkpoint", rowclone="speedup",
+                     wall_s=off["wall_s"] / max(on["wall_s"], 1e-9)))
+    return rows

@@ -1,0 +1,113 @@
+"""Regenerate the generated tables inside EXPERIMENTS.md from the dry-run
+JSONL artifacts (results/dryrun.jsonl = paper-faithful baseline,
+results/dryrun_v2.jsonl = optimized).  Hand-written narrative outside the
+markers is preserved.
+
+    PYTHONPATH=src:. python -m benchmarks.gen_experiments
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+EXP = os.path.join(ROOT, "EXPERIMENTS.md")
+
+
+def load(path):
+    best = {}
+    p = os.path.join(ROOT, "results", path)
+    if not os.path.exists(p):
+        return best
+    with open(p) as f:
+        for line in f:
+            r = json.loads(line)
+            best[(r["arch"], r["shape"], r["mesh"])] = r
+    return best
+
+
+def fmt_row(r):
+    if r["status"] == "skip":
+        return (f"| {r['arch']} | {r['shape']} | — | — | — | skip | — | — | "
+                f"{r.get('reason','')[:45]} |")
+    if r["status"] != "ok":
+        return (f"| {r['arch']} | {r['shape']} | — | — | — | ERROR | — | — | "
+                f"{r.get('error','')[:45]} |")
+    return ("| {arch} | {shape} | {tc:.0f} | {tm:.0f} | {tl:.0f} | {dom} | "
+            "{uf:.2f} | {rf:.3f} | temp {tg:.1f} GiB |").format(
+        arch=r["arch"], shape=r["shape"],
+        tc=r["t_compute_s"] * 1e3, tm=r["t_memory_s"] * 1e3,
+        tl=r["t_collective_s"] * 1e3, dom=r["dominant"],
+        uf=r["useful_flop_ratio"], rf=r["roofline_fraction"],
+        tg=r["memory"]["temp_size_in_bytes"] / 2 ** 30)
+
+
+HEADER = ("| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | "
+          "dominant | useful | roofline | notes |\n"
+          "|---|---|---|---|---|---|---|---|---|")
+
+
+def table_for(rows, mesh):
+    lines = [HEADER]
+    for key in sorted(rows):
+        if key[2] != mesh:
+            continue
+        lines.append(fmt_row(rows[key]))
+    return "\n".join(lines)
+
+
+def dryrun_summary(base, opt):
+    merged = dict(base)
+    merged.update(opt)
+    n_ok = sum(1 for r in merged.values() if r["status"] == "ok")
+    n_skip = sum(1 for r in merged.values() if r["status"] == "skip")
+    n_err = sum(1 for r in merged.values() if r["status"] == "error")
+    fits = [r for r in merged.values() if r["status"] == "ok" and
+            r["memory"]["temp_size_in_bytes"] < 14 * 2 ** 30]
+    lines = [
+        f"* cells: **{n_ok} compile OK**, {n_skip} documented skips, "
+        f"{n_err} errors",
+        f"* per-device temp under 14 GiB (v5e HBM 16 GiB minus weights): "
+        f"{len(fits)}/{n_ok}",
+        "* multi-pod (2×16×16): every non-skip cell lowers + compiles — the "
+        "`pod` axis shards (batch for train, pool blocks for decode)",
+    ]
+    over = [(k, r["memory"]["temp_size_in_bytes"] / 2 ** 30)
+            for k, r in merged.items() if r["status"] == "ok" and
+            r["memory"]["temp_size_in_bytes"] >= 14 * 2 ** 30]
+    if over:
+        over.sort(key=lambda kv: -kv[1])
+        lines.append("* cells above 14 GiB temp (CPU-backend buffer "
+                     "assignment overestimates; mitigations in §Perf): " +
+                     ", ".join(f"{a}/{s}@{m} {g:.0f}GiB"
+                               for (a, s, m), g in over[:6]))
+    return "\n".join(lines)
+
+
+def replace_section(text, marker, content):
+    pat = re.compile(rf"(<!-- {marker}:begin -->).*?(<!-- {marker}:end -->)",
+                     re.S)
+    return pat.sub(rf"\1\n{content}\n\2", text)
+
+
+def main():
+    base = load("dryrun.jsonl")
+    opt = load("dryrun_v2.jsonl")
+    merged = dict(base)
+    merged.update(opt)
+    text = open(EXP).read()
+    text = replace_section(text, "dryrun-summary", dryrun_summary(base, opt))
+    text = replace_section(text, "roofline-baseline",
+                           table_for(base, "16x16"))
+    text = replace_section(text, "roofline-optimized",
+                           table_for(merged, "16x16"))
+    text = replace_section(text, "multipod-optimized",
+                           table_for(merged, "2x16x16"))
+    open(EXP, "w").write(text)
+    print("EXPERIMENTS.md regenerated "
+          f"(baseline cells: {len(base)}, optimized: {len(opt)})")
+
+
+if __name__ == "__main__":
+    main()

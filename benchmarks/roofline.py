@@ -1,0 +1,56 @@
+"""§Roofline table generator — reads the dry-run JSONL artifacts."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load(path: str = None) -> List[Dict]:
+    """Baseline rows overlaid with the optimized (v2) rows when present."""
+    best: Dict = {}
+    paths = [path] if path else [
+        os.path.join(RESULTS_DIR, "dryrun.jsonl"),
+        os.path.join(RESULTS_DIR, "dryrun_v2.jsonl"),
+    ]
+    for p in paths:
+        if not p or not os.path.exists(p):
+            continue
+        with open(p) as f:
+            for line in f:
+                r = json.loads(line)
+                best[(r["arch"], r["shape"], r["mesh"])] = r
+    return sorted(best.values(), key=lambda r: (r["arch"], r["shape"],
+                                                r["mesh"]))
+
+
+def table(rows: List[Dict], mesh: str = "16x16") -> List[Dict]:
+    out = []
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skip":
+            out.append(dict(arch=r["arch"], shape=r["shape"], status="skip",
+                            reason=r.get("reason", "")))
+            continue
+        if r["status"] != "ok":
+            out.append(dict(arch=r["arch"], shape=r["shape"],
+                            status="error", reason=r.get("error", "")[:80]))
+            continue
+        out.append(dict(
+            arch=r["arch"], shape=r["shape"], status="ok",
+            t_compute_ms=r["t_compute_s"] * 1e3,
+            t_memory_ms=r["t_memory_s"] * 1e3,
+            t_collective_ms=r["t_collective_s"] * 1e3,
+            dominant=r["dominant"],
+            useful_flops=r["useful_flop_ratio"],
+            roofline_frac=r["roofline_fraction"],
+            temp_gib=r["memory"]["temp_size_in_bytes"] / 2 ** 30,
+        ))
+    return out
+
+
+def run() -> List[Dict]:
+    return table(load())

@@ -1,0 +1,71 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows plus the full per-benchmark tables.
+import argparse
+import csv
+import io
+import sys
+
+
+def _emit(rows, title):
+    print(f"\n## {title}")
+    if not rows:
+        print("(no rows)")
+        return
+    keys = sorted({k for r in rows for k in r})
+    w = csv.DictWriter(sys.stdout, fieldnames=keys)
+    w.writeheader()
+    for r in rows:
+        w.writerow({k: (f"{v:.4g}" if isinstance(v, float) else v)
+                    for k, v in r.items()})
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="table1|fig2|fig34|roofline")
+    args = ap.parse_args()
+
+    # summary CSV (name,us_per_call,derived) required by the harness contract
+    summary = []
+
+    if args.only in (None, "table1"):
+        from benchmarks import table1_mechanisms
+        rows = table1_mechanisms.run()
+        _emit(rows, "Table 1 analogue — copy/zero mechanism latency+energy")
+        for r in rows:
+            summary.append((f"table1/{r['mech']}", r["measured_us"],
+                            r["derived_us"]))
+
+    if args.only in (None, "fig2"):
+        from benchmarks import fig2_applications
+        rows = fig2_applications.run()
+        _emit(rows, "Fig 2 analogue — application-level speedups")
+        for r in rows:
+            if r.get("rowclone") == "speedup":
+                summary.append((f"fig2/{r['app']}", r["wall_s"] * 1e6,
+                                r["wall_s"]))
+
+    if args.only in (None, "fig34"):
+        from benchmarks import fig34_multitenant
+        rows = fig34_multitenant.run()
+        _emit(rows, "Fig 3/4 analogue — multi-tenant weighted speedup")
+        for r in rows:
+            summary.append((f"fig34/{r['mix']}", 0.0, r["improvement"]))
+
+    if args.only in (None, "roofline"):
+        from benchmarks import roofline
+        rows = roofline.run()
+        _emit(rows, "Roofline terms per (arch x shape), single-pod 16x16")
+        for r in rows:
+            if r.get("status") == "ok":
+                summary.append((f"roofline/{r['arch']}/{r['shape']}",
+                                r["t_compute_ms"] * 1e3,
+                                r["roofline_frac"]))
+
+    print("\n## summary (name,us_per_call,derived)")
+    for name, us, derived in summary:
+        print(f"{name},{us:.3f},{derived:.6g}")
+
+
+if __name__ == "__main__":
+    main()

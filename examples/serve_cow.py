@@ -1,0 +1,89 @@
+"""Serving example: batched requests + parallel sampling via CoW fork.
+
+Demonstrates the full RowClone serving story: admission (prefill staged into
+the pool with FPM copies), fork-heavy parallel sampling (CoW shares, lazy
+zeros), decode over the shared paged pool, and the engine stats that mirror
+the paper's Table 1 / Fig 2 quantities.
+
+    PYTHONPATH=src python examples/serve_cow.py --arch yi-6b --requests 4
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.serve import ServingEngine
+from repro.models import build_model, split_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--samples-per-request", type=int, default=3)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    model = build_model(cfg)
+    params, _ = split_params(model.init_params(jax.random.key(0)))
+    eng = ServingEngine(cfg, params,
+                        max_seqs=args.requests * (args.samples_per_request
+                                                  + 1) + 2)
+    rng = np.random.default_rng(0)
+
+    print(f"[serve] admitting {args.requests} prompts "
+          f"({args.prompt_len} tokens each)")
+    parents = []
+    for _ in range(args.requests):
+        p = rng.integers(2, cfg.vocab_size,
+                         size=args.prompt_len).astype(np.int32)
+        parents.append(eng.add_request(p))
+
+    print(f"[serve] forking {args.samples_per_request} samples per prompt "
+          f"(CoW: zero bytes move)")
+    for sid in parents:
+        eng.fork(sid, args.samples_per_request)
+    a = eng.engine.alloc.stats
+    print(f"         cow_shares={a.cow_shares} "
+          f"fpm_copies={eng.engine.stats.fpm_copies}")
+
+    # temperature sampling so forks diverge
+    def sampler(logits):
+        z = logits / 1.0
+        z = z - z.max()
+        p = np.exp(z) / np.exp(z).sum()
+        return int(rng.choice(len(p), p=p))
+
+    t0 = time.time()
+    for step in range(args.new_tokens):
+        eng.decode_round(sample_fn=sampler)
+    dt = time.time() - t0
+    n = len(eng.cache.seqs)
+    print(f"[serve] generated {args.new_tokens} tokens x {n} sequences in "
+          f"{dt:.1f}s ({args.new_tokens * n / dt:.1f} tok/s on CPU)")
+
+    s = eng.engine.stats
+    a = eng.engine.alloc.stats
+    print("\n=== RowClone effect (paper Fig.2 quantities) ===")
+    print(f"  CoW shares (fork, 0 bytes):        {a.cow_shares}")
+    print(f"  FPM copies (divergence CoW):        {s.fpm_copies}")
+    print(f"  FPM same-slab placement hits:       {a.fpm_eligible}")
+    print(f"  lazy-zeroed blocks (ZI):            {s.zero_lazy}")
+    print(f"  bytes moved through compute:        {s.bytes_baseline}")
+    print(f"  bytes moved by DMA (FPM):           {s.bytes_fpm}")
+    print(f"  bytes avoided entirely (ZI+alias):  {s.bytes_avoided}")
+    sample = parents[0]
+    print(f"\nfirst prompt's sampled continuations (token ids):")
+    kids = [sid for sid in eng.cache.seqs
+            if eng.tokens[sid][:args.prompt_len] ==
+            eng.tokens[sample][:args.prompt_len]]
+    for sid in kids[:4]:
+        print(f"  seq {sid}: {eng.tokens[sid][args.prompt_len:][:12]}...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""End-to-end training driver: ~100M-param llama-family model, a few hundred
+steps on the synthetic pipeline, with checkpointing, straggler ledger, and
+one injected failure + automatic restart.
+
+    PYTHONPATH=src python examples/train_e2e.py --steps 300
+
+(Reduce --steps for a quick look; the model is sized ~100M params so a CPU
+step takes a few seconds — the same driver scales to the production mesh
+via launch/train.py + launch/mesh.py.)
+"""
+import argparse
+import dataclasses
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.registry import _REGISTRY
+from repro.launch.train import train_loop
+from repro.runtime import NodeFailure
+
+
+def register_100m():
+    """A ~100M llama-family config (registered once)."""
+    if "llama-100m" in _REGISTRY:
+        return
+    base = get_config("llama3.2-3b")
+    cfg = dataclasses.replace(
+        base, arch_id="llama-100m", num_layers=8, d_model=640, num_heads=10,
+        num_kv_heads=2, head_dim=64, d_ff=1792, vocab_size=32000,
+        dtype="float32", tie_embeddings=True)
+    _REGISTRY["llama-100m"] = cfg
+    n = cfg.param_count()
+    print(f"[e2e] registered llama-100m: {n/1e6:.1f}M params")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=512)
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a node failure at this step to demo restart")
+    args = ap.parse_args()
+
+    register_100m()
+    ckpt_dir = tempfile.mkdtemp(prefix="rowclone_e2e_")
+    print(f"[e2e] checkpoints -> {ckpt_dir}")
+
+    fail_at = args.fail_at
+    if fail_at is None and args.steps >= 100:
+        fail_at = args.steps // 2  # demo the restart path by default
+
+    try:
+        state, losses = train_loop(
+            "llama-100m", steps=args.steps, batch=args.batch,
+            seq_len=args.seq_len, smoke=False, ckpt_dir=ckpt_dir,
+            checkpoint_every=50, log_every=10, inject_failure_at=fail_at,
+            learning_rate=1e-3)
+    except NodeFailure as e:
+        print(f"[e2e] {e} — restarting from checkpoint (fault-tolerance "
+              f"path)")
+        state, losses = train_loop(
+            "llama-100m", steps=args.steps, batch=args.batch,
+            seq_len=args.seq_len, smoke=False, ckpt_dir=ckpt_dir,
+            checkpoint_every=50, log_every=10, learning_rate=1e-3)
+    print(f"[e2e] done: loss {losses[0]:.3f} -> {losses[-1]:.3f} over "
+          f"{len(losses)} steps (resumed runs replay identical data)")
+
+
+if __name__ == "__main__":
+    main()

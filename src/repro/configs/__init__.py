@@ -1,0 +1,20 @@
+from repro.configs.base import (
+    ModelConfig,
+    RowCloneConfig,
+    ShapeConfig,
+    SHAPES,
+    TrainConfig,
+    shape_applicable,
+)
+from repro.configs.registry import get_config, list_archs
+
+__all__ = [
+    "ModelConfig",
+    "RowCloneConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "TrainConfig",
+    "shape_applicable",
+    "get_config",
+    "list_archs",
+]

@@ -1,0 +1,256 @@
+"""Configuration system: model architectures, input shapes, and run settings.
+
+Every assigned architecture gets one module in this package defining a
+``ModelConfig`` with the exact published hyper-parameters, registered under
+its public arch id (e.g. ``qwen2-72b``).  Reduced smoke-test variants are
+derived mechanically via :func:`ModelConfig.reduced`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+VOCAB_PAD_MULTIPLE = 256  # pad vocab so embedding/vocab axes shard over 16-way TP
+
+
+def pad_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters (single source of truth).
+
+    ``family`` is one of: dense | moe | ssm | hybrid | encdec | vlm.
+    """
+
+    arch_id: str
+    family: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # --- attention details ---
+    qkv_bias: bool = False
+    rope_theta: float = 500000.0
+
+    # --- MoE ---
+    num_experts: int = 0
+    top_k: int = 0
+    num_shared_experts: int = 0          # deepseek-style shared experts
+    moe_d_ff: int = 0                    # per-expert hidden size (0 => d_ff)
+
+    # --- SSM (mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_heads: int = 0                   # number of SSD heads
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 256                 # SSD chunk length
+
+    # --- hybrid (zamba2) ---
+    shared_attn_every: int = 0           # shared attention block every N core layers
+
+    # --- encoder/decoder (seamless-m4t) ---
+    encoder_layers: int = 0              # 0 => decoder-only
+    src_frames_ratio: int = 4            # src_len = seq_len // ratio (audio stub)
+
+    # --- vlm (paligemma) ---
+    vision_tokens: int = 0               # prefix patch embeddings (stub frontend)
+
+    dtype: str = "bfloat16"
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+
+    # ------------------------------------------------------------------
+    @property
+    def padded_vocab(self) -> int:
+        return pad_to(self.vocab_size, VOCAB_PAD_MULTIPLE)
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def has_subquadratic_path(self) -> bool:
+        """True if long-context decode (long_500k) is runnable: the sequence-
+        length-dependent state is O(1) (SSM) or attention is confined to a
+        small number of shared blocks (hybrid)."""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def num_attn_layers(self) -> int:
+        """Layers that own a KV cache."""
+        if self.family == "ssm":
+            return 0
+        if self.family == "hybrid":
+            return self.num_layers // max(self.shared_attn_every, 1)
+        if self.family == "encdec":
+            return self.num_layers  # decoder self-attn layers
+        return self.num_layers
+
+    # ------------------------------------------------------------------
+    def reduced(self) -> "ModelConfig":
+        """Tiny same-family variant for CPU smoke tests."""
+        return dataclasses.replace(
+            self,
+            arch_id=self.arch_id + "-smoke",
+            num_layers=min(self.num_layers, 4 if self.shared_attn_every == 0 else 4),
+            d_model=128,
+            num_heads=4,
+            num_kv_heads=min(self.num_kv_heads, 4) if self.num_kv_heads > 1 else 1,
+            head_dim=32,
+            d_ff=256,
+            moe_d_ff=64 if self.moe_d_ff else 0,
+            vocab_size=512,
+            num_experts=min(self.num_experts, 4),
+            top_k=min(self.top_k, 2),
+            num_shared_experts=min(self.num_shared_experts, 1),
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            # keep ssm_heads * ssm_head_dim == ssm_expand * d_model
+            ssm_heads=8 if self.ssm_heads else 0,
+            ssm_head_dim=32 if self.ssm_heads else 64,
+            ssm_chunk=32,
+            shared_attn_every=2 if self.shared_attn_every else 0,
+            encoder_layers=2 if self.encoder_layers else 0,
+            vision_tokens=16 if self.vision_tokens else 0,
+            dtype="float32",
+        )
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6ND model-FLOPs)."""
+        d, V = self.d_model, self.padded_vocab
+        n = V * d  # embedding
+        if not self.tie_embeddings:
+            n += V * d
+        if self.family == "ssm":
+            n += self.num_layers * _mamba2_layer_params(self)
+            n += self.num_layers * d  # norms
+            return n
+        if self.family == "hybrid":
+            n += self.num_layers * _mamba2_layer_params(self)
+            n += self.num_layers * d
+            n += _attn_block_params(self) + _mlp_params(self, self.d_ff)  # shared block
+            return n
+        per_layer = _attn_block_params(self)
+        if self.family == "moe":
+            e_ff = self.moe_d_ff or self.d_ff
+            per_layer += self.num_experts * 3 * d * e_ff
+            per_layer += self.num_shared_experts * 3 * d * e_ff
+            per_layer += d * self.num_experts  # router
+        else:
+            per_layer += _mlp_params(self, self.d_ff)
+        per_layer += 2 * d  # norms
+        n += self.num_layers * per_layer
+        if self.family == "encdec":
+            # encoder layers + decoder cross-attention
+            enc_per = _attn_block_params(self) + _mlp_params(self, self.d_ff) + 2 * d
+            n += self.encoder_layers * enc_per
+            n += self.num_layers * (_attn_block_params(self) + d)  # cross attn + norm
+        return n
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only top_k + shared experts)."""
+        if self.family != "moe":
+            return self.param_count()
+        d = self.d_model
+        e_ff = self.moe_d_ff or self.d_ff
+        inactive = self.num_layers * (self.num_experts - self.top_k) * 3 * d * e_ff
+        return self.param_count() - inactive
+
+
+def _mlp_params(cfg: ModelConfig, d_ff: int) -> int:
+    return 3 * cfg.d_model * d_ff  # SwiGLU: gate, up, down
+
+
+def _attn_block_params(cfg: ModelConfig) -> int:
+    d = cfg.d_model
+    n = d * cfg.q_dim + 2 * d * cfg.kv_dim + cfg.q_dim * d
+    if cfg.qkv_bias:
+        n += cfg.q_dim + 2 * cfg.kv_dim
+    return n
+
+
+def _mamba2_layer_params(cfg: ModelConfig) -> int:
+    d, di = cfg.d_model, cfg.ssm_d_inner
+    n_h, st = cfg.ssm_heads, cfg.ssm_state
+    n = d * (2 * di + 2 * st + n_h)      # in_proj -> [x, z, B, C, dt]
+    n += di * cfg.ssm_conv_width         # depthwise conv
+    n += 2 * n_h                         # A_log, D
+    n += di * d                          # out_proj
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned set; identical across LM-family archs)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """(runnable, reason).  long_500k only for sub-quadratic archs (DESIGN.md)."""
+    if shape.name == "long_500k" and not cfg.has_subquadratic_path:
+        return False, "pure full-attention arch: 500k context skipped per spec"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Run-level config (training hyper-parameters, rowclone settings)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class RowCloneConfig:
+    """Settings for the in-memory copy/init engine (the paper's technique)."""
+    enable_fpm: bool = True        # HBM-local DMA block copy
+    enable_psm: bool = True        # cross-shard pipelined transfer
+    enable_zi: bool = True         # lazy-zero + alias-copy (RowClone-ZI)
+    page_size: int = 64            # tokens per KV block ("row" granularity)
+    zero_blocks_per_slab: int = 1  # reserved zero rows per subarray (paper §3.1)
+    psm_chunk_blocks: int = 8      # pipelining depth for PSM transfers
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    grad_clip: float = 1.0
+    microbatches: int = 1          # gradient accumulation
+    remat_policy: str = "minimal"  # none | minimal | full
+    sharding: str = "fsdp"         # fsdp | tp  (see EXPERIMENTS.md §Perf)
+    grad_compress: bool = False    # int8 error-feedback DP all-reduce
+    seed: int = 0

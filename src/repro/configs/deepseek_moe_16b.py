@@ -1,0 +1,25 @@
+"""deepseek-moe-16b — fine-grained MoE: 2 shared + 64 routed, top-6.
+
+[arXiv:2401.06066; hf]  28L d_model=2048 16H (kv=16, i.e. MHA) d_ff=1408
+(per expert) vocab=102400, MoE 64e top-6.
+"""
+from repro.configs.base import ModelConfig
+from repro.configs.registry import register
+
+CONFIG = register(
+    ModelConfig(
+        arch_id="deepseek-moe-16b",
+        family="moe",
+        num_layers=28,
+        d_model=2048,
+        num_heads=16,
+        num_kv_heads=16,
+        head_dim=128,
+        d_ff=1408,
+        vocab_size=102400,
+        num_experts=64,
+        top_k=6,
+        num_shared_experts=2,
+        rope_theta=10000.0,
+    )
+)

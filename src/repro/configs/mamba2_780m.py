@@ -1,0 +1,26 @@
+"""mamba2-780m — attention-free SSD (state-space duality) stack.
+
+[arXiv:2405.21060; unverified]  48L d_model=1536 vocab=50280, ssm_state=128.
+d_inner = 2*1536 = 3072, 48 SSD heads of head_dim 64.
+"""
+from repro.configs.base import ModelConfig
+from repro.configs.registry import register
+
+CONFIG = register(
+    ModelConfig(
+        arch_id="mamba2-780m",
+        family="ssm",
+        num_layers=48,
+        d_model=1536,
+        num_heads=0,
+        num_kv_heads=0,
+        head_dim=0,
+        d_ff=0,
+        vocab_size=50280,
+        ssm_state=128,
+        ssm_heads=48,
+        ssm_head_dim=64,
+        ssm_expand=2,
+        tie_embeddings=True,
+    )
+)

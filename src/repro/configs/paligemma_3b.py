@@ -1,0 +1,26 @@
+"""paligemma-3b — VLM: SigLIP frontend (stub) + gemma decoder backbone.
+
+[arXiv:2407.07726; hf]  18L d_model=2048 8H (GQA kv=1, MQA) d_ff=16384
+vocab=257216.  Vision frontend is a STUB — input_specs() provides 256
+precomputed patch embeddings prepended to the text sequence with a
+bidirectional prefix-LM mask (PaliGemma's attention pattern).
+"""
+from repro.configs.base import ModelConfig
+from repro.configs.registry import register
+
+CONFIG = register(
+    ModelConfig(
+        arch_id="paligemma-3b",
+        family="vlm",
+        num_layers=18,
+        d_model=2048,
+        num_heads=8,
+        num_kv_heads=1,
+        head_dim=256,
+        d_ff=16384,
+        vocab_size=257216,
+        vision_tokens=256,
+        rope_theta=10000.0,
+        tie_embeddings=True,
+    )
+)

@@ -1,0 +1,46 @@
+"""Registry mapping public arch ids to ModelConfigs."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ModelConfig
+
+_REGISTRY: Dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    if cfg.arch_id in _REGISTRY:
+        raise ValueError(f"duplicate arch id {cfg.arch_id}")
+    _REGISTRY[cfg.arch_id] = cfg
+    return cfg
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    _ensure_loaded()
+    try:
+        return _REGISTRY[arch_id]
+    except KeyError:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; available: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def list_archs():
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+def _ensure_loaded() -> None:
+    # import side-effect registration
+    from repro.configs import (  # noqa: F401
+        zamba2_2p7b,
+        llama3p2_3b,
+        qwen2_72b,
+        yi_6b,
+        mistral_nemo_12b,
+        phi3p5_moe_42b,
+        deepseek_moe_16b,
+        mamba2_780m,
+        seamless_m4t_medium,
+        paligemma_3b,
+    )

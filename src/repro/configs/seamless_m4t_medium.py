@@ -1,0 +1,26 @@
+"""seamless-m4t-medium — encoder-decoder multimodal backbone.
+
+[arXiv:2308.11596; hf]  12L d_model=1024 16H (kv=16, MHA) d_ff=4096
+vocab=256206.  Enc-dec: 12 encoder + 12 decoder layers; the audio frontend
+is a STUB — input_specs() provides precomputed frame embeddings
+(src_len = seq_len // 4, emulating 4x-downsampled speech frames).
+"""
+from repro.configs.base import ModelConfig
+from repro.configs.registry import register
+
+CONFIG = register(
+    ModelConfig(
+        arch_id="seamless-m4t-medium",
+        family="encdec",
+        num_layers=12,
+        d_model=1024,
+        num_heads=16,
+        num_kv_heads=16,
+        head_dim=64,
+        d_ff=4096,
+        vocab_size=256206,
+        encoder_layers=12,
+        src_frames_ratio=4,
+        rope_theta=10000.0,
+    )
+)

@@ -1,0 +1,28 @@
+"""zamba2-2.7b — hybrid Mamba2 backbone + shared attention block.
+
+[arXiv:2411.15242; hf]  54L d_model=2560 32H (GQA kv=32) d_ff=10240
+vocab=32000, ssm_state=64.  The shared transformer (attn+MLP) block is
+invoked every 6 core mamba2 layers with shared weights (Zamba design).
+"""
+from repro.configs.base import ModelConfig
+from repro.configs.registry import register
+
+CONFIG = register(
+    ModelConfig(
+        arch_id="zamba2-2.7b",
+        family="hybrid",
+        num_layers=54,
+        d_model=2560,
+        num_heads=32,
+        num_kv_heads=32,
+        head_dim=80,
+        d_ff=10240,
+        vocab_size=32000,
+        ssm_state=64,
+        ssm_heads=80,          # d_inner 5120 / head_dim 64
+        ssm_head_dim=64,
+        ssm_expand=2,
+        shared_attn_every=6,
+        rope_theta=10000.0,
+    )
+)

@@ -1,0 +1,16 @@
+# The paper's primary contribution: the RowClone engine — in-memory bulk
+# copy (FPM/PSM), bulk init via reserved zero rows + lazy-zero (ZI), the
+# subarray-aware allocator, and the CoW paged KV cache built on them.
+from repro.core.allocator import AllocStats, OutOfBlocks, SubarrayAllocator
+from repro.core.cow_cache import PagedCoWCache, Sequence
+from repro.core.rowclone import EngineStats, RowCloneEngine
+
+__all__ = [
+    "AllocStats",
+    "OutOfBlocks",
+    "SubarrayAllocator",
+    "PagedCoWCache",
+    "Sequence",
+    "EngineStats",
+    "RowCloneEngine",
+]

@@ -1,0 +1,165 @@
+"""Copy-on-Write paged KV cache — the paper's killer app, as a serving engine.
+
+RowClone §3.1 CoW: the OS points both virtual pages at one physical page and
+copies only on the first write, placing the destination in the source's
+subarray so FPM applies.  The serving analogue: ``fork()`` of a sequence
+(parallel sampling, beam search, prefix sharing) shares KV blocks by
+refcount; the first *append* to a shared block triggers a block copy through
+the RowCloneEngine — FPM when the allocator kept the destination in the same
+slab, which it does by construction via ``alloc_near``.
+
+Bulk zeroing (§3.1 BuZ): fresh blocks are "zeroed" via the ZI lazy-zero bit
+(paged attention masks invalid slots, so zeroing is metadata-only — the
+clean-zero-insertion analogue).
+
+Host-side object; device arrays live in the engine's pools and the
+block-table/owner/base arrays this cache rebuilds incrementally.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.allocator import SubarrayAllocator
+from repro.core.rowclone import RowCloneEngine
+
+
+@dataclasses.dataclass
+class Sequence:
+    seq_id: int
+    length: int
+    blocks: List[int]          # pool block ids, in order
+    slab_home: int             # preferred slab ("subarray" affinity)
+
+
+class PagedCoWCache:
+    """Block-table manager with CoW fork over a RowCloneEngine."""
+
+    def __init__(self, engine: RowCloneEngine, page: int,
+                 max_blocks_per_seq: int, max_seqs: int):
+        self.engine = engine
+        self.alloc: SubarrayAllocator = engine.alloc
+        self.page = page
+        self.max_blocks_per_seq = max_blocks_per_seq
+        self.max_seqs = max_seqs
+        self.seqs: Dict[int, Sequence] = {}
+        self._next_id = 0
+        # device-visible tables (rebuilt lazily)
+        self._dirty = True
+        self._table = np.full((max_seqs, max_blocks_per_seq), -1, np.int32)
+        self._mask = np.zeros((self.alloc.num_blocks, max_seqs), np.int8)
+        self._base = np.zeros(self.alloc.num_blocks, np.int32)
+        self._slot_of: Dict[int, int] = {}      # seq_id -> table row
+        self._free_slots = list(range(max_seqs - 1, -1, -1))
+
+    # ------------------------------------------------------------------
+    def new_sequence(self, prompt_len: int = 0,
+                     prefer_slab: Optional[int] = None) -> int:
+        sid = self._next_id
+        self._next_id += 1
+        nblk = (prompt_len + self.page - 1) // self.page
+        if prefer_slab is None:
+            prefer_slab = sid % self.alloc.num_slabs
+        blocks = self.alloc.alloc(nblk, prefer_slab=prefer_slab, zeroed=False)
+        if blocks:
+            # fresh blocks logically zeroed via ZI (BuZ, metadata-only)
+            self.engine.meminit(blocks)
+        self.seqs[sid] = Sequence(sid, prompt_len, blocks, prefer_slab)
+        slot = self._free_slots.pop()
+        self._slot_of[sid] = slot
+        self._dirty = True
+        return sid
+
+    def fork(self, parent_id: int, n_children: int = 1) -> List[int]:
+        """CoW fork: children share every parent block (refcount bump — the
+        in-cache-copy: zero bytes move now)."""
+        parent = self.seqs[parent_id]
+        out = []
+        for _ in range(n_children):
+            sid = self._next_id
+            self._next_id += 1
+            self.alloc.share(parent.blocks)
+            self.seqs[sid] = Sequence(sid, parent.length,
+                                      list(parent.blocks),
+                                      parent.slab_home)
+            slot = self._free_slots.pop()
+            self._slot_of[sid] = slot
+            out.append(sid)
+        self._dirty = True
+        return out
+
+    def append_token(self, seq_id: int) -> Tuple[int, int]:
+        """Reserve the slot for one new token; performs CoW block split
+        and/or block allocation as needed.  Returns (block_id, offset)."""
+        seq = self.seqs[seq_id]
+        pos = seq.length
+        j = pos // self.page
+        off = pos % self.page
+        if j >= self.max_blocks_per_seq:
+            raise ValueError("sequence exceeds max_blocks_per_seq")
+        if j >= len(seq.blocks):
+            # new tail block — ZI-lazy-zeroed fresh block, FPM-local
+            nb = self.alloc.alloc(1, prefer_slab=seq.slab_home,
+                                  zeroed=False)[0]
+            self.engine.meminit([nb])
+            seq.blocks.append(nb)
+            self._dirty = True
+        else:
+            b = seq.blocks[j]
+            if self.alloc.is_shared(b):
+                # CoW write to a shared block: allocate in the SAME slab
+                # (subarray-aware placement) and copy via the engine — FPM.
+                nb = self.alloc.alloc_near(b)
+                self.engine.memcopy([(b, nb)])
+                self.alloc.free([b])
+                seq.blocks[j] = nb
+                self._dirty = True
+        seq.length = pos + 1
+        return seq.blocks[j], off
+
+    def free_sequence(self, seq_id: int) -> None:
+        seq = self.seqs.pop(seq_id)
+        self.alloc.free(seq.blocks)
+        self._free_slots.append(self._slot_of.pop(seq_id))
+        self._dirty = True
+
+    # ------------------------------------------------------------------
+    # device-visible views
+    # ------------------------------------------------------------------
+    def rebuild_tables(self) -> None:
+        self._table.fill(-1)
+        self._mask.fill(0)
+        self._base.fill(0)
+        for sid, seq in self.seqs.items():
+            slot = self._slot_of[sid]
+            for j, b in enumerate(seq.blocks):
+                self._table[slot, j] = b
+                # CoW-shared blocks simply set several share-mask columns —
+                # the slab-sweep attention serves every sharer from the one
+                # physical block (the in-memory dedup the paper's VM-clone
+                # application relies on).
+                self._mask[b, slot] = 1
+                self._base[b] = j * self.page
+        self._dirty = False
+
+    def device_tables(self):
+        if self._dirty:
+            self.rebuild_tables()
+        return (jnp.asarray(self._table), jnp.asarray(self._mask),
+                jnp.asarray(self._base))
+
+    def seq_lens(self) -> np.ndarray:
+        lens = np.zeros(self.max_seqs, np.int32)
+        for sid, seq in self.seqs.items():
+            lens[self._slot_of[sid]] = seq.length
+        return lens
+
+    def slot_of(self, seq_id: int) -> int:
+        return self._slot_of[seq_id]
+
+    # convenience for tests/benchmarks
+    def blocks_of(self, seq_id: int) -> List[int]:
+        return list(self.seqs[seq_id].blocks)

@@ -1,0 +1,103 @@
+"""PSM migration planner — RowClone's page-migration application (§3.2).
+
+Plans block moves between slabs (devices) for load-balancing / elastic
+scaling / defragmentation, batched by (src_slab, dst_slab) pair and issued
+in pipelined chunks through the engine's PSM path (ICI collectives — the
+DRAM internal-bus TRANSFER analogue, with the pipelining done by chunking).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.allocator import SubarrayAllocator
+from repro.core.cow_cache import PagedCoWCache
+from repro.core.rowclone import RowCloneEngine
+
+
+@dataclasses.dataclass
+class MigrationPlan:
+    moves: List[Tuple[int, int]]            # (src_block, dst_block)
+    pair_batches: Dict[Tuple[int, int], List[Tuple[int, int]]]
+    seq_updates: Dict[int, Dict[int, int]]  # seq_id -> {old_block: new_block}
+
+
+def plan_rebalance(cache: PagedCoWCache,
+                   target_load: Optional[np.ndarray] = None) -> MigrationPlan:
+    """Move blocks from overloaded slabs to underloaded ones.
+
+    Load = allocated blocks per slab.  Sequences keep their slab_home so the
+    planner only migrates *whole sequences* whose home slab is overloaded —
+    keeping the FPM locality invariant after migration.
+    """
+    alloc = cache.alloc
+    used = np.zeros(alloc.num_slabs, np.int64)
+    for seq in cache.seqs.values():
+        for b in seq.blocks:
+            used[alloc.slab_of(b)] += 1
+    if target_load is None:
+        target_load = np.full(alloc.num_slabs, used.mean())
+
+    overloaded = [s for s in range(alloc.num_slabs)
+                  if used[s] > target_load[s] + 1]
+
+    moves: List[Tuple[int, int]] = []
+    seq_updates: Dict[int, Dict[int, int]] = {}
+    for s_over in overloaded:
+        # pick sequences homed on the overloaded slab, smallest first
+        victims = sorted((q for q in cache.seqs.values()
+                          if q.slab_home == s_over and
+                          not any(alloc.is_shared(b) for b in q.blocks)),
+                         key=lambda q: len(q.blocks))
+        for seq in victims:
+            if used[s_over] <= target_load[s_over] + 1:
+                break
+            need = len(seq.blocks)
+            # re-pick the least-loaded destination with room, every move
+            candidates = [s for s in range(alloc.num_slabs)
+                          if s != s_over and used[s] + need <=
+                          target_load[s] + 1 and
+                          alloc.free_in_slab(s) >= need]
+            if not candidates:
+                break
+            dst = min(candidates, key=lambda s: used[s])
+            new_blocks = alloc.alloc(need, prefer_slab=dst)
+            upd = {}
+            for old, new in zip(seq.blocks, new_blocks):
+                moves.append((old, new))
+                upd[old] = new
+            seq_updates[seq.seq_id] = upd
+            used[s_over] -= need
+            used[dst] += need
+
+    batches: Dict[Tuple[int, int], List[Tuple[int, int]]] = {}
+    for s, d in moves:
+        key = (alloc.slab_of(s), alloc.slab_of(d))
+        batches.setdefault(key, []).append((s, d))
+    return MigrationPlan(moves, batches, seq_updates)
+
+
+def execute(plan: MigrationPlan, cache: PagedCoWCache,
+            chunk_blocks: int = 8) -> Dict[str, int]:
+    """Issue the plan through the engine (PSM), pipelined in chunks, then
+    commit table updates and free the old blocks.  The commit is a single
+    metadata flip per sequence — the paper's MC-serialized command
+    semantics: readers never observe a half-migrated sequence."""
+    eng: RowCloneEngine = cache.engine
+    alloc = cache.alloc
+    issued = 0
+    for pair, pairs in plan.pair_batches.items():
+        for i in range(0, len(pairs), chunk_blocks):
+            eng.memcopy(pairs[i: i + chunk_blocks])
+            issued += len(pairs[i: i + chunk_blocks])
+    # commit: swap ids in sequence tables, free sources
+    for sid, upd in plan.seq_updates.items():
+        seq = cache.seqs[sid]
+        seq.blocks = [upd.get(b, b) for b in seq.blocks]
+        alloc.free(list(upd.keys()))
+        seq.slab_home = alloc.slab_of(seq.blocks[0]) if seq.blocks \
+            else seq.slab_home
+    cache._dirty = True
+    return {"moved_blocks": issued, "psm": eng.stats.psm_copies}

@@ -1,0 +1,263 @@
+"""RowCloneEngine — the ``memcopy``/``meminit`` "ISA" and its dispatcher.
+
+Paper §2.3: software issues ``memcopy``/``meminit``; the microarchitecture
+decides per request whether FPM, PSM, or the ordinary path applies, and the
+MC serializes the commands.  Here:
+
+* ``memcopy(pairs)``  — partitions (src, dst) block pairs by placement:
+    - ``alias``  : dst unwritten + ZI enabled → refcount bump only
+                   (in-cache copy: zero bytes move)
+    - ``fpm``    : same slab → per-slab DMA copy kernel under shard_map
+    - ``psm``    : cross-slab → collective transfer (ICI path)
+    - ``baseline``: RowClone disabled → copy through the compute pipeline
+* ``meminit(ids)``    — ZI lazy-zero bit when possible, else the zero-row
+                        DMA broadcast kernel.
+
+The engine owns the (possibly sharded) pool arrays and mirrors the
+allocator's placement metadata.  All jit'd data-plane calls use fixed-length
+id lists padded with -1 so shapes stay static.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.allocator import SubarrayAllocator
+from repro.kernels import ops as kops
+from repro.models.paged import pool_shard_axes, pool_spec
+
+
+@dataclasses.dataclass
+class EngineStats:
+    fpm_copies: int = 0
+    psm_copies: int = 0
+    alias_copies: int = 0
+    baseline_copies: int = 0
+    zero_lazy: int = 0
+    zero_materialized: int = 0
+    bytes_fpm: int = 0
+    bytes_psm: int = 0
+    bytes_baseline: int = 0
+    bytes_avoided: int = 0      # alias + lazy zero
+
+
+class RowCloneEngine:
+    """Owns block pools + allocator; dispatches copy/init requests.
+
+    ``pools`` is a dict name -> jnp array (nblk, ...) — e.g. {"k": k_pools,
+    "v": v_pools} sharing one allocator (paired pools: a request applies to
+    every pool, like K and V pages of one KV block).
+    """
+
+    def __init__(self, pools: Dict[str, jnp.ndarray],
+                 allocator: SubarrayAllocator,
+                 mesh: Optional[Mesh] = None,
+                 enable_fpm: bool = True, enable_psm: bool = True,
+                 enable_zi: bool = True, max_requests: int = 256,
+                 block_axis: int = 0):
+        """``block_axis``: which pool axis indexes blocks.  0 = flat pools
+        (nblk, ...); 1 = layer-stacked serving pools (L, nblk, ...) where a
+        logical block is L physical pages moved together (L independent
+        DMAs per request on TPU)."""
+        self.pools = dict(pools)
+        self.alloc = allocator
+        self.mesh = mesh
+        self.enable_fpm = enable_fpm
+        self.enable_psm = enable_psm
+        self.enable_zi = enable_zi
+        self.max_requests = max_requests
+        self.block_axis = block_axis
+        self.stats = EngineStats()
+        nblk = next(iter(pools.values())).shape[block_axis]
+        assert nblk == allocator.num_blocks
+
+    # ------------------------------------------------------------------
+    def _block_bytes(self) -> int:
+        total = 0
+        for p in self.pools.values():
+            shape = list(p.shape)
+            shape.pop(self.block_axis)
+            total += int(np.prod(shape)) * p.dtype.itemsize
+        return total
+
+    def _pad(self, pairs: Sequence[Tuple[int, int]]) -> np.ndarray:
+        m = self.max_requests
+        arr = np.full((m, 2), -1, np.int32)
+        if pairs:
+            a = np.asarray(pairs, np.int32)[:m]
+            arr[: len(a)] = a
+        return arr
+
+    # ------------------------------------------------------------------
+    # memcopy
+    # ------------------------------------------------------------------
+    def memcopy(self, pairs: Sequence[Tuple[int, int]],
+                dst_is_fresh: bool = False) -> Dict[str, int]:
+        """Copy block src -> dst for each pair.  Returns dispatch counts.
+
+        ``dst_is_fresh``: destinations have never been written (e.g. CoW
+        targets) — with ZI the engine may satisfy zero-source copies by
+        aliasing at the cache layer instead; that path lives in
+        cow_cache.fork() and never reaches here.
+        """
+        fpm, psm, baseline, written = [], [], [], []
+        for s, d in pairs:
+            # ZI "in-cache copy" fast path: copying a lazily-zero block is a
+            # metadata move — mark dst zero, move no bytes.
+            if self.enable_zi and self.alloc.is_zero[s]:
+                self.alloc.mark_zero([d])
+                self.stats.alias_copies += 1
+                self.stats.bytes_avoided += self._block_bytes()
+                continue
+            written.append(d)
+            if not self.enable_fpm:
+                baseline.append((s, d))
+            elif self.alloc.slab_of(s) == self.alloc.slab_of(d):
+                fpm.append((s, d))
+            elif self.enable_psm:
+                psm.append((s, d))
+            else:
+                baseline.append((s, d))
+        if fpm:
+            self._fpm_copy(fpm)
+        if psm:
+            self._psm_copy(psm)
+        if baseline:
+            self._baseline_copy(baseline)
+        self.alloc.mark_written(written)
+        return {"fpm": len(fpm), "psm": len(psm), "baseline": len(baseline)}
+
+    # ------------------------------------------------------------------
+    def _fpm_copy(self, pairs: List[Tuple[int, int]]) -> None:
+        """Same-slab copies: per-slab DMA kernel.  Under a mesh the id lists
+        are grouped per slab and the kernel runs inside shard_map with local
+        ids; on one device it runs directly."""
+        self.stats.fpm_copies += len(pairs)
+        self.stats.bytes_fpm += len(pairs) * self._block_bytes()
+        if self.mesh is None or int(np.prod(self.mesh.devices.shape)) == 1:
+            ids = jnp.asarray(self._pad(pairs))
+            for name in self.pools:
+                if self.block_axis == 1:
+                    self.pools[name] = _fpm_axis1_jit(self.pools[name], ids)
+                else:
+                    self.pools[name] = kops.fpm_copy(self.pools[name], ids)
+            return
+        n_slabs = self.alloc.num_slabs
+        per_slab = np.full((n_slabs, self.max_requests, 2), -1, np.int32)
+        fill = np.zeros(n_slabs, np.int32)
+        ss = self.alloc.slab_size
+        for s, d in pairs:
+            sl = self.alloc.slab_of(s)
+            i = fill[sl]
+            if i >= self.max_requests:
+                raise ValueError("request list overflow; raise max_requests")
+            per_slab[sl, i] = (s % ss, d % ss)   # slab-local ids
+            fill[sl] += 1
+        ids = jnp.asarray(per_slab.reshape(n_slabs * self.max_requests, 2))
+        pspec = pool_spec(self.mesh)
+        idspec = pool_spec(self.mesh)
+
+        def run(pool_slab, ids_slab):
+            return kops.fpm_copy(pool_slab, ids_slab)
+
+        mapped = jax.shard_map(run, mesh=self.mesh,
+                               in_specs=(pspec, idspec), out_specs=pspec,
+                               check_vma=False)
+        for name in self.pools:
+            self.pools[name] = mapped(self.pools[name], ids)
+
+    # ------------------------------------------------------------------
+    def _psm_copy(self, pairs: List[Tuple[int, int]]) -> None:
+        """Cross-slab transfer over the interconnect (DRAM internal bus →
+        ICI).  Expressed as a global gather/scatter; XLA lowers the
+        cross-shard movement to collective-permutes — the pipelined serial
+        path — without any host round-trip."""
+        self.stats.psm_copies += len(pairs)
+        self.stats.bytes_psm += len(pairs) * self._block_bytes()
+        ids = jnp.asarray(self._pad(pairs))
+        fn = _fpm_axis1_jit if self.block_axis == 1 else _psm_jit
+        for name in self.pools:
+            self.pools[name] = fn(self.pools[name], ids)
+
+    def _baseline_copy(self, pairs: List[Tuple[int, int]]) -> None:
+        self.stats.baseline_copies += len(pairs)
+        self.stats.bytes_baseline += len(pairs) * self._block_bytes()
+        ids = jnp.asarray(self._pad(pairs))
+        for name in self.pools:
+            if self.block_axis == 1:
+                self.pools[name] = _baseline_axis1_jit(self.pools[name], ids)
+            else:
+                self.pools[name] = kops.baseline_copy(self.pools[name], ids)
+
+    # ------------------------------------------------------------------
+    # meminit
+    # ------------------------------------------------------------------
+    def meminit(self, ids: Sequence[int], lazy: Optional[bool] = None) -> int:
+        """Zero blocks.  Returns number physically zeroed (0 with ZI)."""
+        ids = [int(b) for b in ids]
+        if lazy is None:
+            lazy = self.enable_zi
+        if lazy:
+            self.alloc.mark_zero(ids)
+            self.stats.zero_lazy += len(ids)
+            self.stats.bytes_avoided += len(ids) * self._block_bytes()
+            return 0
+        self.materialize_zeros(ids)
+        return len(ids)
+
+    def materialize_zeros(self, ids: Sequence[int]) -> None:
+        """BuZ through the reserved zero row (FPM copy from zero block)."""
+        ids = [int(b) for b in ids]
+        if not ids:
+            return
+        self.stats.zero_materialized += len(ids)
+        m = self.max_requests
+        arr = np.full((m,), -1, np.int32)
+        arr[: len(ids)] = np.asarray(ids[:m], np.int32)
+        idv = jnp.asarray(arr)
+        for name in self.pools:
+            pool = self.pools[name]
+            if self.block_axis == 1:
+                self.pools[name] = _zero_axis1_jit(pool, idv)
+            else:
+                zero_block = jnp.zeros((1,) + pool.shape[1:], pool.dtype)
+                self.pools[name] = kops.meminit_zero(pool, zero_block, idv)
+        self.alloc.mark_written(ids)  # physically zero: ordinary data now
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _psm_jit(pool, ids):
+    rows = pool[jnp.clip(ids[:, 0], 0, pool.shape[0] - 1)]
+    safe_dst = jnp.where(ids[:, 1] >= 0, ids[:, 1], pool.shape[0])
+    return pool.at[safe_dst].set(rows, mode="drop")
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _fpm_axis1_jit(pool, ids):
+    """Layer-stacked pools (L, nblk, ...): one gather/scatter over axis 1 —
+    lowers to L independent local DMAs on TPU (no compute)."""
+    rows = pool[:, jnp.clip(ids[:, 0], 0, pool.shape[1] - 1)]
+    safe_dst = jnp.where(ids[:, 1] >= 0, ids[:, 1], pool.shape[1])
+    return pool.at[:, safe_dst].set(rows, mode="drop")
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _baseline_axis1_jit(pool, ids):
+    rows = pool[:, jnp.clip(ids[:, 0], 0, pool.shape[1] - 1)]
+    rows = (rows.astype(jnp.float32) * 1.0).astype(pool.dtype)
+    safe_dst = jnp.where(ids[:, 1] >= 0, ids[:, 1], pool.shape[1])
+    return pool.at[:, safe_dst].set(rows, mode="drop")
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _zero_axis1_jit(pool, ids):
+    safe = jnp.where(ids >= 0, ids, pool.shape[1])
+    fill = jnp.zeros((pool.shape[0], ids.shape[0]) + pool.shape[2:],
+                     pool.dtype)
+    return pool.at[:, safe].set(fill, mode="drop")

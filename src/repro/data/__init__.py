@@ -1,0 +1,3 @@
+from repro.data.pipeline import (
+    DataConfig, batch_logical_axes, batch_specs, data_iterator, make_batch,
+)

@@ -1,0 +1,112 @@
+"""Flash attention kernel for training / prefill (causal + prefix-LM).
+
+Grid = (batch, q_head, q_blocks, kv_blocks); the kv_blocks axis is innermost
+so flash (m, l, acc) accumulators live in VMEM scratch across it.  GQA is
+handled in the index map (q head h reads kv head h // group).  Fully-masked
+(q_blk, kv_blk) tiles in the causal region are skipped via ``pl.when`` —
+upper-triangle tiles cost a predicate, not a matmul.
+
+Default tiles: bq = bk = 512, D ≤ 256 → q/k/v tiles ≤ 512×256×4B = 512 KiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  bq, bk, D, causal, prefix_len, n_k):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q0 = qi * bq
+    k0 = ki * bk
+    # causal tile skip: tile fully masked iff q_end < k_start and no prefix
+    if causal:
+        run = q0 + bq - 1 >= k0
+        if prefix_len:
+            run = run | (k0 < prefix_len)
+    else:
+        run = jnp.bool_(True)
+
+    @pl.when(run)
+    def _():
+        q = q_ref[0, 0].astype(jnp.float32)                       # (bq,D)
+        k = k_ref[0, 0].astype(jnp.float32)                       # (bk,D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * (D ** -0.5)
+        if causal:
+            rows = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            cols = k0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            ok = rows >= cols
+            if prefix_len:
+                ok = ok | (cols < prefix_len)
+            s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        corr = jnp.exp(m_prev - m_cur)
+        l_scr[...] = l_prev * corr + p.sum(axis=-1, keepdims=True)
+        m_scr[...] = m_cur
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ki == n_k - 1)
+    def _():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "prefix_len", "bq",
+                                             "bk", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           prefix_len: int = 0, bq: int = 512, bk: int = 512,
+                           interpret: bool = False):
+    """q: (B,H,S,D); k,v: (B,KVH,S,D).  Returns (B,H,S,D) in q.dtype.
+
+    Positions are implicit (iota over S — contiguous sequences).
+    """
+    B, H, Sq, D = q.shape
+    KVH, Sk = k.shape[1], k.shape[2]
+    group = H // KVH
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0
+    n_q, n_k = Sq // bq, Sk // bk
+
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, bq=bq, bk=bk, D=D, causal=causal,
+                          prefix_len=prefix_len, n_k=n_k),
+        grid=(B, H, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,118 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Every op takes ``impl``/platform into account: on TPU the Pallas kernel runs
+compiled; on CPU the *reference* implementation runs by default (fast,
+HLO-small — important inside the 512-device dry-run), while tests force
+``interpret=True`` to execute the actual kernel bodies on CPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as kref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.fpm_copy import fpm_copy_cross_pallas, fpm_copy_pallas
+from repro.kernels.paged_attention import paged_attention_slab_pallas
+from repro.kernels.ssd_chunk import ssd_intra_chunk_pallas
+from repro.kernels.zero_init import zero_init_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return not _on_tpu()
+
+
+# ---------------------------------------------------------------------------
+# RowClone primitives
+# ---------------------------------------------------------------------------
+
+def fpm_copy(pool, ids, *, use_pallas: Optional[bool] = None):
+    """In-pool FPM block copy.  ids: (m,2) [src,dst], dst=-1 skips."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas or use_pallas is None:
+        return fpm_copy_pallas(pool, ids, interpret=_interpret())
+    return kref.fpm_copy(pool, ids[:, 0], ids[:, 1])
+
+
+def fpm_copy_cross(dst_pool, src_pool, ids, *, use_pallas: Optional[bool] = None):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return fpm_copy_cross_pallas(dst_pool, src_pool, ids,
+                                     interpret=_interpret())
+    return kref.fpm_copy_cross(dst_pool, src_pool, ids[:, 0], ids[:, 1])
+
+
+def meminit_zero(pool, zero_block, ids, *, use_pallas: Optional[bool] = None):
+    """BuZ: DMA-broadcast the reserved zero block into ``ids``."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return zero_init_pallas(pool, zero_block, ids, interpret=_interpret())
+    return kref.zero_init(pool, ids)
+
+
+def baseline_copy(pool, ids):
+    """The mechanism RowClone replaces: blocks round-trip the compute
+    pipeline.  Used by benchmarks for the Table-1 comparison."""
+    return kref.baseline_copy(pool, ids[:, 0], ids[:, 1])
+
+
+def psm_transfer(pool_slab, ids, *, axis_name: str = "model"):
+    """PSM cross-chip RDMA block transfer (TARGET TPU kernel; on CPU the
+    engine routes cross-slab copies through the collective path instead —
+    see kernels/psm_transfer.py)."""
+    from repro.kernels.psm_transfer import psm_transfer_pallas
+    return psm_transfer_pallas(pool_slab, ids, axis_name=axis_name)
+
+
+# ---------------------------------------------------------------------------
+# attention / ssd
+# ---------------------------------------------------------------------------
+
+def paged_attention_slab(q, k_slab, v_slab, share_mask, base, seq_lens, *,
+                         page: int, use_pallas: Optional[bool] = None):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return paged_attention_slab_pallas(q, k_slab, v_slab, share_mask,
+                                           base, seq_lens, page=page,
+                                           interpret=_interpret())
+    return kref.paged_attention_slab(q, k_slab, v_slab, share_mask, base,
+                                     seq_lens, page=page)
+
+
+def flash_attention(q, k, v, *, causal=True, prefix_len=0,
+                    use_pallas: Optional[bool] = None):
+    """q: (B,H,S,D); k/v: (B,KVH,S,D)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return flash_attention_pallas(q, k, v, causal=causal,
+                                      prefix_len=prefix_len,
+                                      interpret=_interpret())
+    B, H, S, D = q.shape
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    out = kref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), pos, pos, jnp.ones((B, S), bool),
+        causal=causal, prefix_len=prefix_len)
+    return out.transpose(0, 2, 1, 3)
+
+
+def ssd_intra_chunk(xb, dtb, cum, Bb, Cb, *, use_pallas: Optional[bool] = None):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return ssd_intra_chunk_pallas(xb, dtb, cum, Bb, Cb,
+                                      interpret=_interpret())
+    from repro.models.mamba2 import _ssd_intra_chunk_jnp
+    return _ssd_intra_chunk_jnp(xb, dtb, cum, Bb, Cb)

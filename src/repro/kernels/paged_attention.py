@@ -1,0 +1,122 @@
+"""Paged decode-attention kernel: one slab sweep, flash accumulation.
+
+Grid = chunks of pool blocks.  Per step, a ``(chunk, page, KVH, D)`` K/V tile
+streams HBM→VMEM via BlockSpec; base/seq_len metadata sits in SMEM (scalar
+prefetch) and the CoW ``share_mask`` tile rides in VMEM.  Scores are computed
+for all (sequence, block) pairs and masked by the share mask — decode
+attention is HBM-bound (every KV byte is read exactly once), so the extra
+MXU work hides under the memory stream while making CoW prefix sharing
+exact.  Flash (m, l, acc) accumulators persist in the output refs across the
+sequential grid; step 0 initializes them.
+
+VMEM at default tiling (chunk=8, page=64, KVH=8, D=128, B≤16, bf16):
+K/V tiles 2 MiB + score tile (B·chunk·KVH·group·page fp32 ≤ 2 MiB) — inside
+the ~16 MiB/core VMEM of TPU v5e.  Matmul dims are (8,128)-aligned after the
+head-group reshape.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_attn_kernel(base_ref, lens_ref, q_ref, k_ref, v_ref, mask_ref,
+                       acc_ref, l_ref, m_ref, *, page, chunk, B, KVH, group,
+                       D):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+
+    bb = base_ref[pl.ds(i * chunk, chunk)]                        # (c,)
+    lens = lens_ref[...]                                          # (B,)
+    mask = mask_ref[...]                                          # (c,B)
+
+    q = q_ref[...].astype(jnp.float32)                            # (B,H,D)
+    k = k_ref[...].astype(jnp.float32)                            # (c,pg,KVH,D)
+    v = v_ref[...].astype(jnp.float32)
+
+    # all-pairs scores: (B, c, KVH, group, page)
+    s = jax.lax.dot_general(
+        q.reshape(B, KVH, group, D).transpose(1, 0, 2, 3)
+         .reshape(KVH, B * group, D),
+        k.transpose(2, 0, 1, 3).reshape(KVH, chunk * page, D),
+        (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    ).reshape(KVH, B, group, chunk, page).transpose(1, 3, 0, 2, 4) \
+        * (D ** -0.5)                                             # (B,c,KVH,g,p)
+
+    pos = bb[:, None] + jax.lax.broadcasted_iota(jnp.int32, (chunk, page), 1)
+    valid = (mask.T[:, :, None] > 0) & (pos[None] < lens[:, None, None])
+    s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
+    m_c = s.max(axis=(1, 4))                                      # (B,KVH,g)
+    p = jnp.exp(s - m_c[:, None, :, :, None])
+    p = jnp.where(valid[:, :, None, None, :], p, 0.0)
+    l_c = p.sum(axis=(1, 4))                                      # (B,KVH,g)
+    acc_c = jax.lax.dot_general(
+        p.transpose(2, 0, 3, 1, 4).reshape(KVH, B * group, chunk * page),
+        v.transpose(2, 0, 1, 3).reshape(KVH, chunk * page, D),
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    ).reshape(KVH, B, group, D).transpose(1, 0, 2, 3)             # (B,KVH,g,D)
+
+    m_prev = m_ref[...].reshape(B, KVH, group)
+    l_prev = l_ref[...].reshape(B, KVH, group)
+    acc_prev = acc_ref[...].reshape(B, KVH, group, D)
+    m_new = jnp.maximum(m_prev, m_c)
+    c1 = jnp.exp(m_prev - m_new)
+    c2 = jnp.exp(m_c - m_new)
+    m_ref[...] = m_new.reshape(B, KVH * group)
+    l_ref[...] = (l_prev * c1 + l_c * c2).reshape(B, KVH * group)
+    acc_ref[...] = (acc_prev * c1[..., None] + acc_c * c2[..., None]) \
+        .reshape(B, KVH * group, D)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("page", "block_chunk", "interpret"))
+def paged_attention_slab_pallas(q, k_slab, v_slab, share_mask, base,
+                                seq_lens, *, page: int, block_chunk: int = 8,
+                                interpret: bool = False):
+    """Same contract as kernels/ref.py::paged_attention_slab."""
+    nblk, pg, KVH, D = k_slab.shape
+    B, H, _ = q.shape
+    group = H // KVH
+    chunk = min(block_chunk, nblk)
+    n_chunks = nblk // chunk
+    assert nblk % chunk == 0, (nblk, chunk)
+
+    kv_spec = pl.BlockSpec((chunk, pg, KVH, D), lambda i, *_: (i, 0, 0, 0))
+    acc, l, m = pl.pallas_call(
+        functools.partial(_paged_attn_kernel, page=pg, chunk=chunk, B=B,
+                          KVH=KVH, group=group, D=D),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(n_chunks,),
+            in_specs=[
+                pl.BlockSpec((B, H, D), lambda i, *_: (0, 0, 0)),
+                kv_spec, kv_spec,
+                pl.BlockSpec((chunk, B), lambda i, *_: (i, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((B, H, D), lambda i, *_: (0, 0, 0)),
+                pl.BlockSpec((B, H), lambda i, *_: (0, 0)),
+                pl.BlockSpec((B, H), lambda i, *_: (0, 0)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(base, seq_lens, q, k_slab, v_slab, share_mask)
+    return acc, l, m

@@ -1,0 +1,60 @@
+"""SSD intra-chunk kernel (Mamba2 block decomposition, quadratic term).
+
+Grid = (batch, head).  Per step the kernel materializes the (Q, Q) masked
+decay matrix for one head in VMEM — the piece that would explode to
+(B, H, Q, Q) in pure-jnp — and contracts it with the chunk inputs on the
+MXU.  Q defaults to 256 so the tile is 256×256 fp32 = 256 KiB.
+
+All exp() arguments are within-chunk cumulative-sum differences ≤ 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_intra_kernel(x_ref, dt_ref, cum_ref, b_ref, c_ref, y_ref, *, Q):
+    x = x_ref[0, :, 0, :].astype(jnp.float32)                    # (Q,P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)                     # (Q,)
+    cum = cum_ref[0, :, 0].astype(jnp.float32)                   # (Q,)
+    Bm = b_ref[0].astype(jnp.float32)                            # (Q,N)
+    Cm = c_ref[0].astype(jnp.float32)                            # (Q,N)
+
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (Q,Q)
+    seg = cum[:, None] - cum[None, :]                            # (Qi,Qj)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
+    W = scores * L * dt[None, :]
+    y = jax.lax.dot_general(W, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Q,P)
+    y_ref[0, :, 0, :] = y
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_chunk_pallas(xb, dtb, cum, Bb, Cb, *, interpret: bool = False):
+    """Same contract as models/mamba2.py::_ssd_intra_chunk_jnp.
+
+    xb: (B,Q,H,P); dtb: (B,Q,H); cum: (B,Q,H); Bb/Cb: (B,Q,N) -> (B,Q,H,P).
+    """
+    B, Q, H, P = xb.shape
+    N = Bb.shape[-1]
+    return pl.pallas_call(
+        functools.partial(_ssd_intra_kernel, Q=Q),
+        grid=(B, H),
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, Q, 1), lambda b, h: (b, 0, h)),
+            pl.BlockSpec((1, Q, 1), lambda b, h: (b, 0, h)),
+            pl.BlockSpec((1, Q, N), lambda b, h: (b, 0, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, h: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, 1, P), lambda b, h: (b, 0, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Q, H, P), jnp.float32),
+        interpret=interpret,
+    )(xb, dtb, cum, Bb, Cb)

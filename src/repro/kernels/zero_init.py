@@ -1,0 +1,60 @@
+"""BuZ kernel — RowClone bulk-zero via the reserved zero row.
+
+The paper (§3.1) reserves one all-zero row per subarray and FPM-copies it
+into any row to be zeroed, so zeroing never streams zeros from the CPU.  The
+TPU analogue: a reserved zero *block* per device slab; ``meminit`` is a pure
+HBM→HBM DMA broadcast of that block into every target block.  No zeros are
+generated in VREGs and no vector-unit cycle is spent.
+
+With RowClone-ZI (core/zero.py) most calls never reach this kernel at all —
+the lazy-zero bit makes the zeroing metadata-only, the analogue of
+clean-zero cache-line insertion.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _zero_init_kernel(ids_ref, zero_ref, _dst_in, dst_ref, sem0, sem1):
+    i = pl.program_id(0)
+    d = ids_ref[i]
+
+    @pl.when(d >= 0)
+    def _():
+        @pl.when(i % 2 == 0)
+        def _():
+            cp = pltpu.make_async_copy(zero_ref.at[0], dst_ref.at[d], sem0)
+            cp.start()
+            cp.wait()
+
+        @pl.when(i % 2 == 1)
+        def _():
+            cp = pltpu.make_async_copy(zero_ref.at[0], dst_ref.at[d], sem1)
+            cp.start()
+            cp.wait()
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
+def zero_init_pallas(pool, zero_block, ids, *, interpret: bool = False):
+    """pool: (nblk, ...); zero_block: (1, ...) reserved row (same block
+    shape); ids: (m,) int32 target blocks, -1 skips."""
+    return pl.pallas_call(
+        _zero_init_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(ids.shape[0],),
+            in_specs=[pl.BlockSpec(memory_space=pl.ANY),
+                      pl.BlockSpec(memory_space=pl.ANY)],
+            out_specs=pl.BlockSpec(memory_space=pl.ANY),
+            scratch_shapes=[pltpu.SemaphoreType.DMA,
+                            pltpu.SemaphoreType.DMA],
+        ),
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(ids, zero_block, pool)

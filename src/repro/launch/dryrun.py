@@ -1,0 +1,269 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax-importing module: jax locks the
+# device count at first backend init.  512 placeholder host devices let
+# jax.make_mesh build the production (2,16,16)/(16,16) meshes for the
+# multi-pod dry-run: every (arch x shape x mesh) cell is lowered + compiled
+# (ShapeDtypeStruct only, no allocation) and its memory/cost/collective
+# analysis recorded for EXPERIMENTS.md §Dry-run / §Roofline.
+
+import argparse   # noqa: E402
+import json       # noqa: E402
+import re         # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+from typing import Dict, Optional, Tuple  # noqa: E402
+
+import jax        # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import (SHAPES, TrainConfig, get_config, list_archs,  # noqa: E402
+                           shape_applicable)
+from repro.data import batch_logical_axes, batch_specs  # noqa: E402
+from repro.launch.mesh import (make_production_mesh, sharding_for,  # noqa: E402
+                               tree_shardings)
+from repro.launch.train import TrainState, build_jit_train_step  # noqa: E402
+from repro.models import build_model, split_params  # noqa: E402
+from repro.optim import AdamWState, init_state  # noqa: E402
+
+# TPU v5e hardware model (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*(?P<rtype>\([^)]*\)|\S+)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)\b")
+SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s32|u32|s8|u8|s64|u64|pred|s16|u16)"
+                      r"\[([0-9,]*)\]")
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+               "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "s16": 2,
+               "u16": 2}
+# ring-algorithm wire multipliers (bytes on the wire / result bytes)
+COLLECTIVE_MULT = {"all-reduce": 2.0, "all-gather": 1.0,
+                   "reduce-scatter": 1.0, "all-to-all": 1.0,
+                   "collective-permute": 1.0}
+
+
+def _bytes_of(type_str: str) -> int:
+    total = 0
+    for dt, dims in SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    wire = 0.0
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        op = m.group("op")
+        b = _bytes_of(m.group("rtype"))
+        out[op] = out.get(op, 0) + b
+        wire += COLLECTIVE_MULT[op] * b
+    out["wire_bytes"] = wire
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cell construction
+# ---------------------------------------------------------------------------
+
+def _eval_shape_tree(fn, *args, **kw):
+    return jax.eval_shape(fn, *args, **kw)
+
+
+def build_cell(arch: str, shape_name: str, mesh):
+    """Returns (jitted, example_args) ready for .lower(*args)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+
+    ptree_sds = jax.eval_shape(
+        lambda k: model.init_params(k), jax.random.key(0))
+    params_sds, axes = split_params(ptree_sds)
+    p_sh = tree_shardings(mesh, params_sds, axes)
+
+    if shape.kind == "train":
+        tcfg = TrainConfig()
+        batch_ax = batch_logical_axes(cfg)
+        b_sds = batch_specs(cfg, shape.global_batch, shape.seq_len)
+        step_fn, shard_state, batch_shardings = build_jit_train_step(
+            model, tcfg, mesh, axes, batch_ax)
+        opt_sds = jax.eval_shape(init_state, params_sds)
+        state_sds = TrainState(params_sds, opt_sds)
+        state_sh = shard_state(params_sds)
+        b_sh = batch_shardings(b_sds)
+        jitted = jax.jit(step_fn, in_shardings=(state_sh, b_sh),
+                         donate_argnums=(0,))
+        return jitted, (state_sds, b_sds)
+
+    # serving cells: bf16 params
+    params_bf16 = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype),
+        params_sds)
+    p_sh16 = tree_shardings(mesh, params_bf16, axes)
+
+    if shape.kind == "prefill":
+        b_sds = batch_specs(cfg, shape.global_batch, shape.seq_len)
+        batch_ax = batch_logical_axes(cfg)
+        b_sh = {k: sharding_for(mesh, v.shape, batch_ax[k])
+                for k, v in b_sds.items()}
+
+        def prefill_fn(params, batch):
+            return model.prefill(params, batch, mesh)
+
+        jitted = jax.jit(prefill_fn, in_shardings=(p_sh16, b_sh))
+        return jitted, (params_bf16, b_sds)
+
+    # decode
+    state_sds = jax.eval_shape(
+        lambda: model.make_serve_state(shape.global_batch, shape.seq_len,
+                                       mesh))
+    st_ax = model.state_logical_axes(state_sds)
+    st_sh = {k: sharding_for(mesh, v.shape, st_ax[k])
+             for k, v in state_sds.items()}
+    tok_sds = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    tok_sh = sharding_for(mesh, tok_sds.shape, ("batch",))
+
+    def serve_step(params, state, tokens):
+        # identity layout: every block exclusively owned -> owner-mode
+        return model.decode_step(params, state, tokens, mesh,
+                                 exclusive=True)
+
+    jitted = jax.jit(serve_step, in_shardings=(p_sh16, st_sh, tok_sh),
+                     donate_argnums=(1,))
+    return jitted, (params_bf16, state_sds, tok_sds)
+
+
+# ---------------------------------------------------------------------------
+# roofline terms
+# ---------------------------------------------------------------------------
+
+def analyse(compiled, cfg, shape, n_chips: int) -> Dict:
+    # loop-aware walk of the optimized per-device HLO (xla's cost_analysis
+    # counts while bodies once — see hlo_analysis.py)
+    from repro.launch.hlo_analysis import analyse_hlo
+    hcost = analyse_hlo(compiled.as_text())
+    flops = float(hcost["flops"])
+    byts = float(hcost["bytes"])
+    coll = {k: v for k, v in hcost.items()
+            if k in COLLECTIVE_MULT or k == "wire_bytes"}
+    xla_cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    memd = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        memd[attr] = int(getattr(mem, attr, 0) or 0)
+    # cost_analysis is the per-device SPMD program
+    t_compute = flops / PEAK_FLOPS
+    t_memory = byts / HBM_BW
+    t_coll = coll.get("wire_bytes", 0.0) / ICI_BW
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    n_tok = shape.global_batch * (shape.seq_len if shape.kind == "train"
+                                  else (shape.seq_len if shape.kind ==
+                                        "prefill" else 1))
+    model_flops = 6.0 * cfg.active_param_count() * n_tok
+    if shape.kind == "train":
+        pass  # 6ND covers fwd+bwd
+    else:
+        model_flops /= 3.0  # forward only = 2ND
+    per_dev_model_flops = model_flops / n_chips
+    return {
+        "hlo_flops_per_dev": flops,
+        "hlo_bytes_per_dev": byts,
+        "xla_flops_onepass": float(xla_cost.get("flops", 0.0)),
+        "collectives": coll,
+        "memory": memd,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_per_dev": per_dev_model_flops,
+        "useful_flop_ratio": (per_dev_model_flops / flops) if flops else 0.0,
+        "roofline_fraction": (per_dev_model_flops / PEAK_FLOPS /
+                              max(t_compute, t_memory, t_coll))
+        if max(t_compute, t_memory, t_coll) > 0 else 0.0,
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool) -> Dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    row = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if not ok:
+        row.update(status="skip", reason=reason)
+        return row
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    try:
+        with mesh:
+            jitted, args = build_cell(arch, shape_name, mesh)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            n_chips = int(np.prod(mesh.devices.shape))
+            row.update(status="ok", lower_s=round(t_lower, 1),
+                       compile_s=round(t_compile, 1),
+                       **analyse(compiled, cfg, shape, n_chips))
+    except Exception as e:  # noqa: BLE001
+        row.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells already in --out")
+    args = ap.parse_args()
+
+    archs = list_archs() if args.all or args.arch is None else [args.arch]
+    shapes = list(SHAPES) if args.all or args.shape is None else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if args.resume and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                r = json.loads(line)
+                if r.get("status") in ("ok", "skip"):
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+
+    with open(args.out, "a") as f:
+        for arch in archs:
+            for shape in shapes:
+                for mp in meshes:
+                    key = (arch, shape, "2x16x16" if mp else "16x16")
+                    if key in done:
+                        continue
+                    print(f"[dryrun] {key} ...", flush=True)
+                    row = run_cell(arch, shape, mp)
+                    print(f"[dryrun] {key} -> {row['status']} "
+                          f"{row.get('dominant', row.get('reason', row.get('error','')))[:120]}",
+                          flush=True)
+                    f.write(json.dumps(row) + "\n")
+                    f.flush()
+
+
+if __name__ == "__main__":
+    main()

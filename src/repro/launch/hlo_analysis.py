@@ -1,0 +1,364 @@
+"""Loop-aware HLO cost extraction for the roofline analysis.
+
+``compiled.cost_analysis()`` visits every instruction ONCE — while-loop
+(scan) bodies are not multiplied by trip count, which understates a scanned
+80-layer model by 80×.  XLA leaves the trip count in each while op's
+``backend_config={"known_trip_count":{"n":...}}``, so this module re-walks
+the optimized per-device HLO text and accumulates
+
+  * flops            — dot/convolution ops (exact from shapes + dims)
+  * hbm bytes        — operand+result bytes of materializing ops
+                       (fusions count at their boundary, i.e. post-fusion)
+  * collective bytes — all-reduce / all-gather / reduce-scatter /
+                       all-to-all / collective-permute result bytes, with
+                       ring-wire multipliers
+
+recursing through while bodies (×trip count), calls, and conditionals
+(max over branches).  Fused computations are descended for FLOPs only —
+their memory traffic is the fusion boundary.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+               "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "s16": 2,
+               "u16": 2, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1}
+SHAPE_RE = re.compile(r"\b(" + "|".join(DTYPE_BYTES) + r")\[([0-9,]*)\]")
+OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*"
+                   r"(?P<type>\([^)]*\)|[\w\[\]\{\},\/\* ]+?)\s*"
+                   r"(?P<op>[\w\-]+)\(")
+TRIP_RE = re.compile(r'known_trip_count[":{\s]+n[":\s]+(\d+)')
+CALL_ATTR_RE = re.compile(
+    r"(?:condition|body|calls|to_apply|true_computation|false_computation"
+    r"|branch_computations)=\{?(%[\w\.\-]+(?:,\s*%[\w\.\-]+)*)\}?")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+COLLECTIVE_MULT = {"all-reduce": 2.0, "all-gather": 1.0,
+                   "reduce-scatter": 1.0, "all-to-all": 1.0,
+                   "collective-permute": 1.0}
+# ops whose operand/result traffic is NOT HBM-material (control/aliasing)
+FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+            "after-all", "partition-id", "replica-id", "reshape",
+            "custom-call"}  # custom-calls here are layout/no-op markers
+
+
+def _strip_meta(line: str) -> str:
+    line = re.sub(r"metadata=\{[^}]*\}", "", line)
+    line = re.sub(r'backend_config=\{.*$', "", line)
+    return line
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _result_elems_and_bytes(type_str: str) -> Tuple[int, int]:
+    elems, byts = 0, 0
+    for dt, dims in SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        byts += n * DTYPE_BYTES[dt]
+    return elems, byts
+
+
+PARAM_RE = re.compile(r"(%?[\w\.\-]+)\s*:\s*((?:" + "|".join(DTYPE_BYTES) +
+                      r")\[[0-9,]*\](?:\{[^}]*\})?|\([^)]*\))")
+RESULT_RE = re.compile(r"^(?:ROOT\s+)?(%?[\w\.\-]+)\s*=\s*"
+                       r"(\([^)]*\)|[\w\[\]\{\},\/\* ]+?)\s+[\w\-]+\(")
+
+
+def _parse_computations(hlo: str):
+    """Returns (comp bodies, per-comp symbol table name->result type str)."""
+    comps: Dict[str, List[str]] = {}
+    syms: Dict[str, Dict[str, str]] = {}
+    cur: Optional[str] = None
+    body: List[str] = []
+    table: Dict[str, str] = {}
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        header = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\([^;]*->.*\{",
+                          line)
+        if header and not line.startswith(" "):
+            cur = header.group(1)
+            body, table = [], {}
+            comps[cur] = body
+            syms[cur] = table
+            if line.startswith("ENTRY"):
+                comps["__entry__"] = body
+                syms["__entry__"] = table
+            # header params: "name: type"
+            for pname, ptype in PARAM_RE.findall(line):
+                table[pname.lstrip("%")] = ptype
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is not None and "=" in stripped:
+            body.append(stripped)
+            rm = RESULT_RE.match(_strip_meta(stripped))
+            if rm:
+                table[rm.group(1).lstrip("%")] = rm.group(2)
+    return comps, syms
+
+
+class HloCost:
+    def __init__(self, hlo_text: str):
+        self.comps, self.syms = _parse_computations(hlo_text)
+        self._memo: Dict[Tuple[str, bool], Dict[str, float]] = {}
+        self._cur_comp: str = "__entry__"
+
+    def entry_cost(self) -> Dict[str, float]:
+        return self._comp_cost("__entry__", flops_only=False)
+
+    # ------------------------------------------------------------------
+    def _comp_cost(self, name: str, flops_only: bool) -> Dict[str, float]:
+        key = (name, flops_only)
+        if key in self._memo:
+            return self._memo[key]
+        zero = {"flops": 0.0, "bytes": 0.0, "wire_bytes": 0.0}
+        zero.update({c: 0.0 for c in COLLECTIVES})
+        body = self.comps.get(name)
+        if body is None:
+            self._memo[key] = zero
+            return zero
+        total = dict(zero)
+        for line in body:
+            c = self._instr_cost(line, flops_only, name)
+            for k in total:
+                total[k] += c.get(k, 0.0)
+        self._memo[key] = total
+        return total
+
+    def _instr_cost(self, line: str, flops_only: bool,
+                    comp: str = "__entry__") -> Dict[str, float]:
+        out = {"flops": 0.0, "bytes": 0.0, "wire_bytes": 0.0}
+        out.update({c: 0.0 for c in COLLECTIVES})
+        clean = _strip_meta(line)
+        m = OP_RE.match(clean)
+        if not m:
+            return out
+        op = m.group("op")
+        rtype = m.group("type")
+
+        if op == "while":
+            trip = 1
+            tm = TRIP_RE.search(line)
+            if tm:
+                trip = int(tm.group(1))
+            cm = CALL_ATTR_RE.findall(clean)
+            names = [n.strip().lstrip("%") for grp in cm
+                     for n in grp.split(",")]
+            # condition + body both execute per iteration
+            for n in names:
+                sub = self._comp_cost(n, flops_only)
+                for k in out:
+                    out[k] += trip * sub.get(k, 0.0)
+            return out
+        if op in ("call", "async-start"):
+            for grp in CALL_ATTR_RE.findall(clean):
+                for n in grp.split(","):
+                    sub = self._comp_cost(n.strip().lstrip("%"), flops_only)
+                    for k in out:
+                        out[k] += sub.get(k, 0.0)
+            return out
+        if op == "conditional":
+            branches = []
+            for grp in CALL_ATTR_RE.findall(clean):
+                for n in grp.split(","):
+                    branches.append(
+                        self._comp_cost(n.strip().lstrip("%"), flops_only))
+            if branches:
+                for k in out:
+                    out[k] = max(b.get(k, 0.0) for b in branches)
+            return out
+        if op == "fusion":
+            # descend for flops; memory traffic = fusion boundary
+            called = []
+            for grp in CALL_ATTR_RE.findall(clean):
+                for n in grp.split(","):
+                    called.append(n.strip().lstrip("%"))
+                    sub = self._comp_cost(called[-1], flops_only=True)
+                    out["flops"] += sub["flops"]
+            if not flops_only:
+                io = self._io_bytes(clean, comp, op)
+                # fusion rooted in dynamic-update-slice is in-place: the
+                # buffer operand and full-buffer result don't move — only
+                # the update slice is read + written.  (Name heuristic
+                # covers dus+convert fusions whose root is the convert.)
+                root_dus = any(self._root_is_dus(n) for n in called) or \
+                    "dynamic-update-slice" in clean.split("=")[0]
+                if root_dus:
+                    rbytes = _shape_bytes(clean.split(" fusion(")[0])
+                    io = max(io - 2.0 * rbytes, 0.0) + \
+                        2.0 * self._dus_update_bytes(called)
+                out["bytes"] += io
+            return out
+
+        if op == "dot":
+            out["flops"] += self._dot_flops(clean, comp)
+            if not flops_only:
+                out["bytes"] += self._io_bytes(clean, comp, op)
+            return out
+        if op == "convolution":
+            out["flops"] += self._conv_flops(clean)
+            if not flops_only:
+                out["bytes"] += self._io_bytes(clean, comp, op)
+            return out
+        if op in COLLECTIVES or op.startswith(tuple(
+                c + "-start" for c in COLLECTIVES)):
+            base = op.replace("-start", "")
+            _, byts = _result_elems_and_bytes(rtype)
+            out[base] = out.get(base, 0.0) + byts
+            out["wire_bytes"] += COLLECTIVE_MULT.get(base, 1.0) * byts
+            if not flops_only:
+                out["bytes"] += self._io_bytes(clean, comp, op)
+            return out
+        if op in FREE_OPS or op.endswith("-done"):
+            return out
+        if not flops_only:
+            if op in ("dynamic-update-slice", "scatter"):
+                # in-place on real hardware: traffic = the update slice
+                # (read) + its write into the buffer, not the whole buffer
+                out["bytes"] += self._update_bytes(clean, comp, op)
+            else:
+                out["bytes"] += self._io_bytes(clean, comp, op)
+        return out
+
+    def _root_is_dus(self, comp_name: str) -> bool:
+        body = self.comps.get(comp_name, [])
+        for line in body:
+            if line.startswith("ROOT"):
+                return " dynamic-update-slice(" in line
+        return False
+
+    def _dus_update_bytes(self, called) -> float:
+        for name in called:
+            table = self.syms.get(name, {})
+            for line in self.comps.get(name, []):
+                if " dynamic-update-slice(" in line:
+                    m = re.search(r"dynamic-update-slice\(([^)]*)\)", line)
+                    if m:
+                        args = [a.strip() for a in m.group(1).split(",")]
+                        if len(args) >= 2:
+                            arg = args[1]
+                            if SHAPE_RE.search(arg):
+                                return float(_shape_bytes(arg))
+                            return float(_shape_bytes(
+                                table.get(arg.lstrip("%"), "")))
+        return 0.0
+
+    def _update_bytes(self, clean: str, comp: str, op: str) -> float:
+        m = re.search(re.escape(op) + r"\(([^)]*)\)", clean)
+        if not m:
+            return 0.0
+        args = [a.strip() for a in m.group(1).split(",") if a.strip()]
+        table = self.syms.get(comp, {})
+        total = 0.0
+        # args[0] = buffer (skip); count the update operand + small indices
+        for arg in args[1:]:
+            if SHAPE_RE.search(arg):
+                total += _shape_bytes(arg)
+            else:
+                total += _shape_bytes(table.get(arg.lstrip("%"), ""))
+        return 2.0 * total  # read update + write into buffer
+
+    def _io_bytes(self, clean: str, comp: str, op: str) -> float:
+        """result bytes + operand bytes (operands resolved via the
+        computation's symbol table when not inline-typed)."""
+        b = float(_shape_bytes(clean.split(" " + op + "(")[0]))
+        m = re.search(re.escape(op) + r"\(([^)]*)\)", clean)
+        if m:
+            table = self.syms.get(comp, {})
+            for arg in m.group(1).split(","):
+                arg = arg.strip()
+                if not arg:
+                    continue
+                if SHAPE_RE.search(arg):
+                    b += _shape_bytes(arg)
+                else:
+                    b += _shape_bytes(table.get(arg.lstrip("%"), ""))
+        return b
+
+    # ------------------------------------------------------------------
+    _DOT_ARGS_RE = re.compile(r"dot\(([^)]*)\)")
+
+    def _dot_operand_types(self, line: str, comp: str) -> List[str]:
+        m = self._DOT_ARGS_RE.search(line)
+        if not m:
+            return []
+        table = self.syms.get(comp, {})
+        types = []
+        for arg in m.group(1).split(","):
+            arg = arg.strip()
+            if SHAPE_RE.search(arg):       # inline-typed operand
+                types.append(arg)
+            else:
+                types.append(table.get(arg.lstrip("%"), ""))
+        return types
+
+    def _dot_flops(self, line: str, comp: str) -> float:
+        shapes = SHAPE_RE.findall(line.split(" dot(")[0])
+        if not shapes:
+            return 0.0
+        _, rdims = shapes[0]
+        relems = 1
+        if rdims:
+            for d in rdims.split(","):
+                relems *= int(d)
+        ops = self._dot_operand_types(line, comp)
+        lshape: List[int] = []
+        if ops:
+            ls = SHAPE_RE.search(ops[0])
+            if ls and ls.group(2):
+                lshape = [int(d) for d in ls.group(2).split(",")]
+        cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+        contract = 1
+        if cm and cm.group(1) and lshape:
+            for i in cm.group(1).split(","):
+                idx = int(i)
+                if idx < len(lshape):
+                    contract *= lshape[idx]
+        return 2.0 * relems * contract
+
+
+    def _conv_flops(self, line: str) -> float:
+        shapes = SHAPE_RE.findall(line)
+        if not shapes:
+            return 0.0
+        _, rdims = shapes[0]
+        relems = 1
+        if rdims:
+            for d in rdims.split(","):
+                relems *= int(d)
+        wm = re.search(r"window=\{size=([0-9x]+)", line)
+        ksize = 1
+        if wm:
+            for d in wm.group(1).split("x"):
+                ksize *= int(d)
+        fg = re.search(r"feature_group_count=(\d+)", line)
+        # per-group input features
+        in_feat = 1
+        if len(shapes) >= 3:
+            _, kdims = shapes[2]
+            kd = [int(d) for d in kdims.split(",")] if kdims else []
+            if len(kd) >= 2:
+                in_feat = kd[-2]  # IO layout heuristic
+        return 2.0 * relems * ksize * in_feat
+
+
+def analyse_hlo(hlo_text: str) -> Dict[str, float]:
+    cost = HloCost(hlo_text).entry_cost()
+    return cost

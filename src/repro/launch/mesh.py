@@ -1,0 +1,45 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS before first init).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding import logical_to_spec
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips/pod (TPU v5e pod slice); 2 pods = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape: Tuple[int, ...] = (2, 2),
+                   axes: Tuple[str, ...] = ("data", "model")) -> Mesh:
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(f"need {n} devices, have {len(devs)}")
+    return Mesh(np.asarray(devs[:n]).reshape(shape), axes)
+
+
+def sharding_for(mesh: Mesh, shape: Tuple[int, ...], axes) -> NamedSharding:
+    """Logical axes -> NamedSharding (divisibility-aware, uses the active
+    rule set — mirrors sharding.rules.constrain)."""
+    spec = logical_to_spec(axes, mesh, dims=tuple(shape[: len(axes)]))
+    return NamedSharding(mesh, spec)
+
+
+def tree_shardings(mesh: Mesh, value_tree, axes_tree):
+    """Matching pytree of NamedShardings."""
+    return jax.tree_util.tree_map(
+        lambda v, a: sharding_for(mesh, v.shape, a), value_tree, axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))

@@ -1,0 +1,4 @@
+from repro.models.common import Param, is_param, split_params
+from repro.models.lm import LanguageModel, build_model
+
+__all__ = ["Param", "is_param", "split_params", "LanguageModel", "build_model"]

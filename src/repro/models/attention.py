@@ -1,0 +1,162 @@
+"""Attention: flash-style training/prefill attention + paged decode attention.
+
+Three execution regimes (DESIGN.md §4):
+
+* train/prefill — pure-JAX flash attention (online softmax over KV chunks),
+  sharded by the ``heads`` strategy when q-heads divide the model axis, else
+  the ``seq`` strategy (q-sequence sharded, KV gathered).  On TPU the Pallas
+  ``flash_attention`` kernel replaces the scan (kernels/ops.py).
+
+* decode — paged attention over the block pool.  The pool's block axis is
+  sharded over ``model`` ("subarray slabs"); each device sweeps its local
+  slab once using the inverse block map (owner sequence / base position per
+  block), reduces per-sequence with segment ops, and the final combine is a
+  log-sum-exp psum across the model axis.  No page gathers, no all-to-alls:
+  bytes touched = exactly the live KV bytes on the device.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding import constrain
+
+NEG_INF = -1e30
+
+
+class MaskInfo(NamedTuple):
+    """Describes the attention mask pattern.
+
+    causal: bool — causal LM mask
+    prefix_len: int — positions < prefix_len attend bidirectionally
+                      (PaliGemma prefix-LM); 0 for pure causal
+    """
+    causal: bool = True
+    prefix_len: int = 0
+
+
+def _mask(pos_q, pos_kv, kv_valid, info: MaskInfo):
+    """pos_q: (B,Sq), pos_kv: (B,Skv), kv_valid: (B,Skv) bool."""
+    m = kv_valid[:, None, :]
+    if info.causal:
+        allowed = pos_q[:, :, None] >= pos_kv[:, None, :]
+        if info.prefix_len:
+            allowed = jnp.logical_or(allowed, (pos_kv < info.prefix_len)[:, None, :])
+        m = jnp.logical_and(m, allowed)
+    return m  # (B, Sq, Skv)
+
+
+def flash_attention(q, k, v, pos_q, pos_kv, kv_valid, info: MaskInfo,
+                    kv_chunk: int = 512):
+    """Online-softmax attention, memory O(Sq * kv_chunk).
+
+    q: (B,Sq,H,D); k,v: (B,Skv,KVH,D) with H % KVH == 0.
+    Returns (B,Sq,H,D) in q.dtype.
+    """
+    B, Sq, H, D = q.shape
+    Skv, KVH = k.shape[1], k.shape[2]
+    group = H // KVH
+    scale = D ** -0.5
+
+    n_chunks = max(Skv // kv_chunk, 1)
+    kv_chunk = Skv // n_chunks
+    kc = k.reshape(B, n_chunks, kv_chunk, KVH, D).swapaxes(0, 1)
+    vc = v.reshape(B, n_chunks, kv_chunk, KVH, D).swapaxes(0, 1)
+    pc = pos_kv.reshape(B, n_chunks, kv_chunk).swapaxes(0, 1)
+    valc = kv_valid.reshape(B, n_chunks, kv_chunk).swapaxes(0, 1)
+
+    qg = q.reshape(B, Sq, KVH, group, D)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, pb, vb_valid = inp
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qg, kb,
+                       preferred_element_type=jnp.float32) * scale
+        msk = _mask(pos_q, pb, vb_valid, info)                  # (B,Sq,c)
+        s = jnp.where(msk[:, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bqkgc,bckd->bqkgd", p.astype(vb.dtype), vb,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, KVH, group), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KVH, group), jnp.float32)
+    a0 = jnp.zeros((B, Sq, KVH, group, D), jnp.float32)
+    # checkpoint the chunk body: backward recomputes scores/p per chunk
+    # instead of saving O(Sq*Skv) softmax residuals (flash backward).
+    body = jax.checkpoint(body,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, pc, valc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def attention_train(q, k, v, pos, info: MaskInfo, mesh, strategy: str,
+                    kv_chunk: int = 512):
+    """Full-sequence attention for train/prefill with sharding constraints.
+
+    q: (B,S,H,D), k/v: (B,S,KVH,D), pos: (B,S).
+    strategy: 'heads' (shard q&kv heads over model when divisible, kv heads
+    replicated if not) or 'seq' (shard q-seq over model, gather kv).
+    """
+    tp_ok_kv = mesh is not None and k.shape[2] % max(
+        np.prod([mesh.shape[a] for a in mesh.axis_names if a == "model"] or [1]), 1) == 0
+    if strategy == "heads":
+        q = constrain(q, mesh, "batch", None, "act_heads", None)
+        kv_axis = "act_kv_heads" if tp_ok_kv else None
+        k = constrain(k, mesh, "batch", None, kv_axis, None)
+        v = constrain(v, mesh, "batch", None, kv_axis, None)
+    else:  # 'seq': q rows sharded, kv replicated over model (XLA all-gathers)
+        q = constrain(q, mesh, "batch", "act_seq_tp", None, None)
+        k = constrain(k, mesh, "batch", None, None, None)
+        v = constrain(v, mesh, "batch", None, None, None)
+    kv_valid = jnp.ones(pos.shape, bool)
+    out = flash_attention(q, k, v, pos, pos, kv_valid, info, kv_chunk)
+    return constrain(out, mesh, "batch", None, None, None)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode attention — per-slab partial pass (runs inside shard_map)
+# ---------------------------------------------------------------------------
+
+def paged_attention_slab(q, k_slab, v_slab, share_mask, base, seq_lens,
+                         *, page: int, impl: str = "ref",
+                         exclusive: bool = False):
+    """Partial attention of new-token queries against one local slab.
+
+    q:        (B, H, D)       — one new token per sequence (post-RoPE)
+    k_slab:   (nblk, page, KVH, D) — this device's pool slab
+    v_slab:   (nblk, page, KVH, D)
+    share_mask: (nblk, B) int8 — block readable by sequence b (CoW sharing
+                sets several columns; all-zero row = free block)
+    base:     (nblk,) int32   — token offset of the block within its sequence
+    seq_lens: (B,) int32      — tokens valid per sequence INCLUDING current
+
+    Returns (acc, l, m): un-normalized output (B,H,D) fp32, softmax partial
+    sums (B,H) and running max (B,H) for cross-device LSE combine.
+    """
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.paged_attention_slab(q, k_slab, v_slab, share_mask, base,
+                                         seq_lens, page=page)
+    from repro.kernels import ref as kref
+    return kref.paged_attention_slab(q, k_slab, v_slab, share_mask, base,
+                                     seq_lens, page=page,
+                                     exclusive=exclusive)
+
+
+def lse_combine(acc, l, m, axis_name: str):
+    """Combine flash partials across a mesh axis: (B,H,D),(B,H),(B,H)."""
+    m_g = jax.lax.pmax(m, axis_name)
+    corr = jnp.exp(m - m_g)
+    l_g = jax.lax.psum(l * corr, axis_name)
+    acc_g = jax.lax.psum(acc * corr[..., None], axis_name)
+    return acc_g / jnp.maximum(l_g, 1e-30)[..., None]

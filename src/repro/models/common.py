@@ -1,0 +1,182 @@
+"""Shared building blocks: params-with-axes, norms, embeddings, rotary, MLP.
+
+Parameters are plain pytrees of jnp arrays.  At init time every leaf is a
+:class:`Param` carrying its *logical sharding axes*; :func:`split_params`
+separates values from axes so the launcher can build NamedShardings without a
+parallel hand-maintained tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding import constrain
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Param:
+    """A parameter leaf + its logical sharding axes."""
+    value: Any
+    axes: Tuple[Optional[str], ...]
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, axes, children):
+        return cls(children[0], axes)
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def split_params(tree):
+    """Param tree -> (value tree, axes tree)."""
+    values = jax.tree_util.tree_map(lambda p: p.value, tree, is_leaf=is_param)
+    axes = jax.tree_util.tree_map(lambda p: p.axes, tree, is_leaf=is_param)
+    return values, axes
+
+
+def stack_param_axes(axes_tree):
+    """Prepend the 'layers' logical axis (for scan-stacked params)."""
+    return jax.tree_util.tree_map(
+        lambda a: ("layers",) + tuple(a),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, axes, scale: Optional[float] = None,
+               dtype=jnp.float32) -> Param:
+    scale = scale if scale is not None else in_dim ** -0.5
+    w = jax.random.normal(key, (in_dim, out_dim), dtype) * jnp.asarray(scale, dtype)
+    return Param(w, axes)
+
+
+def zeros_init(shape, axes, dtype=jnp.float32) -> Param:
+    return Param(jnp.zeros(shape, dtype), axes)
+
+
+def ones_init(shape, axes, dtype=jnp.float32) -> Param:
+    return Param(jnp.ones(shape, dtype), axes)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> Param:
+    w = jax.random.normal(key, (vocab, d), dtype) * 0.02
+    return Param(w, ("vocab", "embed"))
+
+
+# ---------------------------------------------------------------------------
+# math blocks (functional)
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def swiglu_mlp(x, w_gate, w_up, w_down, mesh=None):
+    """SwiGLU MLP.  Activations constrained ffn-sharded over the model axis."""
+    dtype = x.dtype
+    g = x @ w_gate.astype(dtype)
+    u = x @ w_up.astype(dtype)
+    if mesh is not None:
+        g = constrain(g, mesh, "batch", None, "act_ffn")
+        u = constrain(u, mesh, "batch", None, "act_ffn")
+    h = jax.nn.silu(g) * u
+    return h @ w_down.astype(dtype)
+
+
+def init_mlp(key, d_model: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, ("embed", "ffn")),
+        "w_up": dense_init(k2, d_model, d_ff, ("embed", "ffn")),
+        "w_down": dense_init(k3, d_ff, d_model, ("ffn", "embed")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim); positions: broadcastable (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                    # (half,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., s, half)
+    cos = jnp.cos(angles)[..., :, None, :]                        # (..., s, 1, half)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# cross-entropy (seq-chunked so full fp32 logits never materialize)
+# ---------------------------------------------------------------------------
+
+def chunked_softmax_xent(x_final, w_out, labels, mask, mesh=None,
+                         chunk: int = 512, z_loss: float = 1e-4):
+    """x_final: (B,S,D) final hidden; w_out: (D,V); labels/mask: (B,S).
+
+    Computes mean CE over masked positions by scanning over sequence chunks;
+    vocab axis sharded over the model mesh axis via constraint.
+    """
+    B, S, D = x_final.shape
+    V = w_out.shape[1]
+    n_chunks = max(S // chunk, 1)
+    if S % n_chunks:  # pad to a chunk multiple; pad positions are masked
+        pad = n_chunks - S % n_chunks
+        x_final = jnp.pad(x_final, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+        S += pad
+    chunk = S // n_chunks
+    xc = x_final.reshape(B, n_chunks, chunk, D).swapaxes(0, 1)
+    lc = labels.reshape(B, n_chunks, chunk).swapaxes(0, 1)
+    mc = mask.reshape(B, n_chunks, chunk).swapaxes(0, 1)
+
+    def body(carry, inp):
+        loss_sum, z_sum, count = carry
+        xb, lb, mb = inp
+        logits = xb.astype(jnp.bfloat16) @ w_out.astype(jnp.bfloat16)
+        if mesh is not None:
+            logits = constrain(logits, mesh, "batch", None, "act_vocab")
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        ce = (lse - gold) * mb
+        zl = jnp.square(lse) * mb
+        return (loss_sum + ce.sum(), z_sum + zl.sum(), count + mb.sum()), None
+
+    # checkpoint: backward recomputes each chunk's logits instead of saving
+    # (B, chunk, V) fp32 residuals for every chunk
+    body = jax.checkpoint(body,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    (loss_sum, z_sum, count), _ = jax.lax.scan(
+        body, (jnp.float32(0), jnp.float32(0), jnp.float32(0)), (xc, lc, mc))
+    denom = jnp.maximum(count, 1.0)
+    return loss_sum / denom + z_loss * z_sum / denom
+
+
+def compute_positions(seq_len: int, batch: int):
+    return jnp.broadcast_to(jnp.arange(seq_len, dtype=jnp.int32), (batch, seq_len))

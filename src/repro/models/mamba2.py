@@ -1,0 +1,230 @@
+"""Mamba2 / SSD (state-space duality) blocks — chunked train path + O(1) decode.
+
+Training/prefill uses the SSD block decomposition (arXiv:2405.21060 §6):
+intra-chunk quadratic term + inter-chunk recurrent state passed through a
+``lax.scan``.  All per-chunk decay factors are differences of within-chunk
+cumulative sums, so every ``exp`` argument is ≤ 0 (numerically safe).
+
+Decode carries (conv_state, ssm_state) and costs O(1) per token.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Param, dense_init, ones_init, rms_norm, zeros_init
+from repro.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_mamba2_layer(key, cfg: ModelConfig) -> Dict[str, Param]:
+    d, di = cfg.d_model, cfg.ssm_d_inner
+    H, N, W = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_conv_width
+    conv_ch = di + 2 * N
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt_init = jnp.log(jnp.expm1(jnp.exp(jax.random.uniform(
+        k4, (H,), minval=jnp.log(1e-3), maxval=jnp.log(1e-1)))))
+    return {
+        "norm": zeros_init((d,), ("norm",)),
+        # in_proj -> [z(di), xBC(di+2N), dt(H)]
+        "w_in": dense_init(k1, d, 2 * di + 2 * N + H, ("embed", "ssm_inner")),
+        # conv params are tiny (W x C ~ 84 KB) — their own logical axis so
+        # FSDP keeps them replicated (sharding them forces GSPMD to
+        # channel-reshard the batch-sharded conv activations; §Perf iter 6)
+        "conv_w": Param(jax.random.normal(k2, (W, conv_ch)) * (W ** -0.5),
+                        ("conv_w", "conv_ch")),
+        "conv_b": zeros_init((conv_ch,), ("conv_ch",)),
+        "dt_bias": Param(dt_init, ("ssm_heads_p",)),
+        "A_log": Param(jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+                       ("ssm_heads_p",)),
+        "D": ones_init((H,), ("ssm_heads_p",)),
+        "gate_norm": zeros_init((di,), ("ssm_inner",)),
+        "w_out": dense_init(k3, di, d, ("ssm_inner", "embed")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan (training / prefill)
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x, dt, A, B_mat, C_mat, D_skip, chunk: int, impl: str = "jax"):
+    """x: (B,S,H,P); dt: (B,S,H) >0; A: (H,) <0; B/C: (B,S,N); D: (H,).
+
+    Returns y: (B,S,H,P).  ``impl='pallas'`` routes the intra-chunk term to
+    the Pallas kernel on TPU (kernels/ssd_chunk.py).
+    """
+    Bb, S, H, P = x.shape
+    N = B_mat.shape[-1]
+    S_orig = S
+    if S % chunk and S > chunk:  # pad to a chunk multiple (dt=0 is a no-op)
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_mat = jnp.pad(B_mat, ((0, 0), (0, pad), (0, 0)))
+        C_mat = jnp.pad(C_mat, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    n_chunks = max(S // chunk, 1)
+    Q = S // n_chunks
+
+    xc = x.reshape(Bb, n_chunks, Q, H, P).swapaxes(0, 1)
+    dtc = dt.reshape(Bb, n_chunks, Q, H).swapaxes(0, 1)
+    Bc = B_mat.reshape(Bb, n_chunks, Q, N).swapaxes(0, 1)
+    Cc = C_mat.reshape(Bb, n_chunks, Q, N).swapaxes(0, 1)
+
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        intra_fn = kops.ssd_intra_chunk
+    else:
+        from repro.models import mamba2 as _self
+        intra_fn = _self._ssd_intra_chunk_jnp
+
+    def body(h, inp):
+        xb, dtb, Bb_, Cb = inp                     # (B,Q,H,P),(B,Q,H),(B,Q,N)
+        a = dtb.astype(jnp.float32) * A[None, None, :]            # (B,Q,H) <0
+        cum = jnp.cumsum(a, axis=1)                               # inclusive
+        y_intra = intra_fn(xb, dtb, cum, Bb_, Cb)                 # (B,Q,H,P)
+        # inter-chunk: contribution of the carried state
+        decay_i = jnp.exp(cum)                                    # <=1
+        y_inter = jnp.einsum("bqn,bhpn,bqh->bqhp",
+                             Cb.astype(jnp.float32), h, decay_i)
+        # state update
+        w = jnp.exp(cum[:, -1:, :] - cum) * dtb.astype(jnp.float32)  # (B,Q,H)
+        S_c = jnp.einsum("bqh,bqhp,bqn->bhpn", w, xb.astype(jnp.float32),
+                         Bb_.astype(jnp.float32))
+        h = h * jnp.exp(cum[:, -1, :])[:, :, None, None] + S_c
+        return h, (y_intra + y_inter)
+
+    h0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+    # checkpoint: backward recomputes the (Q,Q) decay matrix per chunk
+    body = jax.checkpoint(body,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    h_final, ys = jax.lax.scan(body, h0, (xc, dtc, Bc, Cc))
+    y = ys.swapaxes(0, 1).reshape(Bb, S, H, P)
+    y = y + x.astype(jnp.float32) * D_skip[None, None, :, None]
+    y = y[:, :S_orig]
+    return y.astype(x.dtype), h_final
+
+
+def _ssd_intra_chunk_jnp(xb, dtb, cum, Bb_, Cb):
+    """Intra-chunk quadratic term (the Pallas-kernel oracle).
+
+    xb: (B,Q,H,P); dtb: (B,Q,H); cum: (B,Q,H) fp32 inclusive cumsum of dt*A;
+    Bb_/Cb: (B,Q,N).  Returns (B,Q,H,P) fp32.
+    """
+    Q = xb.shape[1]
+    scores = jnp.einsum("bin,bjn->bij", Cb.astype(jnp.float32),
+                        Bb_.astype(jnp.float32))                  # (B,Q,Q)
+    seg = cum[:, :, None, :] - cum[:, None, :, :]                 # (B,Qi,Qj,H)
+    mask = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])[None, :, :, None]
+    L = jnp.where(mask, jnp.exp(seg), 0.0)
+    W = scores[:, :, :, None] * L * dtb.astype(jnp.float32)[:, None, :, :]
+    return jnp.einsum("bijh,bjhp->bihp", W, xb.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x, w, b):
+    """x: (B,S,C); w: (W,C); b: (C,).  Causal depthwise conv + silu.
+    Runs in fp32 regardless of activation dtype."""
+    W = w.shape[0]
+    pad = jnp.pad(x.astype(jnp.float32), ((0, 0), (W - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        pad, w.astype(jnp.float32)[:, None, :],
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return jax.nn.silu(out + b.astype(jnp.float32)[None, None, :])
+
+
+def conv_step(conv_state, x_new, w, b):
+    """One decode step.  conv_state: (B,W-1,C); x_new: (B,C)."""
+    window = jnp.concatenate([conv_state, x_new[:, None, :]], axis=1)  # (B,W,C)
+    y = jnp.einsum("bwc,wc->bc", window, w) + b[None, :]
+    return jax.nn.silu(y), window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# full layer: train + decode
+# ---------------------------------------------------------------------------
+
+def _split_proj(proj, cfg: ModelConfig):
+    di, N, H = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xBC = proj[..., di:2 * di + 2 * N]
+    dt_raw = proj[..., 2 * di + 2 * N:]
+    return z, xBC, dt_raw
+
+
+def mamba2_layer(params, x, cfg: ModelConfig, mesh, impl: str = "jax"):
+    """Training/prefill forward.  x: (B,S,d_model).  Returns (y, h_final,
+    conv_tail) so prefill can seed decode state."""
+    B, S, d = x.shape
+    di, N, H, P = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    h = rms_norm(x, params["norm"].astype(jnp.float32), cfg.norm_eps)
+    proj = h @ params["w_in"].astype(h.dtype)
+    proj = constrain(proj, mesh, "batch", None, "act_ffn")
+    z, xBC, dt_raw = _split_proj(proj, cfg)
+    xBC = causal_conv1d(xBC, params["conv_w"].astype(jnp.float32),
+                        params["conv_b"].astype(jnp.float32)).astype(h.dtype)
+    xs = xBC[..., :di].reshape(B, S, H, P)
+    B_mat = xBC[..., di:di + N]
+    C_mat = xBC[..., di + N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xs = constrain(xs, mesh, "batch", None, "act_heads", None)
+    y, h_final = ssd_chunked(xs, dt, A, B_mat, C_mat,
+                             params["D"].astype(jnp.float32),
+                             cfg.ssm_chunk, impl)
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["gate_norm"].astype(jnp.float32), cfg.norm_eps)
+    out = y @ params["w_out"].astype(y.dtype)
+    conv_tail = xBC_tail(x, params, cfg)  # last W-1 pre-conv channels
+    return x + out, h_final, conv_tail
+
+
+def xBC_tail(x, params, cfg: ModelConfig):
+    """Recompute the last (W-1) pre-conv activations to seed decode."""
+    W = cfg.ssm_conv_width
+    h = rms_norm(x[:, -(W - 1):, :], params["norm"].astype(jnp.float32),
+                 cfg.norm_eps)
+    proj = h @ params["w_in"].astype(h.dtype)
+    _, xBC, _ = _split_proj(proj, cfg)
+    return xBC.astype(jnp.float32)
+
+
+def mamba2_decode_step(params, x, conv_state, ssm_state, cfg: ModelConfig, mesh):
+    """One-token decode.  x: (B,d_model); conv_state: (B,W-1,di+2N);
+    ssm_state: (B,H,P,N) fp32.  Returns (y, conv_state', ssm_state')."""
+    B, d = x.shape
+    di, N, H, P = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    h = rms_norm(x, params["norm"].astype(jnp.float32), cfg.norm_eps)
+    proj = h @ params["w_in"].astype(h.dtype)
+    z, xBC_new, dt_raw = _split_proj(proj, cfg)
+    xBC, conv_state = conv_step(conv_state, xBC_new.astype(jnp.float32),
+                                params["conv_w"].astype(jnp.float32),
+                                params["conv_b"].astype(jnp.float32))
+    xt = xBC[..., :di].reshape(B, H, P)
+    B_t = xBC[..., di:di + N]
+    C_t = xBC[..., di + N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"][None, :])
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A[None, :])                                 # (B,H)
+    dbx = jnp.einsum("bhp,bn,bh->bhpn", xt, B_t, dt)
+    ssm_state = ssm_state * decay[..., None, None] + dbx
+    y = jnp.einsum("bhpn,bn->bhp", ssm_state, C_t)
+    y = y + xt * params["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)),
+                 params["gate_norm"].astype(jnp.float32), cfg.norm_eps)
+    out = y.astype(x.dtype) @ params["w_out"].astype(x.dtype)
+    return x + out, conv_state, ssm_state

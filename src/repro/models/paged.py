@@ -1,0 +1,166 @@
+"""Paged KV-cache device math: append + partial attention + LSE combine.
+
+Pool layout ("subarray slabs", DESIGN.md §2): every attention layer owns K/V
+pools of shape ``(nblk, page, KVH, D)``.  The block axis is sharded jointly
+over ``(pod, data, model)``: each device holds one *slab* — the RowClone
+subarray analogue.  The allocator (core/allocator.py) is placement-aware so a
+sequence's blocks live in the mesh row that owns the sequence; decode
+attention then needs **zero page movement** — each device sweeps its own slab
+and partial results are LSE-combined over the model axis only.
+
+When the batch is too small to shard (long_500k, B=1) the sequence's blocks
+spread over the whole mesh and the combine spans all axes — turning the
+entire pod into one flash-decoding ring for a single 500k-token sequence.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+shard_map = jax.shard_map
+
+from repro.models.attention import lse_combine, paged_attention_slab
+
+
+# ---------------------------------------------------------------------------
+# spec helpers
+# ---------------------------------------------------------------------------
+
+def pool_shard_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+
+
+def batch_shard_axes(mesh: Mesh, batch: int) -> Tuple[str, ...]:
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    return dp if dp and batch % size == 0 else ()
+
+
+def combine_axes(mesh: Mesh, batch: int) -> Tuple[str, ...]:
+    """Axes over which decode partials must be LSE-combined."""
+    bs = set(batch_shard_axes(mesh, batch))
+    return tuple(a for a in pool_shard_axes(mesh) if a not in bs)
+
+
+def pool_spec(mesh: Mesh) -> P:
+    axes = pool_shard_axes(mesh)
+    return P(axes if len(axes) > 1 else (axes[0] if axes else None))
+
+
+def _maybe(axes: Tuple[str, ...]):
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+# ---------------------------------------------------------------------------
+# the per-layer decode step
+# ---------------------------------------------------------------------------
+
+def paged_attend_append(mesh: Optional[Mesh], q, k_new, v_new, k_pool, v_pool,
+                        blk_ids, offsets, share_mask, base, seq_lens,
+                        impl: str = "ref", exclusive: bool = False):
+    """Append this step's K/V then attend over the paged cache.
+
+    q:        (B, H, D)      new-token queries, post-RoPE
+    k_new/v_new: (B, KVH, D) new-token keys/values, post-RoPE
+    k_pool/v_pool: (nblk, page, KVH, D) — block axis sharded (pod,data,model)
+    blk_ids:  (B,) int32     GLOBAL pool block id receiving this token
+    offsets:  (B,) int32     slot within that block
+    share_mask: (nblk, B) int8 — block readable by sequence b (LOCAL batch
+                             columns when the batch is sharded)
+    base:     (nblk,) int32  token offset of block within its sequence
+    seq_lens: (B,) int32     sequence length INCLUDING the new token
+
+    Returns (out (B,H,D), k_pool', v_pool').
+    """
+    page = k_pool.shape[1]
+    if mesh is None or int(np.prod(mesh.devices.shape)) == 1:
+        return _attend_append_local(q, k_new, v_new, k_pool, v_pool, blk_ids,
+                                    offsets, share_mask, base, seq_lens,
+                                    page=page, impl=impl,
+                                    exclusive=exclusive)
+
+    B = q.shape[0]
+    bspec = _maybe(batch_shard_axes(mesh, B))
+    pspec = pool_spec(mesh)
+    mspec = P(pspec[0], None)
+    comb = combine_axes(mesh, B)
+
+    fn = functools.partial(_attend_append_local, combine=comb,
+                           pool_axes=pool_shard_axes(mesh), page=page,
+                           impl=impl, exclusive=exclusive)
+    mapped = shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(bspec), P(bspec), P(bspec), pspec, pspec,
+                  P(bspec), P(bspec), mspec, pspec, P(bspec)),
+        out_specs=(P(bspec), pspec, pspec),
+        check_vma=False,
+    )
+    return mapped(q, k_new, v_new, k_pool, v_pool, blk_ids, offsets,
+                  share_mask, base, seq_lens)
+
+
+def _attend_append_local(q, k_new, v_new, k_slab, v_slab, blk_ids, offsets,
+                         share_mask, base, seq_lens, combine=(),
+                         pool_axes=(), page=64, impl="ref",
+                         exclusive=False):
+    slab = k_slab.shape[0]
+    # blk_ids are global pool row numbers; this device's slab starts at the
+    # shard-order offset over ALL axes sharding the pool.
+    my0 = _slab_offset(pool_axes, slab) if pool_axes else jnp.int32(0)
+    local = blk_ids - my0
+    ok = (local >= 0) & (local < slab)
+    safe = jnp.where(ok, local, slab)
+    k_slab = k_slab.at[safe, offsets].set(k_new.astype(k_slab.dtype),
+                                          mode="drop")
+    v_slab = v_slab.at[safe, offsets].set(v_new.astype(v_slab.dtype),
+                                          mode="drop")
+    acc, l, m = paged_attention_slab(q, k_slab, v_slab, share_mask, base,
+                                     seq_lens, page=page, impl=impl,
+                                     exclusive=exclusive)
+    if combine:
+        out = lse_combine(acc, l, m, combine)
+    else:
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype), k_slab, v_slab
+
+
+def _slab_offset(pool_axes: Tuple[str, ...], slab: int):
+    """Global row offset of this device's slab, given the axes sharding the
+    block dimension *in shard order*."""
+    idx = jnp.int32(0)
+    for a in pool_axes:
+        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    return idx * slab
+
+
+# ---------------------------------------------------------------------------
+# contiguous "identity" allocation used by prefill and the dry-run
+# ---------------------------------------------------------------------------
+
+def identity_layout(batch: int, seq_len: int, page: int, dp: int = 1):
+    """Block table/share-mask/base for the contiguous layout where sequence
+    b's j-th block is pool row b*nblk_per_seq + j.  With the
+    (pod,data,model) pool sharding this lands every sequence's blocks in its
+    own mesh row — the subarray-aware placement from the paper, as layout
+    math.
+
+    Returns (block_table (B, nper), share_mask (nblk, B//dp) int8,
+    base (nblk,)).  The mask columns use LOCAL batch numbering when the
+    batch will be sharded ``dp`` ways (identity layout shards contiguous
+    batch groups, so local index = b % (B/dp))."""
+    nper = (seq_len + page - 1) // page
+    nblk = batch * nper
+    table = np.arange(nblk, dtype=np.int32).reshape(batch, nper)
+    owner = np.repeat(np.arange(batch, dtype=np.int32), nper)
+    base = np.tile(np.arange(nper, dtype=np.int32) * page, batch)
+    b_local = batch // dp if dp > 1 and batch % dp == 0 else batch
+    mask = np.zeros((nblk, b_local), np.int8)
+    mask[np.arange(nblk), owner % b_local] = 1
+    return table, mask, base

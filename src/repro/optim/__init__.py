@@ -1,0 +1,4 @@
+from repro.optim.adamw import (
+    AdamWState, apply_updates, clip_by_global_norm, cosine_schedule,
+    global_norm, init_state,
+)

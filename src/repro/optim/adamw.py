@@ -1,0 +1,94 @@
+"""AdamW with decoupled weight decay, global-norm clipping, cosine schedule.
+
+Pure-pytree implementation (no optax dependency).  Optimizer state inherits
+each parameter's sharding (ZeRO-3: params are sharded over data×model, so m
+and v are too — per-device optimizer memory is params/Ndev × 3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray      # ()
+    m: Any                 # like params
+    v: Any                 # like params
+
+
+def init_state(params) -> AdamWState:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                      jax.tree_util.tree_map(jnp.zeros_like, params))
+
+
+def cosine_schedule(cfg: TrainConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+_NO_DECAY_SUBSTR = ("norm", "bias", "A_log", "dt_bias", "D")
+
+
+def _decay_mask(params):
+    def mask_path(path, _):
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        return not any(s in name for s in _NO_DECAY_SUBSTR)
+    return jax.tree_util.tree_map_with_path(mask_path, params)
+
+
+def apply_updates(params, grads, state: AdamWState, cfg: TrainConfig
+                  ) -> Tuple[Any, AdamWState, Dict[str, jnp.ndarray]]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = cosine_schedule(cfg, step.astype(jnp.float32))
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    decay = _decay_mask(params)
+
+    def upd(p, g, m, v, dec):
+        g = g.astype(jnp.float32)
+        p32 = p.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + 1e-8)
+        if dec:
+            delta = delta + cfg.weight_decay * p32
+        return (p32 - lr * delta).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    flat_d = tdef.flatten_up_to(decay)
+    out = [upd(p, g, m, v, d) for p, g, m, v, d in
+           zip(flat_p, flat_g, flat_m, flat_v, flat_d)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(step, new_m, new_v), metrics

@@ -1,0 +1,65 @@
+"""Elastic scaling: re-mesh on membership change, reshard from checkpoint.
+
+When the healthy host set changes, the driver (a) picks the largest valid
+mesh from the survivors (model axis preserved — TP degree is baked into the
+weight layout; DP shrinks/grows), (b) restores the last checkpoint with the
+new shardings, (c) rescales the data pipeline so the *global* batch is
+preserved when possible (microbatch accumulation absorbs the difference).
+
+Scale-UP re-uses the paper's fork semantics: new replicas are "forked" from
+a live one — parameters stream once over ICI (PSM-style pipelined transfer,
+here: the device_put resharding collective), not from the host.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+@dataclasses.dataclass
+class ElasticDecision:
+    mesh_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    dp_size: int
+    microbatches: int          # to preserve global batch
+
+
+def plan_remesh(n_devices: int, model_parallel: int,
+                global_batch: int, old_dp: int,
+                multi_pod: bool = False) -> ElasticDecision:
+    """Choose the largest (dp, tp) grid with tp == model_parallel that fits
+    the surviving device count."""
+    if n_devices < model_parallel:
+        raise ValueError(
+            f"cannot keep TP={model_parallel} with {n_devices} devices")
+    dp = n_devices // model_parallel
+    # keep global batch: if dp shrank, accumulate more microbatches
+    micro = max(1, math.ceil(old_dp / dp))
+    if multi_pod and dp % 2 == 0:
+        return ElasticDecision((2, dp // 2, model_parallel),
+                               ("pod", "data", "model"), dp, micro)
+    return ElasticDecision((dp, model_parallel), ("data", "model"), dp, micro)
+
+
+def build_mesh(decision: ElasticDecision,
+               devices: Optional[np.ndarray] = None) -> Mesh:
+    if devices is None:
+        n = int(np.prod(decision.mesh_shape))
+        devices = np.asarray(jax.devices()[:n])
+    return Mesh(devices.reshape(decision.mesh_shape), decision.axis_names)
+
+
+def elastic_restore(ckpt: CheckpointManager, example_state, new_mesh: Mesh,
+                    sharding_fn):
+    """Restore the latest checkpoint resharded for ``new_mesh``.
+
+    ``sharding_fn(mesh) -> pytree of NamedSharding`` matching the state."""
+    shardings = sharding_fn(new_mesh)
+    return ckpt.restore(example_state, shardings=shardings)

@@ -1,0 +1,92 @@
+"""Fault tolerance: heartbeat ledger, straggler detection, restart driver.
+
+At 1000+ nodes the failure model is: (a) hard node loss — detected by
+missed heartbeats / collective timeout, recovered by checkpoint restore
+(possibly elastic, runtime/elastic.py); (b) stragglers — detected from the
+step-time ledger, mitigated by flagging the slow host for the elastic layer
+and (optionally) shrinking its microbatch share.
+
+The deterministic data pipeline (data/pipeline.py) is keyed by step, so a
+restarted run replays the exact token stream — restart is bitwise-replayable
+modulo hardware nondeterminism.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+class NodeFailure(RuntimeError):
+    """Raised (or injected in tests) when a node is lost mid-step."""
+
+
+@dataclasses.dataclass
+class StragglerReport:
+    step: int
+    step_time: float
+    median: float
+    ratio: float
+
+
+class HeartbeatLedger:
+    """Rolling per-step wall-time record with straggler detection."""
+
+    def __init__(self, window: int = 50, threshold: float = 2.0):
+        self.window = window
+        self.threshold = threshold
+        self.times: List[float] = []
+        self.reports: List[StragglerReport] = []
+        self._t0: Optional[float] = None
+
+    def step_start(self) -> None:
+        self._t0 = time.monotonic()
+
+    def step_end(self, step: int) -> Optional[StragglerReport]:
+        dt = time.monotonic() - self._t0
+        self.times.append(dt)
+        hist = self.times[-self.window:]
+        med = float(np.median(hist))
+        if len(hist) >= 5 and dt > self.threshold * med:
+            rep = StragglerReport(step, dt, med, dt / med)
+            self.reports.append(rep)
+            return rep
+        return None
+
+
+@dataclasses.dataclass
+class RestartPolicy:
+    max_restarts: int = 3
+    checkpoint_every: int = 50
+
+
+def run_with_restarts(train_loop: Callable[[int, object], object],
+                      init_state, ckpt: CheckpointManager,
+                      policy: RestartPolicy,
+                      shardings=None) -> object:
+    """Drive ``train_loop(start_step, state) -> state`` with restart-on-
+    failure.  ``train_loop`` is expected to checkpoint via ``ckpt``
+    internally every ``checkpoint_every`` steps and raise NodeFailure (or
+    any exception) on fault."""
+    state = init_state
+    start = 0
+    restarts = 0
+    while True:
+        try:
+            return train_loop(start, state)
+        except NodeFailure as e:
+            restarts += 1
+            if restarts > policy.max_restarts:
+                raise RuntimeError(
+                    f"exceeded {policy.max_restarts} restarts") from e
+            step = ckpt.latest_step()
+            if step is None:
+                state, start = init_state, 0
+            else:
+                state, start = ckpt.restore(init_state, step,
+                                            shardings=shardings)
+                start = step

@@ -1,0 +1,22 @@
+from repro.sharding.rules import (
+    DEFAULT_RULES,
+    attn_strategy,
+    axis_size,
+    batch_spec_axes,
+    constrain,
+    divisible,
+    logical_to_spec,
+    named_sharding,
+)
+
+__all__ = [
+    "DEFAULT_RULES",
+    "attn_strategy",
+    "axis_size",
+    "batch_spec_axes",
+    "constrain",
+    "divisible",
+    "logical_to_spec",
+    "named_sharding",
+    "constrain",
+]

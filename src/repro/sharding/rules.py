@@ -1,0 +1,209 @@
+"""Logical-axis sharding rules (MaxText-style) → PartitionSpec/NamedSharding.
+
+The production mesh is ``("data","model")`` single-pod or
+``("pod","data","model")`` multi-pod.  Model code annotates arrays with
+*logical* axis names; this module resolves them against whatever mesh is
+current, dropping mesh axes that don't exist (so the same model code runs
+single-pod, multi-pod, or on the 1-device CPU test mesh).
+
+Attention strategy selection (see DESIGN.md §4):
+  * ``heads``    — q heads divisible by |model|: shard heads, attention local.
+  * ``seq``      — otherwise (llama3.2-3b 24H, paligemma 8H): shard q-sequence
+                   over model, all-gather KV per layer.
+  * decode always shards the paged KV pool's *block* axis over model
+    ("subarray slabs"), combining partial attention with LSE-psum.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> preferred mesh axes (first match present in mesh is used;
+# tuples mean "shard over all of these jointly")
+DEFAULT_RULES: Dict[str, Sequence] = {
+    # activations
+    "batch": (("pod", "data"),),
+    "act_seq": (None,),            # sequence: unsharded by default
+    "act_seq_tp": ("model",),      # sequence-parallel attention segments
+    "act_heads": ("model",),
+    "act_kv_heads": ("model",),
+    "act_embed": (None,),
+    "act_ffn": ("model",),
+    "act_experts": ("model",),
+    "act_vocab": ("model",),
+    # parameters (ZeRO-3: the non-TP dim shards over data)
+    "embed": ("data",),
+    "vocab": ("model",),
+    "qkv": ("model",),
+    "heads": ("model",),
+    "ffn": ("model",),
+    "experts": ("model",),
+    "ssm_inner": ("model",),
+    "ssm_heads_p": ("model",),
+    "layers": (None,),
+    "norm": ("data",),
+    "conv_w": (None,),
+    "conv_ch": ("model",),
+    "ssm_state_p": (None,),
+    # paged pools: block axis over every mesh axis = "subarray slabs"
+    # (DESIGN.md §2) — matches models/paged.py::pool_spec
+    "kv_blocks": (("pod", "data", "model"),),
+    "kv_seq": ("model",),
+    "replicated": (None,),
+}
+
+
+# FSDP-dominant rules for TRAINING (activated via use_rules()): batch over
+# every mesh axis (pure data parallel — activations never cross devices),
+# params ZeRO-sharded over all axes on their d_model-ish dim.  Ordered
+# fallbacks let each dim pick the largest mesh-axis group that divides it.
+FSDP_RULES: Dict[str, Sequence] = {
+    "batch": (("pod", "data", "model"), ("data", "model"), ("pod", "data"),
+              ("data",)),
+    "act_seq": (None,),
+    "act_seq_tp": (None,),
+    "act_heads": (None,),
+    "act_kv_heads": (None,),
+    "act_embed": (None,),
+    "act_ffn": (None,),
+    "act_experts": (None,),
+    "act_vocab": (None,),
+    "embed": (("pod", "data", "model"), ("data", "model"), ("data",)),
+    "vocab": (None,),
+    "qkv": (None,),
+    "heads": (None,),
+    "ffn": (None,),
+    "experts": (None,),
+    "ssm_inner": (("pod", "data", "model"), ("data", "model"), ("data",)),
+    "ssm_heads_p": (None,),
+    "layers": (None,),
+    "norm": (("pod", "data", "model"), ("data", "model"), ("data",)),
+    "conv_w": (None,),
+    "conv_ch": (None,),     # replicated: see models/mamba2.py init comment
+    "ssm_state_p": (None,),
+    "kv_blocks": (("pod", "data", "model"),),
+    "kv_seq": ("model",),
+    "replicated": (None,),
+}
+
+_ACTIVE_RULES: List[Dict] = []
+
+
+class use_rules:
+    """Context manager activating an alternative rule set (e.g. FSDP_RULES
+    while tracing a train step)."""
+
+    def __init__(self, rules: Dict):
+        self.rules = rules
+
+    def __enter__(self):
+        _ACTIVE_RULES.append(self.rules)
+        return self.rules
+
+    def __exit__(self, *exc):
+        _ACTIVE_RULES.pop()
+
+
+def active_rules() -> Dict:
+    return _ACTIVE_RULES[-1] if _ACTIVE_RULES else DEFAULT_RULES
+
+
+def mesh_axis_names(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def _resolve_entry(entry, axis_names, dim: Optional[int], mesh,
+                   used) -> Optional[object]:
+    """Resolve one rule entry against available mesh axes (+divisibility
+    when the dim size is known).  Tuple entries resolve to the subset of
+    their axes present in the mesh (e.g. ("pod","data") -> ("data",) on a
+    single-pod mesh)."""
+    if entry is None:
+        return None
+    flat = entry if isinstance(entry, tuple) else (entry,)
+    present = tuple(a for a in flat if a in axis_names and a not in used)
+    if not present:
+        return None
+    if dim is not None:
+        size = int(np.prod([mesh.shape[a] for a in present]))
+        if dim % size != 0:
+            return None
+    return present if len(present) > 1 else present[0]
+
+
+def logical_to_spec(logical_axes: Sequence[Optional[str]], mesh: Mesh,
+                    rules: Optional[Dict] = None,
+                    dims: Optional[Sequence[Optional[int]]] = None) -> P:
+    """Map logical axis names (or None) to a PartitionSpec.
+
+    ``dims`` (optional, parallel to logical_axes): array dim sizes — rule
+    fallbacks are tried in order until one divides the dim.
+    """
+    rules = rules or active_rules()
+    axis_names = mesh_axis_names(mesh)
+    out, used = [], set()
+    for i, name in enumerate(logical_axes):
+        if name is None:
+            out.append(None)
+            continue
+        dim = dims[i] if dims is not None else None
+        resolved = None
+        for cand in rules.get(name, (None,)):
+            resolved = _resolve_entry(cand, axis_names, dim, mesh, used)
+            if resolved is not None:
+                break
+        if resolved is None:
+            out.append(None)
+        else:
+            flat = resolved if isinstance(resolved, tuple) else (resolved,)
+            used.update(flat)
+            out.append(resolved)
+    return P(*out)
+
+
+def named_sharding(mesh: Mesh, *logical_axes, rules=None) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(logical_axes, mesh, rules))
+
+
+def constrain(x, mesh: Mesh, *logical_axes, rules=None):
+    """with_sharding_constraint by logical axes; no-op off-mesh.
+
+    Divisibility-aware: rule fallbacks are tried in order until one divides
+    the dim (e.g. batch=1 in long_500k stays replicated)."""
+    if mesh is None or np.prod(mesh.devices.shape) == 1:
+        return x
+    logical_axes = tuple(logical_axes)[: x.ndim]
+    dims = tuple(x.shape[: len(logical_axes)])
+    spec = logical_to_spec(logical_axes, mesh, rules, dims=dims)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def divisible(n: int, mesh: Mesh, axis: str) -> bool:
+    if axis not in mesh.axis_names:
+        return True
+    return n % mesh.shape[axis] == 0
+
+
+def axis_size(mesh: Mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        s = 1
+        for a in axis:
+            s *= axis_size(mesh, a)
+        return s
+    return mesh.shape[axis] if axis in mesh.axis_names else 1
+
+
+def batch_spec_axes(global_batch: int, mesh: Mesh):
+    """Pick the batch logical mapping: shard over (pod,data) when divisible,
+    else replicate (long_500k batch=1)."""
+    dp = axis_size(mesh, ("pod", "data"))
+    return "batch" if global_batch % dp == 0 else None
+
+
+def attn_strategy(num_q_heads: int, mesh: Mesh) -> str:
+    """'heads' if q heads shard cleanly over the model axis, else 'seq'."""
+    tp = axis_size(mesh, "model")
+    return "heads" if num_q_heads % tp == 0 else "seq"

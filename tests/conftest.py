@@ -1,0 +1,10 @@
+import os
+
+# Tests run on the single real CPU device (the dry-run alone forces 512
+# placeholder devices).  Multi-device semantics are tested via subprocess in
+# test_multidevice.py.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,186 @@
+"""Per-arch smoke tests (reduced configs) + prefill/decode consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.data import make_batch
+from repro.models import build_model, split_params
+from repro.models.common import rms_norm
+from repro.optim import apply_updates, init_state
+from repro.configs.base import TrainConfig
+
+ARCHS = list_archs()
+
+
+def _batch_for(cfg, B, S, key):
+    batch = {
+        "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+        "mask": jnp.ones((B, S), jnp.float32),
+    }
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            key, (B, cfg.vision_tokens, cfg.d_model)) * 0.02
+    if cfg.family == "encdec":
+        batch["src_embeds"] = jax.random.normal(
+            key, (B, max(S // cfg.src_frames_ratio, 1), cfg.d_model)) * 0.02
+    return batch
+
+
+def test_all_archs_registered():
+    assert len(ARCHS) == 10
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_forward_and_train_step(arch):
+    """One forward + one train step on the reduced config: correct shapes,
+    no NaNs, params actually change."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params, _ = split_params(model.init_params(jax.random.key(0)))
+    B, S = 2, 64
+    batch = _batch_for(cfg, B, S, jax.random.key(1))
+
+    loss, metrics = model.loss_fn(params, batch, None)
+    assert np.isfinite(float(loss)), arch
+    assert float(loss) > 0
+
+    tcfg = TrainConfig(total_steps=10, warmup_steps=1)
+    (l2, _), grads = jax.value_and_grad(
+        lambda p: model.loss_fn(p, batch, None), has_aux=True)(params)
+    gnorm = float(jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree_util.tree_leaves(grads))))
+    assert np.isfinite(gnorm) and gnorm > 0, arch
+    new_params, _, m = apply_updates(params, grads, init_state(params), tcfg)
+    changed = any(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) -
+                              b.astype(jnp.float32)))) > 0
+        for a, b in zip(jax.tree_util.tree_leaves(params),
+                        jax.tree_util.tree_leaves(new_params)))
+    assert changed, arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_full_config_consistency(arch):
+    """Full (unreduced) config sanity: divisibility constraints the sharded
+    mesh relies on, and analytic param counts are positive."""
+    cfg = get_config(arch)
+    assert cfg.padded_vocab % 256 == 0
+    if cfg.family not in ("ssm",):
+        assert cfg.q_dim % 16 == 0 and cfg.kv_dim % 16 == 0
+        assert cfg.num_heads % cfg.num_kv_heads == 0
+    if cfg.ssm_heads:
+        assert cfg.ssm_heads * cfg.ssm_head_dim == cfg.ssm_d_inner
+        assert cfg.ssm_heads % 16 == 0
+    if cfg.family == "moe":
+        assert cfg.num_experts % 16 == 0
+    if cfg.d_ff:
+        assert cfg.d_ff % 16 == 0
+    assert cfg.param_count() > 0
+    assert cfg.active_param_count() <= cfg.param_count()
+    if cfg.family == "hybrid":
+        assert cfg.num_layers % cfg.shared_attn_every == 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_matches_full_forward(arch):
+    """decode_step after prefill == full forward at the last position.
+    (MoE differs by train-time capacity dropping; checked with loose tol.)"""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params, _ = split_params(model.init_params(jax.random.key(0)))
+    B, S = 2, 64
+    key = jax.random.key(2)
+    tokens = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+    batch = {"tokens": tokens[:, :S]}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            key, (B, cfg.vision_tokens, cfg.d_model)) * 0.02
+    if cfg.family == "encdec":
+        batch["src_embeds"] = jax.random.normal(
+            key, (B, S // cfg.src_frames_ratio, cfg.d_model)) * 0.02
+    _, state = model.prefill(params, batch, None)
+    logits_dec, state2 = model.decode_step(params, state, tokens[:, S], None)
+    expected_len = S + 1 + (cfg.vision_tokens if cfg.family == "vlm" else 0)
+    assert int(state2["seq_lens"][0]) == expected_len
+    batch2 = dict(batch, tokens=tokens)
+    x, _, _, _, prefix = model._backbone_train(params, batch2, None,
+                                               "minimal")
+    xn = rms_norm(x[:, -1, :], params["final_norm"].astype(jnp.float32),
+                  cfg.norm_eps)
+    ref = model._logits(params, xn, None)
+    err = float(jnp.max(jnp.abs(logits_dec - ref)))
+    if cfg.family == "moe":
+        assert err < 1.0  # capacity dropping in the train-path reference
+    else:
+        assert err < 2e-3, f"{arch}: {err}"
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "mamba2-780m",
+                                  "zamba2-2.7b"])
+def test_multi_step_decode_matches_incremental_forward(arch):
+    """Greedy-decode 4 tokens via decode_step; logits at every step match a
+    fresh full forward over the growing sequence."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params, _ = split_params(model.init_params(jax.random.key(0)))
+    B, S = 1, 32
+    tokens = jax.random.randint(jax.random.key(3), (B, S), 0, cfg.vocab_size)
+    _, state = model.prefill(params, batch={"tokens": tokens}, mesh=None,
+                             margin_tokens=8)
+    seq = np.asarray(tokens)
+    for step in range(4):
+        nxt = jnp.asarray(seq[:, -1]) if step == 0 else nxt_tok
+        if step == 0:
+            # feed the last prompt token? No: prefill consumed all S tokens;
+            # decode the argmax of prefill logits next.
+            pass
+        # reference full forward over seq so far
+        x, _, _, _, _ = model._backbone_train(
+            params, {"tokens": jnp.asarray(seq)}, None, "minimal")
+        xn = rms_norm(x[:, -1, :], params["final_norm"].astype(jnp.float32),
+                      cfg.norm_eps)
+        ref_logits = np.asarray(model._logits(params, xn, None))
+        nxt_tok = jnp.asarray(ref_logits.argmax(-1).astype(np.int32))
+        logits_dec, state = model.decode_step(params, state, nxt_tok, None)
+        seq = np.concatenate([seq, np.asarray(nxt_tok)[:, None]], axis=1)
+        # the decode logits must match the next full forward's last position
+        x2, _, _, _, _ = model._backbone_train(
+            params, {"tokens": jnp.asarray(seq)}, None, "minimal")
+        xn2 = rms_norm(x2[:, -1, :],
+                       params["final_norm"].astype(jnp.float32),
+                       cfg.norm_eps)
+        ref2 = np.asarray(model._logits(params, xn2, None))
+        np.testing.assert_allclose(np.asarray(logits_dec), ref2, atol=5e-3)
+
+
+def test_vlm_prefix_is_bidirectional():
+    """Early patch positions must attend to later patch positions."""
+    cfg = get_config("paligemma-3b").reduced()
+    model = build_model(cfg)
+    params, _ = split_params(model.init_params(jax.random.key(0)))
+    B, S = 1, 32
+    key = jax.random.key(4)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    patches = jax.random.normal(key, (B, cfg.vision_tokens, cfg.d_model))
+    batch = {"tokens": tokens, "patch_embeds": patches}
+    x1, *_ = model._backbone_train(params, batch, None, "minimal")
+    # change the LAST patch; if the prefix were causal, position 0's
+    # activation could not change
+    patches2 = patches.at[:, -1].add(1.0)
+    x2, *_ = model._backbone_train(
+        params, dict(batch, patch_embeds=patches2), None, "minimal")
+    delta0 = float(jnp.abs(x1[:, 0] - x2[:, 0]).max())
+    assert delta0 > 0, "prefix-LM mask is not bidirectional"
+
+
+def test_data_pipeline_is_deterministic():
+    cfg = get_config("llama3.2-3b").reduced()
+    b1 = make_batch(cfg, 2, 64, step=7)
+    b2 = make_batch(cfg, 2, 64, step=7)
+    b3 = make_batch(cfg, 2, 64, step=8)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(b1["tokens"], b3["tokens"])

@@ -1,0 +1,265 @@
+"""RowClone core invariants: allocator, engine dispatch, CoW cache,
+ZI lazy-zero, migration.  Hypothesis drives the stateful properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (PagedCoWCache, RowCloneEngine, SubarrayAllocator)
+from repro.core.allocator import OutOfBlocks
+from repro.core.migration import execute as migrate_execute, plan_rebalance
+
+
+def make_engine(nblk=64, nslabs=4, page=8, KVH=2, D=16, **kw):
+    alloc = SubarrayAllocator(nblk, nslabs, reserved_zero_per_slab=1)
+    pools = {"k": jnp.zeros((nblk, page, KVH, D), jnp.float32),
+             "v": jnp.zeros((nblk, page, KVH, D), jnp.float32)}
+    return RowCloneEngine(pools, alloc, mesh=None, max_requests=16, **kw)
+
+
+# ---------------------------------------------------------------------------
+# allocator
+# ---------------------------------------------------------------------------
+
+def test_allocator_reserves_zero_rows():
+    a = SubarrayAllocator(32, 4, reserved_zero_per_slab=1)
+    assert len(a.zero_rows) == 4
+    for z in a.zero_rows:
+        assert a.refcount[z] == 1 and a.is_zero[z]
+    assert a.total_free() == 32 - 4
+
+
+def test_allocator_prefers_requested_slab():
+    a = SubarrayAllocator(32, 4)
+    ids = a.alloc(3, prefer_slab=2)
+    assert all(a.slab_of(b) == 2 for b in ids)
+    assert a.stats.fpm_eligible == 3
+
+
+def test_allocator_falls_back_when_slab_full():
+    a = SubarrayAllocator(16, 4)  # 3 usable per slab
+    a.alloc(3, prefer_slab=1)
+    more = a.alloc(1, prefer_slab=1)   # slab 1 exhausted
+    assert a.slab_of(more[0]) != 1
+    assert a.stats.psm_fallback == 1
+
+
+def test_allocator_exhaustion_raises():
+    a = SubarrayAllocator(8, 2)
+    a.alloc(6)
+    with pytest.raises(OutOfBlocks):
+        a.alloc(1)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.sampled_from(["alloc", "free", "share"]), min_size=1,
+                max_size=40))
+def test_allocator_refcount_invariants(ops):
+    """Stateful property: refcounts never negative; free list + live +
+    reserved always partitions the pool; shared blocks survive one free."""
+    a = SubarrayAllocator(32, 4)
+    live = []
+    for op in ops:
+        if op == "alloc" and a.total_free() > 0:
+            live.extend(a.alloc(1))
+        elif op == "free" and live:
+            b = live.pop()
+            a.free([b])
+        elif op == "share" and live:
+            b = live[0]
+            a.share([b])
+            live.append(b)
+        assert (a.refcount >= 0).all()
+        n_live_refs = int(a.refcount.sum()) - len(a.zero_rows)
+        assert n_live_refs == len(live)
+        assert a.total_free() + len(set(live)) + len(a.zero_rows) == 32
+
+
+# ---------------------------------------------------------------------------
+# engine dispatch
+# ---------------------------------------------------------------------------
+
+def test_engine_fpm_for_same_slab_psm_for_cross():
+    eng = make_engine()
+    a = eng.alloc
+    s1 = a.alloc(2, prefer_slab=0)
+    d1 = a.alloc(1, prefer_slab=0)
+    d2 = a.alloc(1, prefer_slab=3)
+    a.mark_written(s1)
+    # write data
+    eng.pools["k"] = eng.pools["k"].at[s1[0]].set(1.5)
+    eng.pools["k"] = eng.pools["k"].at[s1[1]].set(2.5)
+    counts = eng.memcopy([(s1[0], d1[0]), (s1[1], d2[0])])
+    assert counts["fpm"] == 1 and counts["psm"] == 1
+    assert float(eng.pools["k"][d1[0]].min()) == 1.5
+    assert float(eng.pools["k"][d2[0]].min()) == 2.5
+
+
+def test_engine_zi_alias_for_zero_source():
+    """Copying a lazily-zero block moves no bytes (in-cache copy)."""
+    eng = make_engine()
+    src = eng.alloc.alloc(1, prefer_slab=0)[0]
+    dst = eng.alloc.alloc(1, prefer_slab=0)[0]
+    eng.meminit([src])              # lazy zero
+    before = eng.stats.bytes_fpm + eng.stats.bytes_psm
+    eng.memcopy([(src, dst)])
+    assert eng.stats.alias_copies == 1
+    assert eng.stats.bytes_fpm + eng.stats.bytes_psm == before
+    assert eng.alloc.is_zero[dst]
+
+
+def test_engine_disabled_rowclone_uses_baseline():
+    eng = make_engine(enable_fpm=False, enable_psm=False, enable_zi=False)
+    s = eng.alloc.alloc(1, prefer_slab=0)[0]
+    d = eng.alloc.alloc(1, prefer_slab=0)[0]
+    eng.pools["k"] = eng.pools["k"].at[s].set(3.0)
+    eng.alloc.mark_written([s])
+    eng.memcopy([(s, d)])
+    assert eng.stats.baseline_copies == 1
+    assert eng.stats.fpm_copies == 0
+    assert float(eng.pools["k"][d].min()) == 3.0
+
+
+def test_engine_meminit_materialize():
+    eng = make_engine()
+    b = eng.alloc.alloc(1)[0]
+    eng.pools["k"] = eng.pools["k"].at[b].set(7.0)
+    eng.meminit([b])                      # lazy
+    assert float(eng.pools["k"][b].max()) == 7.0  # bytes untouched
+    eng.materialize_zeros([b])
+    assert float(jnp.abs(eng.pools["k"][b]).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# CoW cache semantics
+# ---------------------------------------------------------------------------
+
+def make_cache(**kw):
+    eng = make_engine(nblk=64, nslabs=4, page=8, **kw)
+    return PagedCoWCache(eng, page=8, max_blocks_per_seq=8, max_seqs=8), eng
+
+
+def test_fork_shares_then_cow_splits():
+    cache, eng = make_cache()
+    sid = cache.new_sequence(prompt_len=12)   # mid-block position
+    blocks = cache.blocks_of(sid)
+    kdata = jax.random.normal(jax.random.key(0), (len(blocks), 8, 2, 16))
+    for j, b in enumerate(blocks):
+        eng.pools["k"] = eng.pools["k"].at[b].set(kdata[j])
+    eng.alloc.mark_written(blocks)
+
+    child, = cache.fork(sid, 1)
+    assert cache.blocks_of(child) == blocks
+    assert eng.stats.fpm_copies == 0          # fork is free
+
+    b_id, off = cache.append_token(child)
+    assert off == 4
+    assert b_id != blocks[1]                  # CoW split happened
+    assert eng.stats.fpm_copies == 1          # via FPM (same slab)
+    assert eng.alloc.slab_of(b_id) == eng.alloc.slab_of(blocks[1])
+    np.testing.assert_allclose(np.asarray(eng.pools["k"][b_id]),
+                               np.asarray(eng.pools["k"][blocks[1]]))
+    # parent untouched
+    assert cache.blocks_of(sid) == blocks
+    assert eng.alloc.refcount[blocks[1]] == 1
+
+
+def test_parent_append_after_fork_also_cows():
+    cache, eng = make_cache()
+    sid = cache.new_sequence(prompt_len=4)
+    cache.fork(sid, 2)
+    b_id, _ = cache.append_token(sid)  # parent writes shared block -> CoW
+    assert eng.stats.fpm_copies + eng.stats.alias_copies == 1
+    for kid in [s for s in cache.seqs if s != sid]:
+        assert cache.blocks_of(kid)[0] != b_id
+
+
+def test_free_sequence_releases_blocks():
+    cache, eng = make_cache()
+    sid = cache.new_sequence(prompt_len=16)
+    child, = cache.fork(sid, 1)
+    free0 = eng.alloc.total_free()
+    cache.free_sequence(sid)
+    assert eng.alloc.total_free() == free0    # child still holds them
+    cache.free_sequence(child)
+    assert eng.alloc.total_free() == free0 + 2
+
+
+def test_device_tables_reflect_sharing():
+    cache, eng = make_cache()
+    sid = cache.new_sequence(prompt_len=8)
+    kids = cache.fork(sid, 2)
+    table, mask, base = cache.device_tables()
+    b = cache.blocks_of(sid)[0]
+    cols = [cache.slot_of(s) for s in (sid, *kids)]
+    for c in cols:
+        assert int(mask[b, c]) == 1
+    assert int(np.asarray(mask[b]).sum()) == 3
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.sampled_from(["new", "fork", "append", "free"]),
+                min_size=1, max_size=30))
+def test_cache_stateful_property(ops):
+    """Random op sequences keep: table/mask consistency, refcount = number
+    of sequences referencing each block, no leaks after freeing all."""
+    cache, eng = make_cache()
+    rng = np.random.default_rng(0)
+    for op in ops:
+        sids = sorted(cache.seqs)
+        try:
+            if op == "new":
+                if len(sids) < cache.max_seqs and eng.alloc.total_free() > 2:
+                    cache.new_sequence(prompt_len=int(rng.integers(1, 20)))
+            elif op == "fork" and sids and len(sids) < cache.max_seqs:
+                cache.fork(int(rng.choice(sids)), 1)
+            elif op == "append" and sids:
+                cache.append_token(int(rng.choice(sids)))
+            elif op == "free" and sids:
+                cache.free_sequence(int(rng.choice(sids)))
+        except OutOfBlocks:
+            continue
+        # invariant: refcount of every block = #sequences holding it
+        counts = {}
+        for s in cache.seqs.values():
+            for b in s.blocks:
+                counts[b] = counts.get(b, 0) + 1
+        for b, c in counts.items():
+            assert eng.alloc.refcount[b] == c, (b, c)
+    for s in sorted(cache.seqs):
+        cache.free_sequence(s)
+    assert eng.alloc.total_free() == \
+        eng.alloc.num_blocks - len(eng.alloc.zero_rows)
+
+
+# ---------------------------------------------------------------------------
+# migration (PSM application)
+# ---------------------------------------------------------------------------
+
+def test_migration_rebalances_and_preserves_content():
+    cache, eng = make_cache()
+    # overload slab 0 with 3 sequences
+    sids = [cache.new_sequence(prompt_len=16, prefer_slab=0)
+            for _ in range(3)]
+    data = {}
+    for sid in sids:
+        for b in cache.blocks_of(sid):
+            val = float(b) + 0.5
+            eng.pools["k"] = eng.pools["k"].at[b].set(val)
+            data[(sid, cache.blocks_of(sid).index(b))] = val
+        eng.alloc.mark_written(cache.blocks_of(sid))
+    plan = plan_rebalance(cache)
+    assert plan.moves, "expected migration moves"
+    migrate_execute(plan, cache)
+    assert eng.stats.psm_copies > 0
+    # content preserved under new ids
+    for (sid, j), val in data.items():
+        nb = cache.blocks_of(sid)[j]
+        assert float(eng.pools["k"][nb].min()) == val
+    # load is better balanced
+    used = np.zeros(4, int)
+    for s in cache.seqs.values():
+        for b in s.blocks:
+            used[eng.alloc.slab_of(b)] += 1
+    assert used.max() - used.min() <= 3

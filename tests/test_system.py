@@ -1,0 +1,39 @@
+"""End-to-end behaviour tests for the whole system."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.train import train_loop
+
+
+def test_training_reduces_loss():
+    """A tiny dense model must actually learn on the synthetic stream (the
+    pipeline's affine-successor structure is learnable)."""
+    _, losses = train_loop("llama3.2-3b", steps=30, batch=4, seq_len=128,
+                           smoke=True, learning_rate=3e-3)
+    first = np.mean(losses[:5])
+    last = np.mean(losses[-5:])
+    assert last < first - 0.2, (first, last)
+    assert np.isfinite(losses).all()
+
+
+def test_training_microbatch_equivalence():
+    """microbatches=2 must track microbatches=1 (same global batch)."""
+    _, l1 = train_loop("yi-6b", steps=8, batch=4, seq_len=64, smoke=True,
+                       microbatches=1)
+    _, l2 = train_loop("yi-6b", steps=8, batch=4, seq_len=64, smoke=True,
+                       microbatches=2)
+    np.testing.assert_allclose(l1, l2, rtol=2e-2)
+
+
+def test_ssm_training_runs():
+    _, losses = train_loop("mamba2-780m", steps=10, batch=2, seq_len=128,
+                           smoke=True)
+    assert np.isfinite(losses).all()
+
+
+def test_moe_training_runs_and_balances():
+    _, losses = train_loop("deepseek-moe-16b", steps=10, batch=2,
+                           seq_len=64, smoke=True)
+    assert np.isfinite(losses).all()
