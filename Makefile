@@ -1,0 +1,23 @@
+# Tier-1 verification and smoke benchmarks.
+#
+#   make test         - the tier-1 suite (ROADMAP.md "Tier-1 verify")
+#   make test-fast    - same, minus tests marked `slow`
+#   make bench-smoke  - dispatch benchmark (writes BENCH_dispatch.json)
+#   make bench        - full paper-figure benchmark sweep
+
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+PY := PYTHONPATH=$(PYTHONPATH) python
+
+.PHONY: test test-fast bench-smoke bench
+
+test:
+	$(PY) -m pytest -x -q
+
+test-fast:
+	$(PY) -m pytest -x -q -m "not slow"
+
+bench-smoke:
+	$(PY) benchmarks/bench_dispatch.py
+
+bench:
+	$(PY) -m benchmarks.run

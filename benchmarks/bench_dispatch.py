@@ -1,0 +1,152 @@
+"""Dispatch-path benchmark: fused command-queue flush vs seed per-op fan-out.
+
+Measures, for mixed copy+zero batches over a {"k","v"} pool pair:
+
+* launches per flush (via the kernels/fused_dispatch.py launch hook),
+* wall-clock per flushed batch (median of repeated flushes, post-warmup),
+* bytes physically moved (identical across paths — the win is dispatch).
+
+Emits ``BENCH_dispatch.json``:
+
+{
+  "schema": "bench_dispatch/v1",
+  "backend": "cpu" | "tpu",
+  "block": [page, KVH, D], "nblk": int, "pools": ["k", "v"],
+  "rows": [{
+      "batch": int,            # commands per flush (copies + zeros)
+      "path": "fused"|"seed",  # queue+fused launch vs per-op fan-out
+      "launches_per_flush": float,
+      "table_len": int,        # padded table length (bucket vs max_requests)
+      "us_per_flush": float,   # median wall-clock
+      "bytes_moved": int       # bytes one flush moves (per-flush, not
+                               # cumulative over the measurement loop)
+  }],
+  "summary": {"speedup_small_batch": float}   # seed/fused us at batch<=8
+}
+
+CLI: PYTHONPATH=src python benchmarks/bench_dispatch.py [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import RowCloneEngine, SubarrayAllocator
+from repro.kernels import fused_dispatch as fd
+
+BLOCK = (16, 2, 64)          # page x KVH x head_dim
+NBLK = 1024
+NSLABS = 4
+BATCHES = (2, 4, 8, 32, 128)
+REPS = 30
+
+
+def _mk_engine(use_fused: bool) -> RowCloneEngine:
+    alloc = SubarrayAllocator(NBLK, NSLABS, reserved_zero_per_slab=1)
+    key = jax.random.key(0)
+    pools = {
+        "k": jax.random.normal(key, (NBLK,) + BLOCK, jnp.float32),
+        "v": jax.random.normal(jax.random.key(1), (NBLK,) + BLOCK,
+                               jnp.float32),
+    }
+    # max_requests=256 is the seed default the fan-out path pads to
+    return RowCloneEngine(pools, alloc, mesh=None, max_requests=256,
+                          use_fused=use_fused)
+
+
+def _flush_once(eng: RowCloneEngine, batch: int, round_i: int) -> None:
+    """One mixed flush: ~3/4 copies (FPM+PSM mix), ~1/4 zero-inits.
+    Source/dest ids rotate per round so jit caches stay warm but data
+    differs."""
+    n_zero = max(batch // 4, 1)
+    n_copy = batch - n_zero
+    base = (round_i * batch) % (NBLK // 4)
+    srcs = [1 + (base + i) % (NBLK // 4) for i in range(n_copy)]
+    dsts = [NBLK // 2 + (base + i) % (NBLK // 4) for i in range(n_copy)]
+    zeros = [3 * NBLK // 4 + (base + i) % (NBLK // 8) for i in range(n_zero)]
+    eng.alloc.mark_written(srcs)
+    with eng.batch():
+        eng.memcopy(list(zip(srcs, dsts)))
+        eng.materialize_zeros(zeros)
+
+
+def _bench_path(use_fused: bool, batch: int) -> Dict:
+    eng = _mk_engine(use_fused)
+    events: List = []
+    hook = lambda n, p, mech: events.append((n, p, mech))
+    fd.add_launch_hook(hook)
+    try:
+        # warmup (compile) flushes
+        for r in range(3):
+            _flush_once(eng, batch, r)
+        events.clear()
+        eng.stats = type(eng.stats)()   # per-flush byte accounting below
+        times = []
+        for r in range(REPS):
+            t0 = time.perf_counter()
+            _flush_once(eng, batch, 100 + r)
+            jax.block_until_ready(list(eng.pools.values()))
+            times.append(time.perf_counter() - t0)
+    finally:
+        fd.remove_launch_hook(hook)
+    bytes_moved = eng.stats.bytes_fpm + eng.stats.bytes_psm + \
+        eng.stats.bytes_baseline
+    bytes_moved += eng.stats.zero_materialized * eng._block_bytes()
+    bytes_moved //= REPS
+    return {
+        "batch": batch,
+        "path": "fused" if use_fused else "seed",
+        "launches_per_flush": len(events) / REPS,
+        "table_len": max((e[0] for e in events), default=0),
+        "us_per_flush": float(np.median(times) * 1e6),
+        "bytes_moved": int(bytes_moved),
+    }
+
+
+def run() -> Dict:
+    rows = []
+    for batch in BATCHES:
+        for use_fused in (True, False):
+            rows.append(_bench_path(use_fused, batch))
+    small_f = [r for r in rows if r["path"] == "fused" and r["batch"] <= 8]
+    small_s = [r for r in rows if r["path"] == "seed" and r["batch"] <= 8]
+    speedup = (np.mean([r["us_per_flush"] for r in small_s]) /
+               np.mean([r["us_per_flush"] for r in small_f]))
+    return {
+        "schema": "bench_dispatch/v1",
+        "backend": jax.default_backend(),
+        "block": list(BLOCK),
+        "nblk": NBLK,
+        "pools": ["k", "v"],
+        "rows": rows,
+        "summary": {"speedup_small_batch": float(speedup)},
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_dispatch.json")
+    args = ap.parse_args()
+    result = run()
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"{'batch':>6} {'path':>6} {'launches':>9} {'table':>6} "
+          f"{'us/flush':>10} {'MB moved':>9}")
+    for r in result["rows"]:
+        print(f"{r['batch']:>6} {r['path']:>6} "
+              f"{r['launches_per_flush']:>9.2f} {r['table_len']:>6} "
+              f"{r['us_per_flush']:>10.1f} "
+              f"{r['bytes_moved'] / 1e6:>9.1f}")
+    print(f"\nsmall-batch (<=8) dispatch speedup: "
+          f"{result['summary']['speedup_small_batch']:.2f}x  "
+          f"-> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

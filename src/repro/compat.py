@@ -1,0 +1,55 @@
+"""Version-compat shims for the moving parts of the jax API.
+
+``shard_map`` has lived in three places across jax releases:
+
+* jax >= 0.6:   ``jax.shard_map(f, mesh=..., check_vma=...)``
+* 0.4.x-0.5.x:  ``jax.experimental.shard_map.shard_map(f, mesh, ...,
+                check_rep=...)`` — same knob, pre-rename (``check_vma``
+                replaced ``check_rep`` when varying-manual-axes tracking
+                landed; for our usage — disabling the replication check —
+                the two are interchangeable).
+
+Everything in this repo imports ``shard_map`` from here and always passes
+``check_vma=``; the shim forwards to whichever spelling the installed jax
+understands.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:  # modern spelling
+    _shard_map = jax.shard_map
+except AttributeError:  # jax <= 0.5.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = inspect.signature(_shard_map).parameters
+_HAS_CHECK_VMA = "check_vma" in _PARAMS
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True, **kw):
+    """Uniform front-end: accepts ``check_vma`` on every jax version."""
+    if _HAS_CHECK_VMA:
+        kw["check_vma"] = check_vma
+    else:
+        kw["check_rep"] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
+
+
+def axis_size(axis_name):
+    """``jax.lax.axis_size`` (jax >= 0.6); older jax spells it as a psum of
+    ones over the named axis (identical value inside shard_map/pmap)."""
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def tpu_compiler_params(**kw):
+    """``pltpu.CompilerParams`` (jax >= 0.7) / ``pltpu.TPUCompilerParams``
+    (older).  Import is deferred so CPU-only code never pulls Pallas in."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kw)

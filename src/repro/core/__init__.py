@@ -2,6 +2,8 @@
 # copy (FPM/PSM), bulk init via reserved zero rows + lazy-zero (ZI), the
 # subarray-aware allocator, and the CoW paged KV cache built on them.
 from repro.core.allocator import AllocStats, OutOfBlocks, SubarrayAllocator
+from repro.core.cmdqueue import (BUCKETS, CommandQueue, QueueStats,
+                                 bucket_size)
 from repro.core.cow_cache import PagedCoWCache, Sequence
 from repro.core.rowclone import EngineStats, RowCloneEngine
 
@@ -9,6 +11,10 @@ __all__ = [
     "AllocStats",
     "OutOfBlocks",
     "SubarrayAllocator",
+    "BUCKETS",
+    "bucket_size",
+    "CommandQueue",
+    "QueueStats",
     "PagedCoWCache",
     "Sequence",
     "EngineStats",

@@ -1,0 +1,145 @@
+"""CommandQueue — the memory-controller command buffer for bulk movement.
+
+Paper §2.3: software issues ``memcopy``/``meminit``; the *memory controller*
+serializes the commands and drains them inside DRAM with no per-command CPU
+involvement.  The seed engine inverted that: every request batch ran
+host-side partitioning and then one device dispatch per mechanism per pool.
+This queue restores the paper's shape:
+
+* callers **enqueue** tagged commands (``OP_FPM_COPY``, ``OP_PSM_COPY``,
+  ``OP_BASELINE_COPY``, ``OP_ZERO_INIT``, ``OP_CROSS_POOL_COPY`` — see
+  kernels/fused_dispatch.py for the opcode table);
+* the device sees work only at **flush** boundaries (an attention step, a
+  benchmark tick, or an explicit ``flush()``) — one fused kernel launch per
+  flushed table, every pool moved in the same launch.
+
+Padding is **power-of-two bucketed** (8/32/128/512): a 3-command flush pads
+to 8, not to the seed's fixed 256, so small batches stop paying full-length
+gathers while the jit cache stays bounded (4 table shapes per pool
+structure).  Tables longer than the largest bucket are drained in overflow
+chunks instead of raising.
+
+Hazard guards (the MC's ordering rules): a command whose source was written
+by a pending command, or whose destination is already pending, triggers an
+automatic flush first — so within one table, gather-then-scatter semantics
+and the kernel's sequential DMA drain agree exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.kernels.fused_dispatch import (OP_BASELINE_COPY, OP_CROSS_POOL_COPY,
+                                          OP_FPM_COPY, OP_NOP, OP_PSM_COPY,
+                                          OP_ZERO_INIT)
+
+#: padding buckets — the only command-table lengths ever jit-compiled
+BUCKETS: Tuple[int, ...] = (8, 32, 128, 512)
+
+
+def bucket_size(n: int) -> int:
+    """Smallest bucket holding ``n`` commands (callers chunk above the top
+    bucket)."""
+    for b in BUCKETS:
+        if n <= b:
+            return b
+    return BUCKETS[-1]
+
+
+@dataclasses.dataclass
+class QueueStats:
+    enqueued: int = 0
+    flushes: int = 0           # explicit + boundary flushes that moved work
+    hazard_flushes: int = 0    # forced early by an ordering hazard
+    launches: int = 0          # device dispatches issued for flushed tables
+    max_pending: int = 0
+
+
+class CommandQueue:
+    """Accumulates ``(opcode, src, dst)`` commands for a RowCloneEngine and
+    drains them through the engine's fused dispatch at flush time."""
+
+    def __init__(self, engine):
+        self.engine = engine
+        self.stats = QueueStats()
+        self._cmds: List[Tuple[int, int, int]] = []
+        self._pending_dsts: Set[int] = set()
+
+    def __len__(self) -> int:
+        return len(self._cmds)
+
+    @property
+    def pending(self) -> List[Tuple[int, int, int]]:
+        return list(self._cmds)
+
+    # ------------------------------------------------------------------
+    def _hazard_keys(self, opcode: int, src: int,
+                     dst: int) -> Tuple[Optional[int], int]:
+        """Block-id keys used for ordering hazards.  CROSS_POOL ids are
+        stacked (pool*nblk + block); they fold back to plain block ids,
+        which is conservative (a same-id block in another pool also
+        flushes) but never unsafe."""
+        nblk = self.engine.num_blocks
+        if opcode == OP_CROSS_POOL_COPY:
+            return src % nblk, dst % nblk
+        if opcode == OP_ZERO_INIT:
+            return None, dst
+        return src, dst
+
+    def enqueue(self, opcode: int, src: int, dst: int) -> None:
+        skey, dkey = self._hazard_keys(opcode, src, dst)
+        if (skey is not None and skey in self._pending_dsts) \
+                or dkey in self._pending_dsts:
+            # read-after-write / write-after-write within one table would
+            # make gather-scatter and sequential drain diverge — drain first
+            self.stats.hazard_flushes += 1
+            self.flush()
+        self._cmds.append((int(opcode), int(src), int(dst)))
+        self._pending_dsts.add(dkey)
+        self.stats.enqueued += 1
+        self.stats.max_pending = max(self.stats.max_pending, len(self._cmds))
+
+    def enqueue_copy(self, opcode: int,
+                     pairs: Sequence[Tuple[int, int]]) -> None:
+        for s, d in pairs:
+            self.enqueue(opcode, s, d)
+
+    def enqueue_zero(self, ids: Sequence[int]) -> None:
+        for b in ids:
+            self.enqueue(OP_ZERO_INIT, -1, b)
+
+    # ------------------------------------------------------------------
+    def flush(self) -> int:
+        """Drain every pending command.  Returns the number of device
+        launches issued (0 when the queue was empty, 1 per bucket-padded
+        chunk otherwise)."""
+        if not self._cmds:
+            return 0
+        cmds, self._cmds = self._cmds, []
+        self._pending_dsts = set()
+        launches = 0
+        top = BUCKETS[-1]
+        for lo in range(0, len(cmds), top):
+            chunk = cmds[lo:lo + top]
+            table = np.full((bucket_size(len(chunk)), 3), OP_NOP, np.int32)
+            table[:len(chunk)] = np.asarray(chunk, np.int32)
+            launches += self.engine._dispatch_table(table, len(chunk))
+        self.stats.flushes += 1
+        self.stats.launches += launches
+        return launches
+
+
+__all__ = [
+    "BUCKETS",
+    "bucket_size",
+    "CommandQueue",
+    "QueueStats",
+    "OP_FPM_COPY",
+    "OP_PSM_COPY",
+    "OP_BASELINE_COPY",
+    "OP_ZERO_INIT",
+    "OP_CROSS_POOL_COPY",
+    "OP_NOP",
+]

@@ -18,7 +18,9 @@ block-table/owner/base arrays this cache rebuilds incrementally.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+# NB: no typing.Sequence import — the Sequence dataclass below would
+# shadow it (annotations here use List/Tuple instead)
+from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -73,21 +75,35 @@ class PagedCoWCache:
         self._dirty = True
         return sid
 
-    def fork(self, parent_id: int, n_children: int = 1) -> List[int]:
+    def fork(self, parent_id: int, n_children: int = 1,
+             eager_copy: bool = False) -> List[int]:
         """CoW fork: children share every parent block (refcount bump — the
-        in-cache-copy: zero bytes move now)."""
+        in-cache-copy: zero bytes move now).
+
+        ``eager_copy=True`` physically clones every block instead (callers
+        that know the children diverge immediately, e.g. beam search with
+        per-beam sampling state): destinations are allocated in the
+        source's slab (FPM placement) and all copies for all children
+        enqueue into the engine's command queue, draining as ONE fused
+        launch at the end of the fork."""
         parent = self.seqs[parent_id]
         out = []
-        for _ in range(n_children):
-            sid = self._next_id
-            self._next_id += 1
-            self.alloc.share(parent.blocks)
-            self.seqs[sid] = Sequence(sid, parent.length,
-                                      list(parent.blocks),
-                                      parent.slab_home)
-            slot = self._free_slots.pop()
-            self._slot_of[sid] = slot
-            out.append(sid)
+        with self.engine.batch():
+            for _ in range(n_children):
+                sid = self._next_id
+                self._next_id += 1
+                if eager_copy and parent.blocks:
+                    blocks = [self.alloc.alloc_near(b)
+                              for b in parent.blocks]
+                    self.engine.memcopy(list(zip(parent.blocks, blocks)))
+                else:
+                    self.alloc.share(parent.blocks)
+                    blocks = list(parent.blocks)
+                self.seqs[sid] = Sequence(sid, parent.length, blocks,
+                                          parent.slab_home)
+                slot = self._free_slots.pop()
+                self._slot_of[sid] = slot
+                out.append(sid)
         self._dirty = True
         return out
 
@@ -119,6 +135,15 @@ class PagedCoWCache:
                 self._dirty = True
         seq.length = pos + 1
         return seq.blocks[j], off
+
+    def append_tokens(self, seq_ids: List[int]) -> List[Tuple[int, int]]:
+        """One decode step for a batch of sequences: every CoW split and
+        tail-block init enqueues into the engine's command queue, and the
+        device sees exactly ONE fused launch at the flush boundary (the
+        seed path issued up to one launch per mechanism per pool *per
+        sequence*).  Returns [(block_id, offset), ...] in input order."""
+        with self.engine.batch():
+            return [self.append_token(sid) for sid in seq_ids]
 
     def free_sequence(self, seq_id: int) -> None:
         seq = self.seqs.pop(seq_id)

@@ -7,29 +7,45 @@ MC serializes the commands.  Here:
 * ``memcopy(pairs)``  — partitions (src, dst) block pairs by placement:
     - ``alias``  : dst unwritten + ZI enabled → refcount bump only
                    (in-cache copy: zero bytes move)
-    - ``fpm``    : same slab → per-slab DMA copy kernel under shard_map
-    - ``psm``    : cross-slab → collective transfer (ICI path)
+    - ``fpm``    : same slab → subarray-local DMA copy
+    - ``psm``    : cross-slab → serialized transfer (ICI path)
     - ``baseline``: RowClone disabled → copy through the compute pipeline
 * ``meminit(ids)``    — ZI lazy-zero bit when possible, else the zero-row
-                        DMA broadcast kernel.
+                        DMA broadcast.
 
-The engine owns the (possibly sharded) pool arrays and mirrors the
-allocator's placement metadata.  All jit'd data-plane calls use fixed-length
-id lists padded with -1 so shapes stay static.
+Dispatch is **queued and fused** (core/cmdqueue.py): classification tags
+each request with an opcode and enqueues it; at a flush boundary the whole
+table drains as ONE fused kernel launch moving every pool
+(kernels/fused_dispatch.py) — the MC command-drain analogue.  By default
+each public call flushes on return (eager, seed-compatible semantics);
+inside ``with engine.batch():`` commands accumulate and the device sees a
+single launch at exit — the attention-step / benchmark-tick boundary.
+
+Tables pad to power-of-two buckets (8/32/128/512, overflow chunked), not the
+seed's fixed ``max_requests`` length.  ``use_fused=False`` keeps the seed's
+per-mechanism, per-pool fan-out (one jit'd call per pool per mechanism,
+padded to ``max_requests``) for A/B benchmarking, and is also the path a
+multi-device mesh takes (per-slab shard_map dispatch).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.allocator import SubarrayAllocator
+from repro.core.cmdqueue import (CommandQueue, OP_BASELINE_COPY,
+                                 OP_CROSS_POOL_COPY, OP_FPM_COPY, OP_PSM_COPY,
+                                 OP_ZERO_INIT)
 from repro.kernels import ops as kops
+from repro.kernels.fused_dispatch import notify_launch
 from repro.models.paged import pool_shard_axes, pool_spec
 
 
@@ -39,12 +55,15 @@ class EngineStats:
     psm_copies: int = 0
     alias_copies: int = 0
     baseline_copies: int = 0
+    cross_pool_copies: int = 0
     zero_lazy: int = 0
     zero_materialized: int = 0
     bytes_fpm: int = 0
     bytes_psm: int = 0
     bytes_baseline: int = 0
+    bytes_cross: int = 0
     bytes_avoided: int = 0      # alias + lazy zero
+    launches: int = 0           # device dispatches issued for bulk movement
 
 
 class RowCloneEngine:
@@ -60,11 +79,17 @@ class RowCloneEngine:
                  mesh: Optional[Mesh] = None,
                  enable_fpm: bool = True, enable_psm: bool = True,
                  enable_zi: bool = True, max_requests: int = 256,
-                 block_axis: int = 0):
+                 block_axis: int = 0, use_fused: bool = True):
         """``block_axis``: which pool axis indexes blocks.  0 = flat pools
         (nblk, ...); 1 = layer-stacked serving pools (L, nblk, ...) where a
         logical block is L physical pages moved together (L independent
-        DMAs per request on TPU)."""
+        DMAs per request on TPU).
+
+        ``use_fused``: drain flushed command tables through the single
+        fused-dispatch launch (default).  False restores the seed's
+        per-mechanism, per-pool fan-out padded to ``max_requests`` — kept
+        for A/B benchmarking and used automatically under a multi-device
+        mesh, where dispatch runs per slab inside shard_map."""
         self.pools = dict(pools)
         self.alloc = allocator
         self.mesh = mesh
@@ -73,11 +98,23 @@ class RowCloneEngine:
         self.enable_zi = enable_zi
         self.max_requests = max_requests
         self.block_axis = block_axis
+        self.use_fused = use_fused
         self.stats = EngineStats()
+        self.queue = CommandQueue(self)
+        self.deferred = False
+        self._zero_blocks: Optional[Tuple[jnp.ndarray, ...]] = None
         nblk = next(iter(pools.values())).shape[block_axis]
         assert nblk == allocator.num_blocks
 
     # ------------------------------------------------------------------
+    @property
+    def num_blocks(self) -> int:
+        return self.alloc.num_blocks
+
+    def _multi_device(self) -> bool:
+        return self.mesh is not None and \
+            int(np.prod(self.mesh.devices.shape)) > 1
+
     def _block_bytes(self) -> int:
         total = 0
         for p in self.pools.values():
@@ -86,13 +123,55 @@ class RowCloneEngine:
             total += int(np.prod(shape)) * p.dtype.itemsize
         return total
 
+    def _pool_block_bytes(self, name: str) -> int:
+        p = self.pools[name]
+        shape = list(p.shape)
+        shape.pop(self.block_axis)
+        return int(np.prod(shape)) * p.dtype.itemsize
+
     def _pad(self, pairs: Sequence[Tuple[int, int]]) -> np.ndarray:
+        """Seed-style fixed-length padding (legacy fan-out path only)."""
         m = self.max_requests
         arr = np.full((m, 2), -1, np.int32)
         if pairs:
             a = np.asarray(pairs, np.int32)[:m]
             arr[: len(a)] = a
         return arr
+
+    def _get_zero_blocks(self) -> Tuple[jnp.ndarray, ...]:
+        """Per-pool reserved zero row for BuZ — allocated once."""
+        if self._zero_blocks is None:
+            zbs = []
+            for p in self.pools.values():
+                blk = p.shape[1:] if self.block_axis == 0 else p.shape[2:]
+                zbs.append(jnp.zeros((1,) + blk, p.dtype))
+            self._zero_blocks = tuple(zbs)
+        return self._zero_blocks
+
+    # ------------------------------------------------------------------
+    # flush control
+    # ------------------------------------------------------------------
+    def flush(self) -> int:
+        """Drain the command queue.  Returns device launches issued."""
+        return self.queue.flush()
+
+    def _autoflush(self) -> None:
+        if not self.deferred:
+            self.queue.flush()
+
+    @contextlib.contextmanager
+    def batch(self) -> Iterator[CommandQueue]:
+        """Defer flushing: commands enqueued inside the block drain as one
+        fused launch at exit (the attention-step flush boundary).  Pool
+        arrays are STALE inside the block — read them only after exit."""
+        prev = self.deferred
+        self.deferred = True
+        try:
+            yield self.queue
+        finally:
+            self.deferred = prev
+            if not self.deferred:
+                self.queue.flush()
 
     # ------------------------------------------------------------------
     # memcopy
@@ -106,94 +185,72 @@ class RowCloneEngine:
         aliasing at the cache layer instead; that path lives in
         cow_cache.fork() and never reaches here.
         """
-        fpm, psm, baseline, written = [], [], [], []
+        counts = {"fpm": 0, "psm": 0, "baseline": 0}
+        bb = self._block_bytes()
         for s, d in pairs:
             # ZI "in-cache copy" fast path: copying a lazily-zero block is a
             # metadata move — mark dst zero, move no bytes.
             if self.enable_zi and self.alloc.is_zero[s]:
                 self.alloc.mark_zero([d])
                 self.stats.alias_copies += 1
-                self.stats.bytes_avoided += self._block_bytes()
+                self.stats.bytes_avoided += bb
                 continue
-            written.append(d)
+            # mark the dst written NOW, not after the loop: a later pair in
+            # this same call may read it as a source (chained (a,b),(b,c))
+            # and must see it as real data, not stale lazy-zero metadata
+            self.alloc.mark_written([d])
             if not self.enable_fpm:
-                baseline.append((s, d))
+                op = OP_BASELINE_COPY
             elif self.alloc.slab_of(s) == self.alloc.slab_of(d):
-                fpm.append((s, d))
+                op = OP_FPM_COPY
             elif self.enable_psm:
-                psm.append((s, d))
+                op = OP_PSM_COPY
             else:
-                baseline.append((s, d))
-        if fpm:
-            self._fpm_copy(fpm)
-        if psm:
-            self._psm_copy(psm)
-        if baseline:
-            self._baseline_copy(baseline)
-        self.alloc.mark_written(written)
-        return {"fpm": len(fpm), "psm": len(psm), "baseline": len(baseline)}
+                op = OP_BASELINE_COPY
+            if op == OP_FPM_COPY:
+                counts["fpm"] += 1
+                self.stats.fpm_copies += 1
+                self.stats.bytes_fpm += bb
+            elif op == OP_PSM_COPY:
+                counts["psm"] += 1
+                self.stats.psm_copies += 1
+                self.stats.bytes_psm += bb
+            else:
+                counts["baseline"] += 1
+                self.stats.baseline_copies += 1
+                self.stats.bytes_baseline += bb
+            self.queue.enqueue(op, s, d)
+        self._autoflush()
+        return counts
 
-    # ------------------------------------------------------------------
-    def _fpm_copy(self, pairs: List[Tuple[int, int]]) -> None:
-        """Same-slab copies: per-slab DMA kernel.  Under a mesh the id lists
-        are grouped per slab and the kernel runs inside shard_map with local
-        ids; on one device it runs directly."""
-        self.stats.fpm_copies += len(pairs)
-        self.stats.bytes_fpm += len(pairs) * self._block_bytes()
-        if self.mesh is None or int(np.prod(self.mesh.devices.shape)) == 1:
-            ids = jnp.asarray(self._pad(pairs))
-            for name in self.pools:
-                if self.block_axis == 1:
-                    self.pools[name] = _fpm_axis1_jit(self.pools[name], ids)
-                else:
-                    self.pools[name] = kops.fpm_copy(self.pools[name], ids)
-            return
-        n_slabs = self.alloc.num_slabs
-        per_slab = np.full((n_slabs, self.max_requests, 2), -1, np.int32)
-        fill = np.zeros(n_slabs, np.int32)
-        ss = self.alloc.slab_size
+    def memcopy_cross(self, pairs: Sequence[Tuple[int, int]],
+                      src_pool: str, dst_pool: str) -> int:
+        """Pool-to-pool block copy (e.g. prefill staging pool → serving
+        pool) through the same queue: each pair becomes one
+        ``CROSS_POOL_COPY`` command with stacked ``pool*nblk + block`` ids,
+        so it rides the same fused launch as any pending copies/inits.
+        Source and destination pools must share block shape and dtype."""
+        names = list(self.pools)
+        ps, pd = names.index(src_pool), names.index(dst_pool)
+        nblk = self.num_blocks
+        bb = self._pool_block_bytes(dst_pool)
+        # a lazily-zero source physically holds stale bytes; the ZI bit is
+        # per *block* (all pools jointly), so materialize it before the
+        # pool-level copy (the hazard guard orders the zero before the copy)
+        lazy_srcs = [int(s) for s, _ in pairs
+                     if self.enable_zi and self.alloc.is_zero[s]]
+        if lazy_srcs:
+            self.materialize_zeros(lazy_srcs)
         for s, d in pairs:
-            sl = self.alloc.slab_of(s)
-            i = fill[sl]
-            if i >= self.max_requests:
-                raise ValueError("request list overflow; raise max_requests")
-            per_slab[sl, i] = (s % ss, d % ss)   # slab-local ids
-            fill[sl] += 1
-        ids = jnp.asarray(per_slab.reshape(n_slabs * self.max_requests, 2))
-        pspec = pool_spec(self.mesh)
-        idspec = pool_spec(self.mesh)
-
-        def run(pool_slab, ids_slab):
-            return kops.fpm_copy(pool_slab, ids_slab)
-
-        mapped = jax.shard_map(run, mesh=self.mesh,
-                               in_specs=(pspec, idspec), out_specs=pspec,
-                               check_vma=False)
-        for name in self.pools:
-            self.pools[name] = mapped(self.pools[name], ids)
-
-    # ------------------------------------------------------------------
-    def _psm_copy(self, pairs: List[Tuple[int, int]]) -> None:
-        """Cross-slab transfer over the interconnect (DRAM internal bus →
-        ICI).  Expressed as a global gather/scatter; XLA lowers the
-        cross-shard movement to collective-permutes — the pipelined serial
-        path — without any host round-trip."""
-        self.stats.psm_copies += len(pairs)
-        self.stats.bytes_psm += len(pairs) * self._block_bytes()
-        ids = jnp.asarray(self._pad(pairs))
-        fn = _fpm_axis1_jit if self.block_axis == 1 else _psm_jit
-        for name in self.pools:
-            self.pools[name] = fn(self.pools[name], ids)
-
-    def _baseline_copy(self, pairs: List[Tuple[int, int]]) -> None:
-        self.stats.baseline_copies += len(pairs)
-        self.stats.bytes_baseline += len(pairs) * self._block_bytes()
-        ids = jnp.asarray(self._pad(pairs))
-        for name in self.pools:
-            if self.block_axis == 1:
-                self.pools[name] = _baseline_axis1_jit(self.pools[name], ids)
-            else:
-                self.pools[name] = kops.baseline_copy(self.pools[name], ids)
+            self.queue.enqueue(OP_CROSS_POOL_COPY, ps * nblk + int(s),
+                               pd * nblk + int(d))
+            self.stats.cross_pool_copies += 1
+            self.stats.bytes_cross += bb
+            # dst now holds real data in dst_pool; a block can only carry
+            # the lazy-zero bit when every pool's bytes are logically zero
+            self.alloc.mark_written([int(d)])
+        self._autoflush()
+        return len(pairs)
 
     # ------------------------------------------------------------------
     # meminit
@@ -217,18 +274,187 @@ class RowCloneEngine:
         if not ids:
             return
         self.stats.zero_materialized += len(ids)
-        m = self.max_requests
-        arr = np.full((m,), -1, np.int32)
-        arr[: len(ids)] = np.asarray(ids[:m], np.int32)
-        idv = jnp.asarray(arr)
-        for name in self.pools:
-            pool = self.pools[name]
-            if self.block_axis == 1:
-                self.pools[name] = _zero_axis1_jit(pool, idv)
-            else:
-                zero_block = jnp.zeros((1,) + pool.shape[1:], pool.dtype)
-                self.pools[name] = kops.meminit_zero(pool, zero_block, idv)
+        self.queue.enqueue_zero(ids)
         self.alloc.mark_written(ids)  # physically zero: ordinary data now
+        self._autoflush()
+
+    # ------------------------------------------------------------------
+    # dispatch — called by CommandQueue.flush with a bucket-padded table
+    # ------------------------------------------------------------------
+    def _dispatch_table(self, table: np.ndarray, n_cmds: int) -> int:
+        """Execute one flushed command table.  Returns launches issued."""
+        if self.use_fused and not self._multi_device():
+            pools = tuple(self.pools.values())
+            new = kops.fused_dispatch(pools, self._get_zero_blocks(),
+                                      jnp.asarray(table),
+                                      block_axis=self.block_axis)
+            for name, arr in zip(self.pools, new):
+                self.pools[name] = arr
+            self.stats.launches += 1
+            return 1
+        return self._dispatch_legacy(table)
+
+    def _dispatch_legacy(self, table: np.ndarray) -> int:
+        """Seed-shaped fan-out: one device call per mechanism per pool,
+        padded to ``max_requests``.  Also the multi-device path (FPM runs
+        per slab inside shard_map).
+
+        Commands are batched per *consecutive run* of one opcode, in
+        enqueue order — NOT grouped across the whole table.  The hazard
+        guard permits write-after-read (a later command overwriting an
+        earlier command's source); whole-table grouping would reorder
+        those and diverge from the fused drain.  Within one run the
+        gather-then-scatter helpers read pre-run state, which the RAW/WAW
+        guards make equal to in-order semantics."""
+        rows = [(int(op), int(s), int(d)) for op, s, d in table if op >= 0]
+        launches = 0
+        i = 0
+        while i < len(rows):
+            op = rows[i][0]
+            j = i
+            while j < len(rows) and rows[j][0] == op:
+                j += 1
+            run = [(s, d) for _, s, d in rows[i:j]]
+            if op == OP_FPM_COPY:
+                launches += self._legacy_fpm(run)
+            elif op == OP_PSM_COPY:
+                launches += self._legacy_psm(run)
+            elif op == OP_BASELINE_COPY:
+                launches += self._legacy_baseline(run)
+            elif op == OP_ZERO_INIT:
+                launches += self._legacy_zero([d for _, d in run])
+            elif op == OP_CROSS_POOL_COPY:
+                launches += self._legacy_cross(run)
+            i = j
+        self.stats.launches += launches
+        return launches
+
+    # -- legacy per-mechanism fan-out (and the shard_map'd mesh path) ----
+    def _legacy_fpm(self, pairs: List[Tuple[int, int]]) -> int:
+        """Same-slab copies: per-slab DMA kernel.  Under a mesh the id lists
+        are grouped per slab and the kernel runs inside shard_map with local
+        ids; on one device it runs directly."""
+        launches = 0
+        if not self._multi_device():
+            for chunk in _chunks(pairs, self.max_requests):
+                ids = jnp.asarray(self._pad(chunk))
+                for name in self.pools:
+                    if self.block_axis == 1:
+                        self.pools[name] = _fpm_axis1_jit(self.pools[name],
+                                                          ids)
+                    else:
+                        self.pools[name] = kops.fpm_copy(self.pools[name],
+                                                         ids)
+                    notify_launch(self.max_requests, 1, "legacy_fpm")
+                    launches += 1
+            return launches
+        n_slabs = self.alloc.num_slabs
+        ss = self.alloc.slab_size
+        per_slab: List[List[Tuple[int, int]]] = [[] for _ in range(n_slabs)]
+        for s, d in pairs:
+            per_slab[self.alloc.slab_of(s)].append((s % ss, d % ss))
+        n_rounds = max(
+            (len(p) + self.max_requests - 1) // self.max_requests
+            for p in per_slab) if pairs else 0
+        pspec = pool_spec(self.mesh)
+
+        def run(pool_slab, ids_slab):
+            return kops.fpm_copy(pool_slab, ids_slab)
+
+        mapped = shard_map(run, mesh=self.mesh,
+                           in_specs=(pspec, pspec), out_specs=pspec,
+                           check_vma=False)
+        for r in range(n_rounds):   # overflow chunks, not ValueError
+            tbl = np.full((n_slabs, self.max_requests, 2), -1, np.int32)
+            lo, hi = r * self.max_requests, (r + 1) * self.max_requests
+            moved = 0
+            for sl in range(n_slabs):
+                chunk = per_slab[sl][lo:hi]
+                if chunk:
+                    tbl[sl, :len(chunk)] = chunk
+                    moved += len(chunk)
+            ids = jnp.asarray(tbl.reshape(n_slabs * self.max_requests, 2))
+            for name in self.pools:
+                self.pools[name] = mapped(self.pools[name], ids)
+                notify_launch(n_slabs * self.max_requests, 1,
+                              "legacy_fpm_mesh")
+                launches += 1
+        return launches
+
+    def _legacy_psm(self, pairs: List[Tuple[int, int]]) -> int:
+        """Cross-slab transfer over the interconnect (DRAM internal bus →
+        ICI).  Expressed as a global gather/scatter; XLA lowers the
+        cross-shard movement to collective-permutes — the pipelined serial
+        path — without any host round-trip."""
+        launches = 0
+        fn = _fpm_axis1_jit if self.block_axis == 1 else _psm_jit
+        for chunk in _chunks(pairs, self.max_requests):
+            ids = jnp.asarray(self._pad(chunk))
+            for name in self.pools:
+                self.pools[name] = fn(self.pools[name], ids)
+                notify_launch(self.max_requests, 1, "legacy_psm")
+                launches += 1
+        return launches
+
+    def _legacy_baseline(self, pairs: List[Tuple[int, int]]) -> int:
+        launches = 0
+        for chunk in _chunks(pairs, self.max_requests):
+            ids = jnp.asarray(self._pad(chunk))
+            for name in self.pools:
+                if self.block_axis == 1:
+                    self.pools[name] = _baseline_axis1_jit(self.pools[name],
+                                                           ids)
+                else:
+                    self.pools[name] = kops.baseline_copy(self.pools[name],
+                                                          ids)
+                notify_launch(self.max_requests, 1, "legacy_baseline")
+                launches += 1
+        return launches
+
+    def _legacy_zero(self, ids_list: List[int]) -> int:
+        launches = 0
+        m = self.max_requests
+        for chunk in _chunks(ids_list, m):
+            arr = np.full((m,), -1, np.int32)
+            arr[: len(chunk)] = np.asarray(chunk, np.int32)
+            idv = jnp.asarray(arr)
+            for name in self.pools:
+                pool = self.pools[name]
+                if self.block_axis == 1:
+                    self.pools[name] = _zero_axis1_jit(pool, idv)
+                else:
+                    zero_block = jnp.zeros((1,) + pool.shape[1:], pool.dtype)
+                    self.pools[name] = kops.meminit_zero(pool, zero_block,
+                                                         idv)
+                notify_launch(self.max_requests, 1, "legacy_zero")
+                launches += 1
+        return launches
+
+    def _legacy_cross(self, stacked_pairs: List[Tuple[int, int]]) -> int:
+        launches = 0
+        names = list(self.pools)
+        nblk = self.num_blocks
+        grouped: Dict[Tuple[int, int], List[Tuple[int, int]]] = {}
+        for s, d in stacked_pairs:
+            grouped.setdefault((s // nblk, d // nblk), []).append(
+                (s % nblk, d % nblk))
+        for (ps, pd), pairs in grouped.items():
+            for chunk in _chunks(pairs, self.max_requests):
+                ids = jnp.asarray(self._pad(chunk))
+                if self.block_axis == 1:
+                    self.pools[names[pd]] = _cross_axis1_jit(
+                        self.pools[names[pd]], self.pools[names[ps]], ids)
+                else:
+                    self.pools[names[pd]] = kops.fpm_copy_cross(
+                        self.pools[names[pd]], self.pools[names[ps]], ids)
+                notify_launch(self.max_requests, 1, "legacy_cross")
+                launches += 1
+        return launches
+
+
+def _chunks(seq, n):
+    for i in range(0, len(seq), n):
+        yield seq[i:i + n]
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -253,6 +479,15 @@ def _baseline_axis1_jit(pool, ids):
     rows = (rows.astype(jnp.float32) * 1.0).astype(pool.dtype)
     safe_dst = jnp.where(ids[:, 1] >= 0, ids[:, 1], pool.shape[1])
     return pool.at[:, safe_dst].set(rows, mode="drop")
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _cross_axis1_jit(dst_pool, src_pool, ids):
+    """Layer-stacked pool→pool copy: gather/scatter over the block axis 1."""
+    rows = src_pool[:, jnp.clip(ids[:, 0], 0, src_pool.shape[1] - 1)]
+    safe_dst = jnp.where(ids[:, 1] >= 0, ids[:, 1], dst_pool.shape[1])
+    return dst_pool.at[:, safe_dst].set(rows.astype(dst_pool.dtype),
+                                        mode="drop")
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))

@@ -1,5 +1,8 @@
 # Pallas TPU kernels for the perf-critical layers, each with a pure-jnp
 # oracle in ref.py and a jit'd public wrapper in ops.py:
+#   fused_dispatch  — ONE launch per CommandQueue flush: scalar-prefetched
+#                     [opcode,src,dst] table drained as back-to-back DMAs
+#                     over every pool (the MC command-serialization analogue)
 #   fpm_copy        — RowClone FPM: HBM->HBM DMA block copy (no compute)
 #   psm_transfer    — RowClone PSM: cross-chip RDMA block transfer (ICI),
 #                     pipelined; TARGET code (RDMA needs real TPU)

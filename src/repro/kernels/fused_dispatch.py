@@ -1,0 +1,213 @@
+"""Fused command-queue dispatch kernel — the MC's serialized command stream.
+
+RowClone's memory controller accepts a stream of copy/init commands and
+executes them back-to-back inside DRAM with no per-command CPU involvement
+(§2.3).  The seed engine betrayed that: one device dispatch per mechanism
+per pool (up to 8 launches for one mixed request batch).  This kernel is the
+TPU analogue of the MC's command queue drain: **one** ``pallas_call`` whose
+scalar-prefetched SMEM table is ``(m, 3)`` int32 ``[opcode, src, dst]`` rows;
+the grid body switches on the opcode and issues the corresponding HBM→HBM
+``make_async_copy`` (copies) or zero-row broadcast DMA (init), reusing the
+alternating-semaphore structure of the single-mechanism kernels it
+replaces (the drain itself is serial — each DMA completes before the
+next; see the note in the kernel body).  Multi-pool engines (K and V
+pages of one KV block) pass every pool to the same launch; each grid step
+moves the block in all of them.
+
+Opcodes (also the ``CommandQueue`` tags, core/cmdqueue.py):
+
+  ======================  ==  ==================================================
+  ``OP_FPM_COPY``          0  same-slab block copy (FPM — subarray-local DMA)
+  ``OP_PSM_COPY``          1  cross-slab copy (PSM; same DMA on a single slab)
+  ``OP_BASELINE_COPY``     2  RowClone-disabled copy (mechanism modeling only)
+  ``OP_ZERO_INIT``         3  BuZ — broadcast the reserved zero block into dst
+  ``OP_CROSS_POOL_COPY``   4  pool-to-pool copy; src/dst are *stacked* global
+                              ids ``pool_index * nblk + block`` (pools must
+                              share block shape and dtype)
+  ``OP_NOP``              -1  padding row (bucketed table), also ``dst == -1``
+  ======================  ==  ==================================================
+
+``block_axis=1`` handles layer-stacked serving pools ``(L, nblk, ...)``: the
+grid grows a layer dimension and each command becomes L independent DMAs, as
+in the seed's axis-1 path.
+
+CONTRACT (same as the per-mechanism kernels, now per *flush*): within one
+table, no row may read a block that an earlier row writes, and no two rows
+may write the same block — the CommandQueue's hazard guards auto-flush
+before either can occur.  Under that contract sources observe the
+pre-flush pool state (the kernel actually reads in place during the
+serial drain, which the guards make indistinguishable — and which lets
+the pools be aliased in-place with no snapshot copy).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+OP_NOP = -1
+OP_FPM_COPY = 0
+OP_PSM_COPY = 1
+OP_BASELINE_COPY = 2
+OP_ZERO_INIT = 3
+OP_CROSS_POOL_COPY = 4
+
+OPCODE_NAMES = {
+    OP_NOP: "nop",
+    OP_FPM_COPY: "fpm_copy",
+    OP_PSM_COPY: "psm_copy",
+    OP_BASELINE_COPY: "baseline_copy",
+    OP_ZERO_INIT: "zero_init",
+    OP_CROSS_POOL_COPY: "cross_pool_copy",
+}
+
+# ---------------------------------------------------------------------------
+# launch accounting — the hook tests and benchmarks use to assert "one
+# kernel launch per flush".  Every device dispatch of bulk-movement work
+# (fused or legacy per-op) reports here.
+# ---------------------------------------------------------------------------
+
+_LAUNCH_HOOKS: List[Callable[[int, int, str], None]] = []
+_LAUNCH_COUNT = 0
+
+
+def add_launch_hook(fn: Callable[[int, int, str], None]) -> None:
+    """Register ``fn(n_commands, n_pools, mechanism)`` to fire per launch."""
+    _LAUNCH_HOOKS.append(fn)
+
+
+def remove_launch_hook(fn: Callable[[int, int, str], None]) -> None:
+    _LAUNCH_HOOKS.remove(fn)
+
+
+def launch_count() -> int:
+    """Cumulative bulk-movement launches this process."""
+    return _LAUNCH_COUNT
+
+
+def notify_launch(n_commands: int, n_pools: int, mechanism: str) -> None:
+    global _LAUNCH_COUNT
+    _LAUNCH_COUNT += 1
+    for fn in _LAUNCH_HOOKS:
+        fn(n_commands, n_pools, mechanism)
+
+
+# ---------------------------------------------------------------------------
+# the kernel
+# ---------------------------------------------------------------------------
+
+def _make_kernel(n_pools: int, block_axis: int, nblk: int):
+    def kernel(cmds_ref, *refs):
+        zeros = refs[:n_pools]
+        # refs[n:2n] are the aliased (donated) pool inputs — never touched;
+        # both reads and writes go through ``outs`` (in place).  The drain
+        # is serial and the CommandQueue excludes read-after-write and
+        # write-after-write within a table, so in-place source reads equal
+        # pre-flush state reads — and no snapshot copy of the pools is
+        # ever materialized.
+        outs = refs[2 * n_pools:3 * n_pools]
+        sems = refs[3 * n_pools:3 * n_pools + 2]
+        reads = outs
+
+        i = pl.program_id(0)
+        op = cmds_ref[i, 0]
+        s = cmds_ref[i, 1]
+        d = cmds_ref[i, 2]
+        if block_axis == 1:
+            l = pl.program_id(1)
+            step = i * pl.num_programs(1) + l
+        else:
+            l = None
+            step = i
+
+        def blk(ref, b):
+            return ref.at[l, b] if block_axis == 1 else ref.at[b]
+
+        def issue(src, dst, sem):
+            cp = pltpu.make_async_copy(src, dst, sem)
+            cp.start()
+            cp.wait()
+
+        def dispatch(sem):
+            @pl.when((op == OP_FPM_COPY) | (op == OP_PSM_COPY) |
+                     (op == OP_BASELINE_COPY))
+            def _():
+                for p in range(n_pools):
+                    issue(blk(reads[p], s), blk(outs[p], d), sem)
+
+            @pl.when(op == OP_ZERO_INIT)
+            def _():
+                for p in range(n_pools):
+                    issue(zeros[p].at[0], blk(outs[p], d), sem)
+
+            @pl.when(op == OP_CROSS_POOL_COPY)
+            def _():
+                for ps in range(n_pools):
+                    for pd in range(n_pools):
+                        @pl.when((s // nblk == ps) & (d // nblk == pd))
+                        def _(ps=ps, pd=pd):
+                            issue(blk(reads[ps], s % nblk),
+                                  blk(outs[pd], d % nblk), sem)
+
+        # Semaphores alternate by grid-step parity, mirroring the seed
+        # per-mechanism kernels.  NOTE: with start() immediately followed
+        # by wait() the drain is fully serial — the parity split is the
+        # slot structure for a future overlapped drain (wait one step
+        # behind), which would also need source-hazard tracking in the
+        # CommandQueue (it guards pending *destinations* only).
+        @pl.when((op >= 0) & (d >= 0))
+        def _():
+            @pl.when(step % 2 == 0)
+            def _():
+                dispatch(sems[0])
+
+            @pl.when(step % 2 == 1)
+            def _():
+                dispatch(sems[1])
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_axis", "interpret"),
+                   donate_argnums=(2,))
+def _fused_dispatch_jit(cmds, zero_blocks, pools, *, block_axis: int,
+                        interpret: bool):
+    n_pools = len(pools)
+    nblk = pools[0].shape[block_axis]
+    grid = ((cmds.shape[0],) if block_axis == 0
+            else (cmds.shape[0], pools[0].shape[0]))
+    return pl.pallas_call(
+        _make_kernel(n_pools, block_axis, nblk),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * (2 * n_pools),
+            out_specs=[pl.BlockSpec(memory_space=pl.ANY)] * n_pools,
+            scratch_shapes=[pltpu.SemaphoreType.DMA,
+                            pltpu.SemaphoreType.DMA],
+        ),
+        out_shape=[jax.ShapeDtypeStruct(p.shape, p.dtype) for p in pools],
+        # operand order: cmds, zeros (n), donated pools (n); pools are
+        # passed ONCE and aliased — the kernel works in place, so no
+        # full-pool snapshot copy is inserted by XLA
+        input_output_aliases={1 + n_pools + p: p for p in range(n_pools)},
+        interpret=interpret,
+    )(cmds, *zero_blocks, *pools)
+
+
+def fused_dispatch_pallas(pools: Sequence, zero_blocks: Sequence, cmds, *,
+                          block_axis: int = 0,
+                          interpret: bool = False) -> Tuple:
+    """Execute one flushed command table over every pool in ONE launch.
+
+    pools:       sequence of (nblk, ...) or (L, nblk, ...) arrays (donated)
+    zero_blocks: per-pool reserved zero row, shape (1,) + block_shape
+    cmds:        (m, 3) int32 [opcode, src, dst]; OP_NOP/-1 rows are padding
+    """
+    out = _fused_dispatch_jit(cmds, tuple(zero_blocks), tuple(pools),
+                              block_axis=block_axis, interpret=interpret)
+    notify_launch(int(cmds.shape[0]), len(out), "fused")
+    return tuple(out)

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.kernels import ref as kref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.fpm_copy import fpm_copy_cross_pallas, fpm_copy_pallas
+from repro.kernels.fused_dispatch import fused_dispatch_pallas, notify_launch
 from repro.kernels.paged_attention import paged_attention_slab_pallas
 from repro.kernels.ssd_chunk import ssd_intra_chunk_pallas
 from repro.kernels.zero_init import zero_init_pallas
@@ -29,23 +30,26 @@ def _interpret() -> bool:
     return not _on_tpu()
 
 
+def _resolve_use_pallas(use_pallas: Optional[bool]) -> bool:
+    """The one resolution rule for every op: ``None`` means "Pallas on TPU,
+    reference elsewhere"; an explicit bool always wins (tests pass ``True``
+    with interpret mode to execute the kernel bodies on CPU)."""
+    return _on_tpu() if use_pallas is None else bool(use_pallas)
+
+
 # ---------------------------------------------------------------------------
 # RowClone primitives
 # ---------------------------------------------------------------------------
 
 def fpm_copy(pool, ids, *, use_pallas: Optional[bool] = None):
     """In-pool FPM block copy.  ids: (m,2) [src,dst], dst=-1 skips."""
-    if use_pallas is None:
-        use_pallas = _on_tpu()
-    if use_pallas or use_pallas is None:
+    if _resolve_use_pallas(use_pallas):
         return fpm_copy_pallas(pool, ids, interpret=_interpret())
     return kref.fpm_copy(pool, ids[:, 0], ids[:, 1])
 
 
 def fpm_copy_cross(dst_pool, src_pool, ids, *, use_pallas: Optional[bool] = None):
-    if use_pallas is None:
-        use_pallas = _on_tpu()
-    if use_pallas:
+    if _resolve_use_pallas(use_pallas):
         return fpm_copy_cross_pallas(dst_pool, src_pool, ids,
                                      interpret=_interpret())
     return kref.fpm_copy_cross(dst_pool, src_pool, ids[:, 0], ids[:, 1])
@@ -53,11 +57,34 @@ def fpm_copy_cross(dst_pool, src_pool, ids, *, use_pallas: Optional[bool] = None
 
 def meminit_zero(pool, zero_block, ids, *, use_pallas: Optional[bool] = None):
     """BuZ: DMA-broadcast the reserved zero block into ``ids``."""
-    if use_pallas is None:
-        use_pallas = _on_tpu()
-    if use_pallas:
+    if _resolve_use_pallas(use_pallas):
         return zero_init_pallas(pool, zero_block, ids, interpret=_interpret())
     return kref.zero_init(pool, ids)
+
+
+@functools.partial(jax.jit, static_argnames=("block_axis",),
+                   donate_argnums=(2,))
+def _fused_ref_jit(cmds, zero_blocks, pools, *, block_axis):
+    return kref.fused_dispatch(pools, zero_blocks, cmds,
+                               block_axis=block_axis)
+
+
+def fused_dispatch(pools, zero_blocks, cmds, *, block_axis: int = 0,
+                   use_pallas: Optional[bool] = None):
+    """One launch for a whole flushed command table over every pool.
+
+    See kernels/fused_dispatch.py for the opcode table and contract.  On
+    CPU the jit'd reference executes (one dispatch, HLO-small); tests force
+    ``use_pallas=True`` to run the kernel body in interpret mode.
+    """
+    if _resolve_use_pallas(use_pallas):
+        return fused_dispatch_pallas(pools, zero_blocks, cmds,
+                                     block_axis=block_axis,
+                                     interpret=_interpret())
+    out = _fused_ref_jit(cmds, tuple(zero_blocks), tuple(pools),
+                         block_axis=block_axis)
+    notify_launch(int(cmds.shape[0]), len(out), "fused")
+    return tuple(out)
 
 
 def baseline_copy(pool, ids):
@@ -80,9 +107,7 @@ def psm_transfer(pool_slab, ids, *, axis_name: str = "model"):
 
 def paged_attention_slab(q, k_slab, v_slab, share_mask, base, seq_lens, *,
                          page: int, use_pallas: Optional[bool] = None):
-    if use_pallas is None:
-        use_pallas = _on_tpu()
-    if use_pallas:
+    if _resolve_use_pallas(use_pallas):
         return paged_attention_slab_pallas(q, k_slab, v_slab, share_mask,
                                            base, seq_lens, page=page,
                                            interpret=_interpret())
@@ -93,9 +118,7 @@ def paged_attention_slab(q, k_slab, v_slab, share_mask, base, seq_lens, *,
 def flash_attention(q, k, v, *, causal=True, prefix_len=0,
                     use_pallas: Optional[bool] = None):
     """q: (B,H,S,D); k/v: (B,KVH,S,D)."""
-    if use_pallas is None:
-        use_pallas = _on_tpu()
-    if use_pallas:
+    if _resolve_use_pallas(use_pallas):
         return flash_attention_pallas(q, k, v, causal=causal,
                                       prefix_len=prefix_len,
                                       interpret=_interpret())
@@ -109,9 +132,7 @@ def flash_attention(q, k, v, *, causal=True, prefix_len=0,
 
 
 def ssd_intra_chunk(xb, dtb, cum, Bb, Cb, *, use_pallas: Optional[bool] = None):
-    if use_pallas is None:
-        use_pallas = _on_tpu()
-    if use_pallas:
+    if _resolve_use_pallas(use_pallas):
         return ssd_intra_chunk_pallas(xb, dtb, cum, Bb, Cb,
                                       interpret=_interpret())
     from repro.models.mamba2 import _ssd_intra_chunk_jnp

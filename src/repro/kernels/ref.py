@@ -50,6 +50,62 @@ def zero_init(pool, ids, fill_value=0.0):
 
 
 # ---------------------------------------------------------------------------
+# Fused command-queue dispatch — one call applies a whole flushed command
+# table (kernels/fused_dispatch.py) to every pool.  Semantics: gather every
+# source row from the PRE-flush pool state, then scatter — equivalent to the
+# kernel's sequential DMA drain under the CommandQueue's hazard guards (no
+# row reads or rewrites a block an earlier row writes).
+# ---------------------------------------------------------------------------
+
+def fused_dispatch(pools, zero_blocks, cmds, block_axis=0):
+    """pools: sequence of (nblk, ...) or (L, nblk, ...); zero_blocks: per-
+    pool (1,) + block_shape; cmds: (m, 3) int32 [opcode, src, dst]."""
+    from repro.kernels.fused_dispatch import (OP_CROSS_POOL_COPY,
+                                              OP_ZERO_INIT)
+    pools = list(pools)
+    n = len(pools)
+    ba = block_axis
+    nblk = pools[0].shape[ba]
+    op, s, d = cmds[:, 0], cmds[:, 1], cmds[:, 2]
+    is_cross = op == OP_CROSS_POOL_COPY
+    s_loc = jnp.where(is_cross, s % nblk, s)
+    d_loc = jnp.where(is_cross, d % nblk, d)
+
+    def gather(arr, idx):
+        cl = jnp.clip(idx, 0, arr.shape[ba] - 1)
+        return arr[cl] if ba == 0 else arr[:, cl]
+
+    def expand(cond, rows):
+        shape = [1] * rows.ndim
+        shape[ba] = cond.shape[0]
+        return cond.reshape(shape)
+
+    out = []
+    for pd in range(n):
+        pool = pools[pd]
+        rows = gather(pool, s_loc)
+        for ps in range(n):
+            if ps == pd:
+                continue
+            sel = is_cross & (s // nblk == ps)
+            rows = jnp.where(expand(sel, rows), gather(pools[ps], s_loc),
+                             rows)
+        zb = zero_blocks[pd].astype(pool.dtype)
+        if ba == 0:
+            zrows = jnp.broadcast_to(zb, (cmds.shape[0],) + pool.shape[1:])
+        else:
+            zrows = jnp.broadcast_to(
+                zb.reshape((1, 1) + zb.shape[1:]),
+                (pool.shape[0], cmds.shape[0]) + pool.shape[2:])
+        rows = jnp.where(expand(op == OP_ZERO_INIT, rows), zrows, rows)
+        valid = (op >= 0) & (d >= 0) & (~is_cross | (d // nblk == pd))
+        safe = jnp.where(valid, d_loc, nblk)
+        out.append(pool.at[safe].set(rows, mode="drop") if ba == 0
+                   else pool.at[:, safe].set(rows, mode="drop"))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
 # Baseline copy — what RowClone replaces: stream blocks through the compute
 # pipeline (HBM -> VMEM -> VREG -> VMEM -> HBM).  Numerically identical to
 # fpm_copy; exists so benchmarks can compare mechanisms.

@@ -142,9 +142,10 @@ class ServingEngine:
             lg = self.last_logits[sid]
             t = int(np.argmax(lg)) if sample_fn is None else sample_fn(lg)
             next_tok[sid] = t
-        # CoW/allocation happens BEFORE the jit step (host metadata)
-        for sid in live:
-            self.cache.append_token(sid)
+        # CoW/allocation happens BEFORE the jit step (host metadata); all
+        # CoW splits + tail-block inits for the round drain as ONE fused
+        # launch at the attention-step flush boundary
+        self.cache.append_tokens(live)
         table, mask, base = self.cache.device_tables()
         lens = self.cache.seq_lens()
         B = self.cache.max_seqs

@@ -22,8 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-shard_map = jax.shard_map
-
+from repro.compat import axis_size as compat_axis_size, shard_map
 from repro.models.attention import lse_combine, paged_attention_slab
 
 
@@ -136,7 +135,7 @@ def _slab_offset(pool_axes: Tuple[str, ...], slab: int):
     block dimension *in shard order*."""
     idx = jnp.int32(0)
     for a in pool_axes:
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        idx = idx * compat_axis_size(a) + jax.lax.axis_index(a)
     return idx * slab
 
 

@@ -1,0 +1,94 @@
+"""Property-testing front-end: real hypothesis when installed, else a
+minimal deterministic fallback.
+
+The test image does not always ship ``hypothesis`` (the seed suite failed at
+*collection* on it).  The fallback below implements just the surface these
+tests use — ``given``, ``settings``, ``st.integers/lists/sampled_from/data``
+— running each property over a fixed number of seeded-random examples.  It
+is intentionally dumb: no shrinking, no database, no reproduction strings —
+but the properties still execute and still catch regressions.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def example(self, rng):
+            return self._sample(rng)
+
+    class _DataStrategy:
+        """Marker for ``st.data()``."""
+
+    class _DataObject:
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy, label=None):
+            return strategy.example(self._rng)
+
+    class _Namespace:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10, unique=False):
+            def sample(rng):
+                n = rng.randint(min_size, max_size)
+                if not unique:
+                    return [elem.example(rng) for _ in range(n)]
+                out = set()
+                # elem domains in these tests are comfortably larger than n
+                for _ in range(10000):
+                    if len(out) == n:
+                        break
+                    out.add(elem.example(rng))
+                if len(out) != n:
+                    raise ValueError("could not draw enough unique elements")
+                return list(out)
+            return _Strategy(sample)
+
+        @staticmethod
+        def data():
+            return _DataStrategy()
+
+    st = _Namespace()
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            def wrapper():
+                n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+                for ex in range(n):
+                    rng = random.Random(0xC0DE + ex)
+                    args = [
+                        _DataObject(rng) if isinstance(s, _DataStrategy)
+                        else s.example(rng)
+                        for s in strategies
+                    ]
+                    fn(*args)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco

@@ -1,0 +1,430 @@
+"""Fused command-queue dispatch: parity with the seed per-op path, launch
+counting, bucketed padding, hazard guards, and the batched CoW-cache step.
+
+Parity is checked at two layers:
+* kernel: ``fused_dispatch_pallas`` (interpret=True — the actual kernel
+  body on CPU) vs the jnp reference vs the seed per-op oracles;
+* engine: ``use_fused=True`` vs ``use_fused=False`` (the seed fan-out,
+  byte-for-byte), with the fused engine optionally forced through the
+  interpret-mode kernel.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BUCKETS, PagedCoWCache, RowCloneEngine,
+                        SubarrayAllocator, bucket_size)
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.kernels import fused_dispatch as fd
+from repro.kernels.fused_dispatch import (OP_BASELINE_COPY,
+                                          OP_CROSS_POOL_COPY, OP_FPM_COPY,
+                                          OP_NOP, OP_PSM_COPY, OP_ZERO_INIT,
+                                          add_launch_hook,
+                                          fused_dispatch_pallas,
+                                          remove_launch_hook)
+
+
+class LaunchRecorder:
+    """The launch-count hook: records (n_commands, n_pools, mechanism)."""
+
+    def __init__(self):
+        self.events = []
+
+    def __call__(self, n, p, mech):
+        self.events.append((n, p, mech))
+
+    def __enter__(self):
+        add_launch_hook(self)
+        return self
+
+    def __exit__(self, *exc):
+        remove_launch_hook(self)
+
+
+def _mk_pools(nblk, block_axis, seed=0, dtype=jnp.float32):
+    shape = (nblk, 4, 8) if block_axis == 0 else (3, nblk, 4, 8)
+    k = jax.random.normal(jax.random.key(seed), shape).astype(dtype)
+    v = jax.random.normal(jax.random.key(seed + 1), shape).astype(dtype)
+    zb = jnp.zeros((1, 4, 8), dtype)
+    return (k, v), (zb, zb)
+
+
+def _mixed_cmds(nblk, n, rng):
+    """n mixed commands with disjoint sources/destinations (the flush
+    contract the CommandQueue guarantees)."""
+    ids = rng.permutation(nblk)
+    half = nblk // 2
+    srcs, dsts = ids[:half], ids[half:]
+    ops = [OP_FPM_COPY, OP_PSM_COPY, OP_BASELINE_COPY, OP_ZERO_INIT]
+    rows = []
+    for i in range(n):
+        op = ops[i % len(ops)]
+        s = -1 if op == OP_ZERO_INIT else int(srcs[i % half])
+        rows.append((op, s, int(dsts[i % (nblk - half)])))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# kernel-level parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("block_axis", [0, 1])
+@pytest.mark.parametrize("n_cmds", [3, 8, 20])
+def test_fused_kernel_matches_seed_per_op_path(block_axis, n_cmds):
+    """One fused launch == the seed's per-mechanism oracles applied to the
+    same (disjoint) command set, bitwise."""
+    nblk = 48
+    rng = np.random.default_rng(block_axis * 100 + n_cmds)
+    pools, zbs = _mk_pools(nblk, block_axis)
+    rows = _mixed_cmds(nblk, n_cmds, rng)
+    table = np.full((bucket_size(n_cmds), 3), OP_NOP, np.int32)
+    table[:n_cmds] = rows
+    cmds = jnp.asarray(table)
+
+    out_k = fused_dispatch_pallas([p.copy() for p in pools], zbs, cmds,
+                                  block_axis=block_axis, interpret=True)
+    out_r = kref.fused_dispatch(pools, zbs, cmds, block_axis=block_axis)
+
+    # seed path: per-mechanism per-pool
+    copy_pairs = [(s, d) for op, s, d in rows if op != OP_ZERO_INIT]
+    zero_ids = [d for op, _, d in rows if op == OP_ZERO_INIT]
+    cp = jnp.asarray(np.asarray(copy_pairs, np.int32))
+    zi = jnp.asarray(np.asarray(zero_ids, np.int32))
+    seed_out = []
+    for p, zb in zip(pools, zbs):
+        if block_axis == 0:
+            p = kref.fpm_copy(p, cp[:, 0], cp[:, 1])
+            p = kref.zero_init(p, zi)
+        else:
+            rows_g = p[:, jnp.clip(cp[:, 0], 0, nblk - 1)]
+            p = p.at[:, cp[:, 1]].set(rows_g)
+            fill = jnp.zeros((p.shape[0], zi.shape[0]) + p.shape[2:],
+                             p.dtype)
+            p = p.at[:, zi].set(fill)
+        seed_out.append(p)
+
+    for a, b, c in zip(out_k, out_r, seed_out):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+@pytest.mark.parametrize("block_axis", [0, 1])
+def test_fused_kernel_cross_pool(block_axis):
+    """CROSS_POOL_COPY moves k[s] into v[d] (stacked global ids)."""
+    nblk = 16
+    pools, zbs = _mk_pools(nblk, block_axis, seed=7)
+    cmds = jnp.asarray(np.array(
+        [[OP_CROSS_POOL_COPY, 0 * nblk + 4, 1 * nblk + 13],
+         [OP_CROSS_POOL_COPY, 1 * nblk + 2, 0 * nblk + 9],
+         [OP_NOP, -1, -1], [OP_NOP, -1, -1],
+         [OP_NOP, -1, -1], [OP_NOP, -1, -1],
+         [OP_NOP, -1, -1], [OP_NOP, -1, -1]], np.int32))
+    out = fused_dispatch_pallas([p.copy() for p in pools], zbs, cmds,
+                                block_axis=block_axis, interpret=True)
+    k, v = pools
+    sl = (slice(None), 4) if block_axis == 1 else (4,)
+    dl = (slice(None), 13) if block_axis == 1 else (13,)
+    np.testing.assert_array_equal(np.asarray(out[1])[dl if block_axis == 0
+                                                     else (slice(None), 13)],
+                                  np.asarray(k)[sl])
+    if block_axis == 0:
+        np.testing.assert_array_equal(np.asarray(out[0])[9],
+                                      np.asarray(v)[2])
+    else:
+        np.testing.assert_array_equal(np.asarray(out[0])[:, 9],
+                                      np.asarray(v)[:, 2])
+
+
+# ---------------------------------------------------------------------------
+# engine-level parity: fused flush vs seed fan-out
+# ---------------------------------------------------------------------------
+
+def _mk_engine(nblk=64, nslabs=4, block_axis=0, use_fused=True, seed=0,
+               **kw):
+    alloc = SubarrayAllocator(nblk, nslabs, reserved_zero_per_slab=1)
+    shape = (nblk, 8, 2, 16) if block_axis == 0 else (2, nblk, 8, 16)
+    pools = {
+        "k": jax.random.normal(jax.random.key(seed), shape),
+        "v": jax.random.normal(jax.random.key(seed + 1), shape),
+    }
+    eng = RowCloneEngine(pools, alloc, mesh=None, max_requests=256,
+                         block_axis=block_axis, use_fused=use_fused, **kw)
+    return eng
+
+
+def _drive(eng, rng, n_copies, n_zeros):
+    """Issue one deferred batch of mixed copies + zero-inits and flush."""
+    nblk = eng.num_blocks
+    ids = rng.permutation(nblk)
+    ids = ids[~np.isin(ids, eng.alloc.zero_rows)]
+    srcs = [int(b) for b in ids[:n_copies]]
+    dsts = [int(b) for b in ids[n_copies:2 * n_copies]]
+    zeros = [int(b) for b in ids[2 * n_copies:2 * n_copies + n_zeros]]
+    eng.alloc.mark_written(srcs)
+    with eng.batch():
+        eng.memcopy(list(zip(srcs, dsts)))
+        eng.materialize_zeros(zeros)
+
+
+@pytest.mark.parametrize("block_axis", [0, 1])
+@pytest.mark.parametrize("interpret_kernel", [False, True])
+def test_engine_fused_matches_seed_fanout(block_axis, interpret_kernel,
+                                          monkeypatch):
+    """Mixed FPM/PSM/zero flush: fused engine pools are bitwise identical
+    to the seed per-op fan-out engine, via both the jnp reference and the
+    interpret-mode kernel body."""
+    if interpret_kernel:
+        orig = kops.fused_dispatch
+        monkeypatch.setattr(
+            kops, "fused_dispatch",
+            lambda *a, **kw: orig(*a, **{**kw, "use_pallas": True}))
+    rng = np.random.default_rng(42)
+    fused = _mk_engine(block_axis=block_axis, use_fused=True)
+    legacy = _mk_engine(block_axis=block_axis, use_fused=False)
+    for eng in (fused, legacy):
+        _drive(eng, np.random.default_rng(7), n_copies=9, n_zeros=4)
+    assert fused.stats.fpm_copies == legacy.stats.fpm_copies
+    assert fused.stats.psm_copies == legacy.stats.psm_copies
+    for name in fused.pools:
+        np.testing.assert_array_equal(np.asarray(fused.pools[name]),
+                                      np.asarray(legacy.pools[name]))
+    assert fused.stats.launches == 1
+    assert legacy.stats.launches > 1  # the fan-out this PR removes
+
+
+@pytest.mark.parametrize("n", [1, 5, 8, 9, 30, 127, 200])
+def test_bucketed_padding(n):
+    """Tables pad to the smallest power-of-two bucket, not a fixed 256."""
+    eng = _mk_engine(nblk=512, nslabs=4)
+    rng = np.random.default_rng(n)
+    with LaunchRecorder() as rec:
+        _drive(eng, rng, n_copies=n, n_zeros=0)
+    assert len(rec.events) == 1
+    assert rec.events[0][0] == bucket_size(n)
+    assert rec.events[0][1] == 2  # k and v moved in the same launch
+
+
+def test_overflow_chunks_instead_of_raising():
+    """> top bucket commands drain in ceil(n/512) launches (seed raised
+    ValueError on the mesh path and silently truncated on one device)."""
+    nblk = 2048
+    eng = _mk_engine(nblk=nblk, nslabs=4)
+    srcs = list(range(0, 600))
+    dsts = list(range(1024, 1624))
+    eng.alloc.mark_written(srcs)
+    with LaunchRecorder() as rec:
+        with eng.batch():
+            eng.memcopy(list(zip(srcs, dsts)))
+    assert len(rec.events) == 2
+    assert rec.events[0][0] == BUCKETS[-1]
+    assert rec.events[1][0] == bucket_size(600 - BUCKETS[-1])
+    # spot-check content actually moved
+    np.testing.assert_array_equal(np.asarray(eng.pools["k"][1623]),
+                                  np.asarray(eng.pools["k"][599]))
+
+
+def test_hazard_guard_read_after_write_autoflushes():
+    """b -> c after a -> b in one deferred batch must see a's data in b:
+    the queue flushes the first table before accepting the dependent
+    command."""
+    eng = _mk_engine()
+    a, b, c = 5, 9, 13
+    eng.alloc.mark_written([a, b, c])
+    want_b = np.asarray(eng.pools["k"][a])
+    with eng.batch():
+        eng.memcopy([(a, b)])
+        assert len(eng.queue) == 1
+        eng.memcopy([(b, c)])       # hazard: src b is a pending dst
+    assert eng.queue.stats.hazard_flushes == 1
+    np.testing.assert_array_equal(np.asarray(eng.pools["k"][b]), want_b)
+    np.testing.assert_array_equal(np.asarray(eng.pools["k"][c]), want_b)
+
+
+def test_memcopy_chained_through_lazy_zero_dst():
+    """(a, b), (b, c) in ONE call where b was lazy-zero: b must be treated
+    as real data once the a->b copy is enqueued, so c receives a's bytes —
+    not the stale ZI alias (regression: mark_written ran after the loop)."""
+    eng = _mk_engine()
+    a, b, c = 5, 9, 13
+    eng.alloc.mark_written([a])
+    eng.alloc.mark_zero([b])
+    want = np.asarray(eng.pools["k"][a])
+    eng.memcopy([(a, b), (b, c)])
+    assert not eng.alloc.is_zero[c]
+    assert eng.stats.alias_copies == 0
+    np.testing.assert_array_equal(np.asarray(eng.pools["k"][c]), want)
+
+
+def test_memcopy_cross_keeps_zi_metadata_sound():
+    """Cross-pool copies must not leave stale ZI bits: a lazy-zero source
+    materializes first (its physical bytes are garbage), and the dst loses
+    any lazy-zero marking so later copies don't alias real data as zero."""
+    eng = _mk_engine(seed=21)
+    s, d, e = 5, 9, 13
+    eng.alloc.mark_zero([s, d])
+    eng.memcopy_cross([(s, d)], "k", "v")
+    # lazy-zero source -> dst receives zeros, not the stale pool bytes
+    assert float(jnp.abs(eng.pools["v"][d]).max()) == 0.0
+    assert not eng.alloc.is_zero[d]
+    # a later copy from d must move bytes, not take the alias fast path
+    eng.memcopy([(d, e)])
+    assert eng.stats.alias_copies == 0
+    assert not eng.alloc.is_zero[e]
+
+
+def test_engine_cross_pool_copy_matches_seed_cross():
+    eng = _mk_engine(seed=3)
+    ref = kref.fpm_copy_cross(eng.pools["v"], eng.pools["k"],
+                              jnp.asarray([2, 7], jnp.int32),
+                              jnp.asarray([11, 23], jnp.int32))
+    with LaunchRecorder() as rec:
+        eng.memcopy_cross([(2, 11), (7, 23)], "k", "v")
+    assert [e[2] for e in rec.events] == ["fused"]
+    np.testing.assert_array_equal(np.asarray(eng.pools["v"]),
+                                  np.asarray(ref))
+    assert eng.stats.cross_pool_copies == 2
+
+
+# ---------------------------------------------------------------------------
+# the acceptance scenario: one launch per flush for a mixed {"k","v"} batch
+# ---------------------------------------------------------------------------
+
+def test_mixed_batch_one_launch_per_flush():
+    """N copies + zero-inits over a {"k","v"} pool pair: exactly ONE kernel
+    launch at the flush boundary (the seed issued up to one per mechanism
+    per pool)."""
+    eng = _mk_engine(nblk=64, nslabs=4)
+    srcs = [1, 2, 3, 17, 18]          # slabs 0 and 1 -> FPM + PSM mix
+    dsts = [4, 5, 33, 49, 50]
+    zeros = [6, 7, 21]
+    eng.alloc.mark_written(srcs)
+    with LaunchRecorder() as rec:
+        with eng.batch():
+            eng.memcopy(list(zip(srcs, dsts)))
+            eng.materialize_zeros(zeros)
+        assert len(rec.events) == 1
+        assert rec.events[0][1] == 2
+        assert rec.events[0][2] == "fused"
+    counts = {"fpm": eng.stats.fpm_copies, "psm": eng.stats.psm_copies}
+    assert counts["fpm"] > 0 and counts["psm"] > 0
+    assert eng.stats.zero_materialized == 3
+    assert eng.stats.launches == 1
+
+
+def test_cow_cache_batched_step_single_launch():
+    """A decode round over forked sequences: every CoW split + tail init in
+    ONE launch, with results identical to the per-sequence path."""
+    def build():
+        eng = _mk_engine(nblk=64, nslabs=4, seed=11)
+        cache = PagedCoWCache(eng, page=8, max_blocks_per_seq=8, max_seqs=8)
+        sid = cache.new_sequence(prompt_len=12)
+        eng.alloc.mark_written(cache.blocks_of(sid))
+        kids = cache.fork(sid, 2)
+        return eng, cache, [sid] + kids
+
+    eng_a, cache_a, seqs_a = build()
+    with LaunchRecorder() as rec:
+        out_a = cache_a.append_tokens(seqs_a)
+    fused_events = [e for e in rec.events if e[2] == "fused"]
+    assert len(fused_events) == 1
+
+    eng_b, cache_b, seqs_b = build()
+    out_b = [cache_b.append_token(s) for s in seqs_b]
+    assert [o[1] for o in out_a] == [o[1] for o in out_b]
+    for name in eng_a.pools:
+        np.testing.assert_array_equal(np.asarray(eng_a.pools[name]),
+                                      np.asarray(eng_b.pools[name]))
+
+
+@pytest.mark.parametrize("use_fused", [True, False])
+def test_war_ordering_fused_and_legacy_agree(use_fused):
+    """Write-after-read inside one table: (PSM, b->nb) then (FPM, c->b) is
+    permitted by the hazard guard (b is only a pending *source*).  Both
+    drains must apply it in enqueue order — nb gets b's OLD data, b gets
+    c's (regression: legacy grouped the whole table by opcode, running the
+    FPM group before the PSM group)."""
+    eng = _mk_engine(use_fused=use_fused, seed=17)
+    b, nb = 3, 33          # slabs 0 and 2 -> PSM
+    c = 7                  # slab 0, same slab as b -> FPM
+    eng.alloc.mark_written([b, c])
+    old_b = np.asarray(eng.pools["k"][b])
+    old_c = np.asarray(eng.pools["k"][c])
+    with eng.batch():
+        counts1 = eng.memcopy([(b, nb)])
+        counts2 = eng.memcopy([(c, b)])
+    assert counts1["psm"] == 1 and counts2["fpm"] == 1
+    np.testing.assert_array_equal(np.asarray(eng.pools["k"][nb]), old_b)
+    np.testing.assert_array_equal(np.asarray(eng.pools["k"][b]), old_c)
+
+
+def test_legacy_cross_pool_axis1():
+    """block_axis=1 cross-pool copies on the legacy path must index the
+    block axis, not the layer axis (regression: _legacy_cross had no
+    axis-1 branch)."""
+    eng = _mk_engine(block_axis=1, use_fused=False, seed=23)
+    eng.alloc.mark_written([5])
+    want = np.asarray(eng.pools["k"][:, 5])
+    eng.memcopy_cross([(5, 40)], "k", "v")     # 40 >= L: axis-0 gather
+    np.testing.assert_array_equal(np.asarray(eng.pools["v"][:, 40]), want)
+
+
+def test_engine_mesh_dispatch_subprocess():
+    """Multi-device mesh: flushed FPM commands run per slab inside
+    shard_map (legacy fan-out), with overflow chunked instead of the
+    seed's ValueError."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        os.environ["JAX_PLATFORMS"] = "cpu"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.core import RowCloneEngine, SubarrayAllocator
+        mesh = Mesh(np.asarray(jax.devices()).reshape(4), ("model",))
+        nblk = 32
+        alloc = SubarrayAllocator(nblk, 4)
+        pools = {"k": jax.random.normal(jax.random.key(0), (nblk, 4, 8)),
+                 "v": jax.random.normal(jax.random.key(1), (nblk, 4, 8))}
+        want = {n: np.asarray(p) for n, p in pools.items()}
+        eng = RowCloneEngine(pools, alloc, mesh=mesh, max_requests=4)
+        # 6 same-slab pairs; slab 0 holds 4 of them (the seed's per-slab
+        # table would overflow at >4 and raise)
+        pairs = [(1, 2), (3, 4), (5, 6), (7, 1), (9, 10), (11, 12)]
+        alloc.mark_written([s for s, _ in pairs])
+        counts = eng.memcopy(pairs)
+        assert counts == {"fpm": 6, "psm": 0, "baseline": 0}, counts
+        for n in want:
+            ref = want[n].copy()
+            for s, d in pairs:
+                ref[d] = want[n][s]
+            np.testing.assert_allclose(np.asarray(eng.pools[n]), ref)
+        print("OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0 and "OK" in out.stdout, out.stderr[-2000:]
+
+
+def test_fork_eager_copy_clones_blocks_one_launch():
+    eng = _mk_engine(nblk=64, nslabs=4, seed=5)
+    cache = PagedCoWCache(eng, page=8, max_blocks_per_seq=8, max_seqs=8)
+    sid = cache.new_sequence(prompt_len=16)
+    blocks = cache.blocks_of(sid)
+    eng.alloc.mark_written(blocks)
+    with LaunchRecorder() as rec:
+        kid, = cache.fork(sid, 1, eager_copy=True)
+    assert len(rec.events) == 1
+    kb = cache.blocks_of(kid)
+    assert kb != blocks
+    for old, new in zip(blocks, kb):
+        assert not eng.alloc.is_shared(old)
+        np.testing.assert_array_equal(np.asarray(eng.pools["k"][new]),
+                                      np.asarray(eng.pools["k"][old]))
