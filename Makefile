@@ -1,17 +1,26 @@
 # Tier-1 verification and smoke benchmarks.
 #
-#   make test         - the tier-1 suite (ROADMAP.md "Tier-1 verify")
-#   make test-fast    - same, minus tests marked `slow`
+#   make test         - the tier-1 suite (ROADMAP.md "Tier-1 verify");
+#                       runs the mesh dispatch suite first, then the rest
+#   make test-mesh    - multi-device mesh dispatch tests only (the tests
+#                       fork 8-host-device subprocesses themselves; the
+#                       exported XLA_FLAGS also covers any future
+#                       in-process mesh test)
+#   make test-fast    - tier-1 minus tests marked `slow`
 #   make bench-smoke  - dispatch benchmark (writes BENCH_dispatch.json)
 #   make bench        - full paper-figure benchmark sweep
 
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 PY := PYTHONPATH=$(PYTHONPATH) python
+MESH_FLAGS := XLA_FLAGS=--xla_force_host_platform_device_count=8
 
-.PHONY: test test-fast bench-smoke bench
+.PHONY: test test-mesh test-fast bench-smoke bench
 
-test:
-	$(PY) -m pytest -x -q
+test: test-mesh
+	$(PY) -m pytest -x -q -m "not mesh"
+
+test-mesh:
+	$(MESH_FLAGS) $(PY) -m pytest -x -q -m mesh
 
 test-fast:
 	$(PY) -m pytest -x -q -m "not slow"

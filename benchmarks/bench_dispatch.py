@@ -9,7 +9,7 @@ Measures, for mixed copy+zero batches over a {"k","v"} pool pair:
 Emits ``BENCH_dispatch.json``:
 
 {
-  "schema": "bench_dispatch/v1",
+  "schema": "bench_dispatch/v2",
   "backend": "cpu" | "tpu",
   "block": [page, KVH, D], "nblk": int, "pools": ["k", "v"],
   "rows": [{
@@ -21,17 +21,29 @@ Emits ``BENCH_dispatch.json``:
       "bytes_moved": int       # bytes one flush moves (per-flush, not
                                # cumulative over the measurement loop)
   }],
-  "summary": {"speedup_small_batch": float}   # seed/fused us at batch<=8
+  "summary": {"speedup_small_batch": float},  # seed/fused us at batch<=8
+  "mesh": {                    # multi-device A/B (8 forced host devices,
+                               # measured in a subprocess; null if it failed)
+      "devices": 8, "mesh_shape": [2, 4],
+      "rows": [... same row schema, paths "fused"|"seed" ...],
+      "summary": {"speedup": float,          # seed/fused wall-clock
+                  "launches_fused": float,   # per flush (the "1" this PR
+                  "launches_seed": float}    # buys vs the fan-out)
+  }
 }
 
 CLI: PYTHONPATH=src python benchmarks/bench_dispatch.py [--out PATH]
+                                                        [--skip-mesh]
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -45,9 +57,12 @@ NBLK = 1024
 NSLABS = 4
 BATCHES = (2, 4, 8, 32, 128)
 REPS = 30
+MESH_SHAPE = (2, 4)          # 8 forced host devices in the subprocess
+MESH_BATCHES = (8, 32)
+MESH_REPS = 10
 
 
-def _mk_engine(use_fused: bool) -> RowCloneEngine:
+def _mk_engine(use_fused: bool, mesh=None) -> RowCloneEngine:
     alloc = SubarrayAllocator(NBLK, NSLABS, reserved_zero_per_slab=1)
     key = jax.random.key(0)
     pools = {
@@ -56,7 +71,7 @@ def _mk_engine(use_fused: bool) -> RowCloneEngine:
                                jnp.float32),
     }
     # max_requests=256 is the seed default the fan-out path pads to
-    return RowCloneEngine(pools, alloc, mesh=None, max_requests=256,
+    return RowCloneEngine(pools, alloc, mesh=mesh, max_requests=256,
                           use_fused=use_fused)
 
 
@@ -76,8 +91,9 @@ def _flush_once(eng: RowCloneEngine, batch: int, round_i: int) -> None:
         eng.materialize_zeros(zeros)
 
 
-def _bench_path(use_fused: bool, batch: int) -> Dict:
-    eng = _mk_engine(use_fused)
+def _bench_path(use_fused: bool, batch: int, mesh=None,
+                reps: int = REPS) -> Dict:
+    eng = _mk_engine(use_fused, mesh=mesh)
     events: List = []
     hook = lambda n, p, mech: events.append((n, p, mech))
     fd.add_launch_hook(hook)
@@ -88,7 +104,7 @@ def _bench_path(use_fused: bool, batch: int) -> Dict:
         events.clear()
         eng.stats = type(eng.stats)()   # per-flush byte accounting below
         times = []
-        for r in range(REPS):
+        for r in range(reps):
             t0 = time.perf_counter()
             _flush_once(eng, batch, 100 + r)
             jax.block_until_ready(list(eng.pools.values()))
@@ -98,18 +114,66 @@ def _bench_path(use_fused: bool, batch: int) -> Dict:
     bytes_moved = eng.stats.bytes_fpm + eng.stats.bytes_psm + \
         eng.stats.bytes_baseline
     bytes_moved += eng.stats.zero_materialized * eng._block_bytes()
-    bytes_moved //= REPS
+    bytes_moved //= reps
     return {
         "batch": batch,
         "path": "fused" if use_fused else "seed",
-        "launches_per_flush": len(events) / REPS,
+        "launches_per_flush": len(events) / reps,
         "table_len": max((e[0] for e in events), default=0),
         "us_per_flush": float(np.median(times) * 1e6),
         "bytes_moved": int(bytes_moved),
     }
 
 
-def run() -> Dict:
+# ---------------------------------------------------------------------------
+# mesh A/B — runs in a subprocess with 8 forced host devices (jax locks the
+# device count at first init, so the parent process can't host it)
+# ---------------------------------------------------------------------------
+
+def _mesh_child() -> None:
+    from jax.sharding import Mesh
+    mesh = Mesh(np.asarray(jax.devices()).reshape(MESH_SHAPE),
+                ("data", "model"))
+    rows = [_bench_path(use_fused, batch, mesh=mesh, reps=MESH_REPS)
+            for batch in MESH_BATCHES for use_fused in (True, False)]
+    print("MESHROWS:" + json.dumps(rows))
+
+
+def _run_mesh_section() -> Optional[Dict]:
+    n_dev = int(np.prod(MESH_SHAPE))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    env["JAX_PLATFORMS"] = "cpu"
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
+                               if env.get("PYTHONPATH") else "")
+    out = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--mesh-child"],
+        env=env, capture_output=True, text=True, timeout=1200)
+    lines = [l for l in out.stdout.splitlines() if l.startswith("MESHROWS:")]
+    if out.returncode != 0 or not lines:
+        print(f"[bench_dispatch] mesh section failed:\n{out.stderr[-2000:]}")
+        return None
+    rows = json.loads(lines[0][len("MESHROWS:"):])
+    f = [r for r in rows if r["path"] == "fused"]
+    s = [r for r in rows if r["path"] == "seed"]
+    return {
+        "devices": n_dev,
+        "mesh_shape": list(MESH_SHAPE),
+        "rows": rows,
+        "summary": {
+            "speedup": float(np.mean([r["us_per_flush"] for r in s]) /
+                             np.mean([r["us_per_flush"] for r in f])),
+            "launches_fused": float(np.mean(
+                [r["launches_per_flush"] for r in f])),
+            "launches_seed": float(np.mean(
+                [r["launches_per_flush"] for r in s])),
+        },
+    }
+
+
+def run(skip_mesh: bool = False) -> Dict:
     rows = []
     for batch in BATCHES:
         for use_fused in (True, False):
@@ -119,33 +183,53 @@ def run() -> Dict:
     speedup = (np.mean([r["us_per_flush"] for r in small_s]) /
                np.mean([r["us_per_flush"] for r in small_f]))
     return {
-        "schema": "bench_dispatch/v1",
+        "schema": "bench_dispatch/v2",
         "backend": jax.default_backend(),
         "block": list(BLOCK),
         "nblk": NBLK,
         "pools": ["k", "v"],
         "rows": rows,
         "summary": {"speedup_small_batch": float(speedup)},
+        "mesh": None if skip_mesh else _run_mesh_section(),
     }
+
+
+def _print_rows(rows) -> None:
+    for r in rows:
+        print(f"{r['batch']:>6} {r['path']:>6} "
+              f"{r['launches_per_flush']:>9.2f} {r['table_len']:>6} "
+              f"{r['us_per_flush']:>10.1f} "
+              f"{r['bytes_moved'] / 1e6:>9.1f}")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_dispatch.json")
+    ap.add_argument("--skip-mesh", action="store_true",
+                    help="skip the 8-device subprocess A/B section")
+    ap.add_argument("--mesh-child", action="store_true",
+                    help=argparse.SUPPRESS)
     args = ap.parse_args()
-    result = run()
+    if args.mesh_child:
+        _mesh_child()
+        return
+    result = run(skip_mesh=args.skip_mesh)
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
     print(f"{'batch':>6} {'path':>6} {'launches':>9} {'table':>6} "
           f"{'us/flush':>10} {'MB moved':>9}")
-    for r in result["rows"]:
-        print(f"{r['batch']:>6} {r['path']:>6} "
-              f"{r['launches_per_flush']:>9.2f} {r['table_len']:>6} "
-              f"{r['us_per_flush']:>10.1f} "
-              f"{r['bytes_moved'] / 1e6:>9.1f}")
+    _print_rows(result["rows"])
     print(f"\nsmall-batch (<=8) dispatch speedup: "
-          f"{result['summary']['speedup_small_batch']:.2f}x  "
-          f"-> {args.out}")
+          f"{result['summary']['speedup_small_batch']:.2f}x")
+    if result["mesh"]:
+        m = result["mesh"]
+        print(f"\nmesh ({m['devices']} host devices, "
+              f"{'x'.join(map(str, m['mesh_shape']))}):")
+        _print_rows(m["rows"])
+        print(f"mesh flush speedup: {m['summary']['speedup']:.2f}x  "
+              f"(launches/flush {m['summary']['launches_fused']:.2f} fused "
+              f"vs {m['summary']['launches_seed']:.2f} seed)")
+    print(f"-> {args.out}")
 
 
 if __name__ == "__main__":

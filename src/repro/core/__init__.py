@@ -3,7 +3,7 @@
 # subarray-aware allocator, and the CoW paged KV cache built on them.
 from repro.core.allocator import AllocStats, OutOfBlocks, SubarrayAllocator
 from repro.core.cmdqueue import (BUCKETS, CommandQueue, QueueStats,
-                                 bucket_size)
+                                 ShardPlan, bucket_size, partition_commands)
 from repro.core.cow_cache import PagedCoWCache, Sequence
 from repro.core.rowclone import EngineStats, RowCloneEngine
 
@@ -13,6 +13,8 @@ __all__ = [
     "SubarrayAllocator",
     "BUCKETS",
     "bucket_size",
+    "partition_commands",
+    "ShardPlan",
     "CommandQueue",
     "QueueStats",
     "PagedCoWCache",

@@ -27,7 +27,7 @@ and the kernel's sequential DMA drain agree exactly.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Set, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -46,6 +46,112 @@ def bucket_size(n: int) -> int:
         if n <= b:
             return b
     return BUCKETS[-1]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    """A flushed command table, partitioned for one collective sharded drain.
+
+    Produced host-side by :func:`partition_commands`; consumed by the
+    sharded fused-dispatch entry (kernels/fused_dispatch.py).  Every shard
+    sees the SAME static shapes — sub-tables pad to the max shard occupancy
+    (bucketed 8/32/128/512), so the whole flush is one shard_map'd launch.
+
+    * ``local_tables`` (S, m, 3) int32 ``[opcode, src, dst]`` rows with
+      **slab-local** block ids (``CROSS_POOL_COPY`` ids re-stacked as
+      ``pool * shard_size + local``); ``OP_NOP`` rows pad.
+    * The send/recv plan covers every cross-slab command, grouped by hop
+      distance ``delta = (dst_shard - src_shard) mod S`` (the LISA-style
+      inter-slab link): sender ``i``'s slot ``j`` for a given delta pairs
+      with receiver ``(i + delta) mod S``'s slot ``j``.
+      - ``send_rows`` (K, S, t): local row each sender gathers (every pool
+        is gathered at that row; -1 pads).
+      - ``recv_tables`` (K, S, t, 3): ``[buf_pool, dst_pool, dst_row]`` —
+        ``buf_pool``/``dst_pool`` are -1 for whole-block copies (each pool
+        scatters its own buffer slot); a cross-pool transfer names the
+        source-pool buffer and destination pool; ``dst_row`` -1 pads.
+    """
+    n_shards: int
+    shard_size: int
+    n_local: int                 # commands drained inside their own slab
+    n_transfer: int              # commands crossing a slab boundary
+    local_tables: np.ndarray     # (S, m, 3) int32
+    deltas: Tuple[int, ...]      # static ppermute hop distances, sorted
+    send_rows: np.ndarray        # (K, S, t) int32
+    recv_tables: np.ndarray      # (K, S, t, 3) int32
+
+
+def partition_commands(rows: Iterable[Tuple[int, int, int]], *,
+                       n_shards: int, nblk: int) -> ShardPlan:
+    """Split one flushed (hazard-free) command table into per-slab
+    sub-tables plus a cross-slab send/recv plan.
+
+    Classification is by **device shard** (``block_id // shard_size``), not
+    by the opcode's mechanism tag: an ``OP_FPM_COPY`` whose allocator slabs
+    are finer than the device sharding may still cross a shard boundary,
+    and an ``OP_PSM_COPY`` between allocator slabs co-resident on one
+    device drains locally.  Enqueue order is preserved within each shard's
+    sub-table; the flush hazard guards (no read and no rewrite of an
+    earlier row's destination within one table) make the cross-shard
+    interleaving — gather transfer sources, drain local tables, permute
+    and scatter — equivalent to the sequential drain.
+    """
+    if nblk % n_shards:
+        raise ValueError(f"nblk={nblk} not divisible by {n_shards} shards")
+    ss = nblk // n_shards
+    local: List[List[Tuple[int, int, int]]] = [[] for _ in range(n_shards)]
+    # delta -> per-src-shard slot lists of (src_row, buf_pool, dst_pool,
+    # dst_row)
+    xfer: Dict[int, List[List[Tuple[int, int, int, int]]]] = {}
+    n_transfer = 0
+    for op, s, d in rows:
+        if op < 0:
+            continue
+        if op == OP_ZERO_INIT:
+            local[d // ss].append((op, -1, d % ss))
+            continue
+        if op == OP_CROSS_POOL_COPY:
+            ps, bs = divmod(s, nblk)
+            pd, bd = divmod(d, nblk)
+            sh_s, sh_d = bs // ss, bd // ss
+            if sh_s == sh_d:
+                local[sh_d].append((op, ps * ss + bs % ss, pd * ss + bd % ss))
+                continue
+            entry = (bs % ss, ps, pd, bd % ss)
+        else:
+            sh_s, sh_d = s // ss, d // ss
+            if sh_s == sh_d:
+                local[sh_d].append((op, s % ss, d % ss))
+                continue
+            entry = (s % ss, -1, -1, d % ss)
+        delta = (sh_d - sh_s) % n_shards
+        slots = xfer.setdefault(delta, [[] for _ in range(n_shards)])
+        slots[sh_s].append(entry)
+        n_transfer += 1
+
+    n_local = sum(len(l) for l in local)
+    m = bucket_size(max((len(l) for l in local), default=0) or 1)
+    local_tables = np.full((n_shards, m, 3), OP_NOP, np.int32)
+    for sh, cmds in enumerate(local):
+        if cmds:
+            local_tables[sh, :len(cmds)] = np.asarray(cmds, np.int32)
+
+    deltas = tuple(sorted(xfer))
+    t = bucket_size(max((len(per_src)
+                         for slots in xfer.values() for per_src in slots),
+                        default=0) or 1) if deltas else 0
+    send_rows = np.full((len(deltas), n_shards, max(t, 1)), -1, np.int32)
+    recv_tables = np.full((len(deltas), n_shards, max(t, 1), 3), -1, np.int32)
+    for k, delta in enumerate(deltas):
+        for sh_s, entries in enumerate(xfer[delta]):
+            sh_d = (sh_s + delta) % n_shards
+            for j, (src_row, ps, pd, dst_row) in enumerate(entries):
+                send_rows[k, sh_s, j] = src_row
+                recv_tables[k, sh_d, j] = (ps, pd, dst_row)
+    return ShardPlan(n_shards=n_shards, shard_size=ss, n_local=n_local,
+                     n_transfer=n_transfer, local_tables=local_tables,
+                     deltas=deltas, send_rows=send_rows,
+                     recv_tables=recv_tables)
 
 
 @dataclasses.dataclass
@@ -134,6 +240,8 @@ class CommandQueue:
 __all__ = [
     "BUCKETS",
     "bucket_size",
+    "partition_commands",
+    "ShardPlan",
     "CommandQueue",
     "QueueStats",
     "OP_FPM_COPY",

@@ -22,31 +22,35 @@ inside ``with engine.batch():`` commands accumulate and the device sees a
 single launch at exit — the attention-step / benchmark-tick boundary.
 
 Tables pad to power-of-two buckets (8/32/128/512, overflow chunked), not the
-seed's fixed ``max_requests`` length.  ``use_fused=False`` keeps the seed's
-per-mechanism, per-pool fan-out (one jit'd call per pool per mechanism,
-padded to ``max_requests``) for A/B benchmarking, and is also the path a
-multi-device mesh takes (per-slab shard_map dispatch).
+seed's fixed ``max_requests`` length.  Under a multi-device mesh the flush
+drains as ONE shard_map'd collective launch: the table is partitioned into
+per-slab sub-tables (slab-local ids, same kernel) plus a cross-slab
+send/recv plan executed with ppermute inside the same launch
+(core/cmdqueue.py ``partition_commands``).  ``use_fused=False`` keeps the
+seed's per-mechanism, per-pool fan-out (one jit'd call per pool per
+mechanism, padded to ``max_requests``) for A/B benchmarking; on sharded
+arrays those global gather/scatters compile through GSPMD.
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
 import functools
+import warnings
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.compat import shard_map
 from repro.core.allocator import SubarrayAllocator
 from repro.core.cmdqueue import (CommandQueue, OP_BASELINE_COPY,
                                  OP_CROSS_POOL_COPY, OP_FPM_COPY, OP_PSM_COPY,
-                                 OP_ZERO_INIT)
+                                 OP_ZERO_INIT, partition_commands)
 from repro.kernels import ops as kops
 from repro.kernels.fused_dispatch import notify_launch
-from repro.models.paged import pool_shard_axes, pool_spec
+from repro.models.paged import pool_shard_axes, pool_shard_count
 
 
 @dataclasses.dataclass
@@ -86,10 +90,10 @@ class RowCloneEngine:
         DMAs per request on TPU).
 
         ``use_fused``: drain flushed command tables through the single
-        fused-dispatch launch (default).  False restores the seed's
-        per-mechanism, per-pool fan-out padded to ``max_requests`` — kept
-        for A/B benchmarking and used automatically under a multi-device
-        mesh, where dispatch runs per slab inside shard_map."""
+        fused-dispatch launch (default) — under a multi-device mesh, one
+        shard_map'd collective launch over per-slab sub-tables.  False
+        restores the seed's per-mechanism, per-pool fan-out padded to
+        ``max_requests``, kept for A/B benchmarking."""
         self.pools = dict(pools)
         self.alloc = allocator
         self.mesh = mesh
@@ -102,6 +106,7 @@ class RowCloneEngine:
         self.stats = EngineStats()
         self.queue = CommandQueue(self)
         self.deferred = False
+        self._warned_unshardable = False
         self._zero_blocks: Optional[Tuple[jnp.ndarray, ...]] = None
         nblk = next(iter(pools.values())).shape[block_axis]
         assert nblk == allocator.num_blocks
@@ -283,21 +288,57 @@ class RowCloneEngine:
     # ------------------------------------------------------------------
     def _dispatch_table(self, table: np.ndarray, n_cmds: int) -> int:
         """Execute one flushed command table.  Returns launches issued."""
-        if self.use_fused and not self._multi_device():
-            pools = tuple(self.pools.values())
-            new = kops.fused_dispatch(pools, self._get_zero_blocks(),
-                                      jnp.asarray(table),
-                                      block_axis=self.block_axis)
-            for name, arr in zip(self.pools, new):
-                self.pools[name] = arr
-            self.stats.launches += 1
-            return 1
+        if not int((np.asarray(table)[:, 0] >= 0).sum()):
+            return 0        # all-NOP/empty table: no launch on ANY path
+        if self.use_fused:
+            n_shards = pool_shard_count(self.mesh)
+            if self._multi_device() and n_shards > 1:
+                if self.num_blocks % n_shards:
+                    # can't partition: slabs would be ragged.  Degrade to
+                    # the fan-out, but loudly — the caller loses the
+                    # one-launch-per-flush invariant (serving rounds nblk
+                    # to lcm(slabs, shards) exactly to avoid this).
+                    if not self._warned_unshardable:
+                        self._warned_unshardable = True
+                        warnings.warn(
+                            f"RowCloneEngine: nblk={self.num_blocks} not "
+                            f"divisible by {n_shards} device shards; mesh "
+                            "flushes fall back to the multi-launch legacy "
+                            "fan-out")
+                    return self._dispatch_legacy(table)
+                return self._dispatch_sharded(table, n_shards)
+            if not self._multi_device():
+                pools = tuple(self.pools.values())
+                new = kops.fused_dispatch(pools, self._get_zero_blocks(),
+                                          jnp.asarray(table),
+                                          block_axis=self.block_axis)
+                for name, arr in zip(self.pools, new):
+                    self.pools[name] = arr
+                self.stats.launches += 1
+                return 1
         return self._dispatch_legacy(table)
+
+    def _dispatch_sharded(self, table: np.ndarray, n_shards: int) -> int:
+        """One collective launch for the whole table: per-slab sub-tables
+        (slab-local ids) drain inside shard_map, cross-slab commands ride
+        the same launch as a ppermute send/recv plan."""
+        rows = [(int(op), int(s), int(d)) for op, s, d in table if op >= 0]
+        plan = partition_commands(rows, n_shards=n_shards,
+                                  nblk=self.num_blocks)
+        new = kops.fused_dispatch_sharded(
+            tuple(self.pools.values()), self._get_zero_blocks(), plan,
+            mesh=self.mesh, pool_axes=pool_shard_axes(self.mesh),
+            block_axis=self.block_axis)
+        for name, arr in zip(self.pools, new):
+            self.pools[name] = arr
+        self.stats.launches += 1
+        return 1
 
     def _dispatch_legacy(self, table: np.ndarray) -> int:
         """Seed-shaped fan-out: one device call per mechanism per pool,
-        padded to ``max_requests``.  Also the multi-device path (FPM runs
-        per slab inside shard_map).
+        padded to ``max_requests``.  Kept for A/B benchmarking
+        (``use_fused=False``); on sharded pools the global gather/scatters
+        compile through GSPMD — the mesh fast path is _dispatch_sharded.
 
         Commands are batched per *consecutive run* of one opcode, in
         enqueue order — NOT grouped across the whole table.  The hazard
@@ -329,55 +370,32 @@ class RowCloneEngine:
         self.stats.launches += launches
         return launches
 
-    # -- legacy per-mechanism fan-out (and the shard_map'd mesh path) ----
+    # -- legacy per-mechanism fan-out (seed A/B path) --------------------
+    def _legacy_use_pallas(self) -> Optional[bool]:
+        """Impl override for the legacy fan-out's block_axis=0 ops: under a
+        mesh, force the jnp reference — a pallas_call has no SPMD
+        partitioning rule, so only the plain gather/scatter compiles
+        through GSPMD on sharded pools.  ``None`` = the standard
+        resolution (Pallas on TPU) everywhere else."""
+        return False if self._multi_device() else None
+
     def _legacy_fpm(self, pairs: List[Tuple[int, int]]) -> int:
-        """Same-slab copies: per-slab DMA kernel.  Under a mesh the id lists
-        are grouped per slab and the kernel runs inside shard_map with local
-        ids; on one device it runs directly."""
+        """Same-slab copies, one global gather/scatter per pool.  On
+        sharded pools the reference op compiles through GSPMD (the seed's
+        hand-rolled per-slab shard_map fan-out — and its per-slab overflow
+        table — is retired; the mesh fast path is ``_dispatch_sharded``)."""
         launches = 0
-        if not self._multi_device():
-            for chunk in _chunks(pairs, self.max_requests):
-                ids = jnp.asarray(self._pad(chunk))
-                for name in self.pools:
-                    if self.block_axis == 1:
-                        self.pools[name] = _fpm_axis1_jit(self.pools[name],
-                                                          ids)
-                    else:
-                        self.pools[name] = kops.fpm_copy(self.pools[name],
-                                                         ids)
-                    notify_launch(self.max_requests, 1, "legacy_fpm")
-                    launches += 1
-            return launches
-        n_slabs = self.alloc.num_slabs
-        ss = self.alloc.slab_size
-        per_slab: List[List[Tuple[int, int]]] = [[] for _ in range(n_slabs)]
-        for s, d in pairs:
-            per_slab[self.alloc.slab_of(s)].append((s % ss, d % ss))
-        n_rounds = max(
-            (len(p) + self.max_requests - 1) // self.max_requests
-            for p in per_slab) if pairs else 0
-        pspec = pool_spec(self.mesh)
-
-        def run(pool_slab, ids_slab):
-            return kops.fpm_copy(pool_slab, ids_slab)
-
-        mapped = shard_map(run, mesh=self.mesh,
-                           in_specs=(pspec, pspec), out_specs=pspec,
-                           check_vma=False)
-        for r in range(n_rounds):   # overflow chunks, not ValueError
-            tbl = np.full((n_slabs, self.max_requests, 2), -1, np.int32)
-            lo, hi = r * self.max_requests, (r + 1) * self.max_requests
-            moved = 0
-            for sl in range(n_slabs):
-                chunk = per_slab[sl][lo:hi]
-                if chunk:
-                    tbl[sl, :len(chunk)] = chunk
-                    moved += len(chunk)
-            ids = jnp.asarray(tbl.reshape(n_slabs * self.max_requests, 2))
+        for chunk in _chunks(pairs, self.max_requests):
+            ids = jnp.asarray(self._pad(chunk))
             for name in self.pools:
-                self.pools[name] = mapped(self.pools[name], ids)
-                notify_launch(n_slabs * self.max_requests, 1,
-                              "legacy_fpm_mesh")
+                if self.block_axis == 1:
+                    self.pools[name] = _fpm_axis1_jit(self.pools[name],
+                                                      ids)
+                else:
+                    self.pools[name] = kops.fpm_copy(
+                        self.pools[name], ids,
+                        use_pallas=self._legacy_use_pallas())
+                notify_launch(self.max_requests, 1, "legacy_fpm")
                 launches += 1
         return launches
 
@@ -424,31 +442,46 @@ class RowCloneEngine:
                     self.pools[name] = _zero_axis1_jit(pool, idv)
                 else:
                     zero_block = jnp.zeros((1,) + pool.shape[1:], pool.dtype)
-                    self.pools[name] = kops.meminit_zero(pool, zero_block,
-                                                         idv)
+                    self.pools[name] = kops.meminit_zero(
+                        pool, zero_block, idv,
+                        use_pallas=self._legacy_use_pallas())
                 notify_launch(self.max_requests, 1, "legacy_zero")
                 launches += 1
         return launches
 
     def _legacy_cross(self, stacked_pairs: List[Tuple[int, int]]) -> int:
+        """Pool-pair sub-runs execute in ENQUEUE order, not grouped across
+        the whole run: interleaved opposite-direction copies (k->v, v->k,
+        k->v) may carry a write-after-read the hazard guard permits —
+        whole-table grouping would reorder the later write ahead of the
+        earlier read and diverge from the fused drain."""
         launches = 0
         names = list(self.pools)
         nblk = self.num_blocks
-        grouped: Dict[Tuple[int, int], List[Tuple[int, int]]] = {}
-        for s, d in stacked_pairs:
-            grouped.setdefault((s // nblk, d // nblk), []).append(
-                (s % nblk, d % nblk))
-        for (ps, pd), pairs in grouped.items():
-            for chunk in _chunks(pairs, self.max_requests):
+        i = 0
+        while i < len(stacked_pairs):
+            key = (stacked_pairs[i][0] // nblk, stacked_pairs[i][1] // nblk)
+            run: List[Tuple[int, int]] = []
+            j = i
+            while j < len(stacked_pairs) and \
+                    (stacked_pairs[j][0] // nblk,
+                     stacked_pairs[j][1] // nblk) == key:
+                run.append((stacked_pairs[j][0] % nblk,
+                            stacked_pairs[j][1] % nblk))
+                j += 1
+            ps, pd = key
+            for chunk in _chunks(run, self.max_requests):
                 ids = jnp.asarray(self._pad(chunk))
                 if self.block_axis == 1:
                     self.pools[names[pd]] = _cross_axis1_jit(
                         self.pools[names[pd]], self.pools[names[ps]], ids)
                 else:
                     self.pools[names[pd]] = kops.fpm_copy_cross(
-                        self.pools[names[pd]], self.pools[names[ps]], ids)
+                        self.pools[names[pd]], self.pools[names[ps]], ids,
+                        use_pallas=self._legacy_use_pallas())
                 notify_launch(self.max_requests, 1, "legacy_cross")
                 launches += 1
+            i = j
         return launches
 
 

@@ -45,8 +45,13 @@ import functools
 from typing import Callable, List, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
 
 OP_NOP = -1
 OP_FPM_COPY = 0
@@ -171,10 +176,10 @@ def _make_kernel(n_pools: int, block_axis: int, nblk: int):
     return kernel
 
 
-@functools.partial(jax.jit, static_argnames=("block_axis", "interpret"),
-                   donate_argnums=(2,))
-def _fused_dispatch_jit(cmds, zero_blocks, pools, *, block_axis: int,
-                        interpret: bool):
+def _fused_dispatch_call(cmds, zero_blocks, pools, *, block_axis: int,
+                         interpret: bool):
+    """The raw pallas_call — shared by the single-slab jit entry and the
+    per-shard body of the sharded entry (already inside a jit there)."""
     n_pools = len(pools)
     nblk = pools[0].shape[block_axis]
     grid = ((cmds.shape[0],) if block_axis == 0
@@ -198,6 +203,14 @@ def _fused_dispatch_jit(cmds, zero_blocks, pools, *, block_axis: int,
     )(cmds, *zero_blocks, *pools)
 
 
+@functools.partial(jax.jit, static_argnames=("block_axis", "interpret"),
+                   donate_argnums=(2,))
+def _fused_dispatch_jit(cmds, zero_blocks, pools, *, block_axis: int,
+                        interpret: bool):
+    return _fused_dispatch_call(cmds, zero_blocks, pools,
+                                block_axis=block_axis, interpret=interpret)
+
+
 def fused_dispatch_pallas(pools: Sequence, zero_blocks: Sequence, cmds, *,
                           block_axis: int = 0,
                           interpret: bool = False) -> Tuple:
@@ -210,4 +223,117 @@ def fused_dispatch_pallas(pools: Sequence, zero_blocks: Sequence, cmds, *,
     out = _fused_dispatch_jit(cmds, tuple(zero_blocks), tuple(pools),
                               block_axis=block_axis, interpret=interpret)
     notify_launch(int(cmds.shape[0]), len(out), "fused")
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# sharded entry — ONE shard_map'd launch drains a whole flush across the mesh
+# ---------------------------------------------------------------------------
+#
+# Each shard scalar-prefetches ITS slab's sub-table (same kernel, same opcode
+# switch — the ids are just slab-local) and drains it in place; cross-slab
+# commands ride the same launch as a send/recv plan: every shard gathers its
+# outgoing blocks from the pre-drain slab state, the buffers hop the mesh via
+# ppermute (one permute per hop distance — the LISA fast-inter-slab-link
+# analogue), and land with a scatter on the destination shard.  The
+# CommandQueue hazard guards make this interleaving exact: transfer sources
+# are never written earlier in the table (gather reads pre-flush state),
+# transfer destinations are disjoint from every other destination and are
+# only read by rows enqueued before the transfer (which drain locally before
+# the scatter lands).
+
+def _gather_rows(slab, rows, block_axis):
+    cl = jnp.clip(rows, 0, slab.shape[block_axis] - 1)
+    return slab[cl] if block_axis == 0 else slab[:, cl]
+
+
+def _scatter_rows(slab, data, dst, valid, block_axis):
+    safe = jnp.where(valid, dst, slab.shape[block_axis])
+    if block_axis == 0:
+        return slab.at[safe].set(data, mode="drop")
+    return slab.at[:, safe].set(data, mode="drop")
+
+
+@functools.lru_cache(maxsize=256)
+def _sharded_runner(mesh, pool_axes: Tuple[str, ...], deltas: Tuple[int, ...],
+                    n_pools: int, block_axis: int, use_pallas: bool,
+                    interpret: bool):
+    """Build (and cache) the jit'd shard_map'd drain for one static plan
+    structure.  The jit layer further caches per array shape; table shapes
+    are bucketed (cmdqueue.BUCKETS) and decode-round flushes are local-only
+    (``deltas=()``), but adversarial streams can still churn distinct delta
+    subsets — bounding that is an open item (ROADMAP)."""
+    n_shards = int(np.prod([mesh.shape[a] for a in pool_axes]))
+    axis = pool_axes if len(pool_axes) > 1 else pool_axes[0]
+    pspec = P(*([None] * block_axis), axis)
+    lspec = P(axis, None, None)             # local tables   (S, m, 3)
+    sspec = P(None, axis, None)             # send rows      (K, S, t)
+    rspec = P(None, axis, None, None)       # recv tables    (K, S, t, 3)
+
+    def body(local_tbl, send_rows, recv_tbl, zeros, pools):
+        tbl = local_tbl[0]                  # this shard's (m, 3) sub-table
+        slabs = list(pools)
+        # 1) gather every transfer source from the PRE-drain slab state
+        #    (each pool gathered at the same row; the recv side picks the
+        #    buffer that matters)
+        bufs = [jnp.stack([_gather_rows(p, send_rows[k, 0], block_axis)
+                           for p in slabs])
+                for k in range(len(deltas))]
+        # 2) drain this slab's sub-table — same kernel, slab-local ids
+        if use_pallas:
+            slabs = list(_fused_dispatch_call(
+                tbl, tuple(zeros), tuple(slabs), block_axis=block_axis,
+                interpret=interpret))
+        else:
+            from repro.kernels import ref as kref
+            slabs = list(kref.fused_dispatch(slabs, zeros, tbl,
+                                             block_axis=block_axis))
+        # 3) hop the buffers and scatter on the destination shard
+        for k, delta in enumerate(deltas):
+            perm = [(i, (i + delta) % n_shards) for i in range(n_shards)]
+            recvd = jax.lax.ppermute(bufs[k], axis, perm)
+            rt = recv_tbl[k, 0]             # (t, 3)
+            buf_pool, dst_pool, dst_row = rt[:, 0], rt[:, 1], rt[:, 2]
+            t = rt.shape[0]
+            for pd in range(n_pools):
+                sel = jnp.where(buf_pool < 0, pd, buf_pool)
+                idx_shape = ((1, t) + (1,) * (recvd.ndim - 2)
+                             if block_axis == 0
+                             else (1, 1, t) + (1,) * (recvd.ndim - 3))
+                picked = jnp.take_along_axis(
+                    recvd, sel.reshape(idx_shape), axis=0)[0]
+                valid = (dst_row >= 0) & ((dst_pool < 0) | (dst_pool == pd))
+                slabs[pd] = _scatter_rows(slabs[pd],
+                                          picked.astype(slabs[pd].dtype),
+                                          dst_row, valid, block_axis)
+        return tuple(slabs)
+
+    mapped = shard_map(
+        body, mesh=mesh,
+        # P() replicates the zero rows; pspec applies to every pool leaf
+        in_specs=(lspec, sspec, rspec, P(), pspec),
+        out_specs=tuple([pspec] * n_pools),
+        check_vma=False)
+    return jax.jit(mapped, donate_argnums=(4,))
+
+
+def sharded_fused_dispatch(pools: Sequence, zero_blocks: Sequence, plan, *,
+                           mesh, pool_axes: Tuple[str, ...],
+                           block_axis: int = 0, use_pallas: bool = False,
+                           interpret: bool = False) -> Tuple:
+    """Drain one partitioned flush (a cmdqueue.ShardPlan) as ONE collective
+    launch over every pool: per-slab fused sub-table drains + the
+    cross-slab send/recv plan, all inside a single shard_map'd dispatch."""
+    if plan.deltas:
+        send = jnp.asarray(plan.send_rows)
+        recv = jnp.asarray(plan.recv_tables)
+    else:  # no cross-slab traffic: zero-length transfer tables, no permutes
+        s = plan.n_shards
+        send = jnp.zeros((0, s, 1), jnp.int32)
+        recv = jnp.full((0, s, 1, 3), -1, jnp.int32)
+    runner = _sharded_runner(mesh, tuple(pool_axes), tuple(plan.deltas),
+                             len(pools), block_axis, use_pallas, interpret)
+    out = runner(jnp.asarray(plan.local_tables), send, recv,
+                 tuple(zero_blocks), tuple(pools))
+    notify_launch(int(plan.local_tables.shape[1]), len(out), "fused_mesh")
     return tuple(out)

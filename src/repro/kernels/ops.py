@@ -16,7 +16,9 @@ import jax.numpy as jnp
 from repro.kernels import ref as kref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.fpm_copy import fpm_copy_cross_pallas, fpm_copy_pallas
-from repro.kernels.fused_dispatch import fused_dispatch_pallas, notify_launch
+from repro.kernels.fused_dispatch import (fused_dispatch_pallas,
+                                          notify_launch,
+                                          sharded_fused_dispatch)
 from repro.kernels.paged_attention import paged_attention_slab_pallas
 from repro.kernels.ssd_chunk import ssd_intra_chunk_pallas
 from repro.kernels.zero_init import zero_init_pallas
@@ -85,6 +87,21 @@ def fused_dispatch(pools, zero_blocks, cmds, *, block_axis: int = 0,
                          block_axis=block_axis)
     notify_launch(int(cmds.shape[0]), len(out), "fused")
     return tuple(out)
+
+
+def fused_dispatch_sharded(pools, zero_blocks, plan, *, mesh, pool_axes,
+                           block_axis: int = 0,
+                           use_pallas: Optional[bool] = None):
+    """One collective launch for a whole flushed command table across the
+    mesh: per-slab fused sub-tables + the cross-slab send/recv plan
+    (cmdqueue.ShardPlan).  Resolution matches every other op: the per-shard
+    drain runs the Pallas kernel body on TPU (or in interpret mode when
+    forced) and the jnp reference elsewhere; the inter-slab hops are
+    ppermute collectives either way."""
+    return sharded_fused_dispatch(pools, zero_blocks, plan, mesh=mesh,
+                                  pool_axes=pool_axes, block_axis=block_axis,
+                                  use_pallas=_resolve_use_pallas(use_pallas),
+                                  interpret=_interpret())
 
 
 def baseline_copy(pool, ids):

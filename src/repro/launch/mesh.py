@@ -30,6 +30,14 @@ def make_test_mesh(shape: Tuple[int, ...] = (2, 2),
     return Mesh(np.asarray(devs[:n]).reshape(shape), axes)
 
 
+def pool_shard_count(mesh: Optional[Mesh]) -> int:
+    """Device shards of a block-pool's block axis (the arithmetic lives
+    with the pool layout in models/paged.py; re-exported here for the
+    launch layer)."""
+    from repro.models.paged import pool_shard_count as _psc
+    return _psc(mesh)
+
+
 def sharding_for(mesh: Mesh, shape: Tuple[int, ...], axes) -> NamedSharding:
     """Logical axes -> NamedSharding (divisibility-aware, uses the active
     rule set — mirrors sharding.rules.constrain)."""

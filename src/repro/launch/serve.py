@@ -27,6 +27,7 @@ import numpy as np
 
 from repro.configs import RowCloneConfig, get_config
 from repro.core import PagedCoWCache, RowCloneEngine, SubarrayAllocator
+from repro.launch.mesh import pool_shard_count
 from repro.models import build_model, split_params
 
 
@@ -43,15 +44,21 @@ class ServingEngine:
         page = self.rc.page_size
         L = cfg.num_attn_layers
         nblk = max_seqs * max_blocks_per_seq
-        nblk = -(-nblk // num_slabs) * num_slabs
+        # pool must tile both the allocator slabs and the mesh's device
+        # shards — the sharded fused dispatch partitions by device shard
+        align = int(np.lcm(num_slabs, pool_shard_count(mesh)))
+        nblk = -(-nblk // align) * align
         kv_dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
         shape = (L, nblk, page, cfg.num_kv_heads, cfg.head_dim)
         alloc = SubarrayAllocator(nblk, num_slabs,
                                   reserved_zero_per_slab=self.rc
                                   .zero_blocks_per_slab)
+        # the engine sees the mesh: every decode round's CoW splits + tail
+        # inits drain as ONE shard_map'd collective launch at the flush
+        # boundary (the seed pinned the serving engine to mesh=None)
         self.engine = RowCloneEngine(
             {"k": jnp.zeros(shape, kv_dtype), "v": jnp.zeros(shape, kv_dtype)},
-            alloc, mesh=None, enable_fpm=self.rc.enable_fpm,
+            alloc, mesh=mesh, enable_fpm=self.rc.enable_fpm,
             enable_psm=self.rc.enable_psm, enable_zi=self.rc.enable_zi,
             block_axis=1)
         self.cache = PagedCoWCache(self.engine, page, max_blocks_per_seq,

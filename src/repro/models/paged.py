@@ -34,6 +34,17 @@ def pool_shard_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
 
 
+def pool_shard_count(mesh: Optional[Mesh]) -> int:
+    """Device shards of a pool's block axis: joint size of every
+    pool-sharding axis present; 1 with no mesh.  The single owner of this
+    arithmetic — the engine's sharded dispatch gates on it and the serving
+    layer rounds pool sizes with it (``nblk % shards == 0``)."""
+    if mesh is None:
+        return 1
+    axes = pool_shard_axes(mesh)
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
 def batch_shard_axes(mesh: Mesh, batch: int) -> Tuple[str, ...]:
     dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1

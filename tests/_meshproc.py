@@ -1,0 +1,50 @@
+"""Shared harness for multi-device subprocess tests.
+
+jax locks the host device count at first init, so every mesh test forks a
+fresh interpreter whose script sets ``XLA_FLAGS`` before importing jax.
+This helper owns the env plumbing and the ``MARKER:json`` stdout protocol
+so the call sites (tests/test_multidevice.py, tests/test_dispatch.py,
+tests/test_dispatch_properties.py) don't each re-implement — and drift —
+the boilerplate.  benchmarks/bench_dispatch.py keeps its own copy: it must
+run standalone without tests/ on the path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from typing import Optional, Sequence
+
+TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
+SRC_DIR = os.path.abspath(os.path.join(TESTS_DIR, "..", "src"))
+
+
+def run_device_subprocess(script: str, *, args: Sequence[str] = (),
+                          marker: Optional[str] = "RESULTS:",
+                          timeout: int = 1200, tmp_path=None):
+    """Run ``script`` in a fresh interpreter with src/ on PYTHONPATH.
+
+    The script itself must set XLA_FLAGS/JAX_PLATFORMS before importing
+    jax (device count is fixed at first init).  Returns the JSON payload
+    following ``marker`` on stdout; with ``marker=None`` returns the raw
+    CompletedProcess (caller asserts on stdout).  Fails loudly with the
+    subprocess stderr tail on non-zero exit or a missing marker line.
+    """
+    if tmp_path is not None:
+        path = tmp_path / "mesh_script.py"
+        path.write_text(script)
+        cmd = [sys.executable, str(path), *args]
+    else:
+        cmd = [sys.executable, "-c", script, *args]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC_DIR + (os.pathsep + env["PYTHONPATH"]
+                                   if env.get("PYTHONPATH") else "")
+    out = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-4000:]
+    if marker is None:
+        return out
+    lines = [l for l in out.stdout.splitlines() if l.startswith(marker)]
+    assert lines, out.stdout
+    return json.loads(lines[0][len(marker):])

@@ -359,6 +359,27 @@ def test_war_ordering_fused_and_legacy_agree(use_fused):
     np.testing.assert_array_equal(np.asarray(eng.pools["k"][b]), old_c)
 
 
+@pytest.mark.parametrize("use_fused", [True, False])
+def test_cross_pool_war_interleaved_directions(use_fused):
+    """Interleaved opposite-direction cross-pool copies with a
+    write-after-read: k1->v2, v5->k6, k7->v5 all pass the hazard guard
+    (v5 is only a pending *source*), so k6 must get v5's OLD bytes
+    (regression: _legacy_cross grouped by pool pair, running k7->v5
+    before v5->k6)."""
+    eng = _mk_engine(seed=29, use_fused=use_fused)
+    eng.alloc.mark_written([1, 5, 7])
+    old_v5 = np.asarray(eng.pools["v"][5])
+    with eng.batch():
+        eng.memcopy_cross([(1, 2)], "k", "v")
+        eng.memcopy_cross([(5, 6)], "v", "k")
+        eng.memcopy_cross([(7, 5)], "k", "v")
+    np.testing.assert_array_equal(np.asarray(eng.pools["k"][6]), old_v5)
+    np.testing.assert_array_equal(np.asarray(eng.pools["v"][5]),
+                                  np.asarray(eng.pools["k"][7]))
+    np.testing.assert_array_equal(np.asarray(eng.pools["v"][2]),
+                                  np.asarray(eng.pools["k"][1]))
+
+
 def test_legacy_cross_pool_axis1():
     """block_axis=1 cross-pool copies on the legacy path must index the
     block axis, not the layer axis (regression: _legacy_cross had no
@@ -370,14 +391,14 @@ def test_legacy_cross_pool_axis1():
     np.testing.assert_array_equal(np.asarray(eng.pools["v"][:, 40]), want)
 
 
+@pytest.mark.mesh
 def test_engine_mesh_dispatch_subprocess():
-    """Multi-device mesh: flushed FPM commands run per slab inside
-    shard_map (legacy fan-out), with overflow chunked instead of the
-    seed's ValueError."""
-    import os
-    import subprocess
-    import sys
+    """Multi-device mesh: a flush drains as ONE shard_map'd fused launch
+    over per-slab sub-tables (a 1-D 4-device mesh here; the seed's per-slab
+    fan-out table would overflow at >max_requests same-slab pairs and
+    raise)."""
     import textwrap
+    from _meshproc import run_device_subprocess
     script = textwrap.dedent("""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
@@ -392,12 +413,12 @@ def test_engine_mesh_dispatch_subprocess():
                  "v": jax.random.normal(jax.random.key(1), (nblk, 4, 8))}
         want = {n: np.asarray(p) for n, p in pools.items()}
         eng = RowCloneEngine(pools, alloc, mesh=mesh, max_requests=4)
-        # 6 same-slab pairs; slab 0 holds 4 of them (the seed's per-slab
-        # table would overflow at >4 and raise)
+        # 6 same-slab pairs; slab 0 holds 4 of them
         pairs = [(1, 2), (3, 4), (5, 6), (7, 1), (9, 10), (11, 12)]
         alloc.mark_written([s for s, _ in pairs])
         counts = eng.memcopy(pairs)
         assert counts == {"fpm": 6, "psm": 0, "baseline": 0}, counts
+        assert eng.stats.launches == 1, eng.stats.launches
         for n in want:
             ref = want[n].copy()
             for s, d in pairs:
@@ -405,12 +426,8 @@ def test_engine_mesh_dispatch_subprocess():
             np.testing.assert_allclose(np.asarray(eng.pools[n]), ref)
         print("OK")
     """)
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.abspath(
-        os.path.join(os.path.dirname(__file__), "..", "src"))
-    out = subprocess.run([sys.executable, "-c", script], env=env,
-                         capture_output=True, text=True, timeout=600)
-    assert out.returncode == 0 and "OK" in out.stdout, out.stderr[-2000:]
+    out = run_device_subprocess(script, marker=None, timeout=600)
+    assert "OK" in out.stdout, out.stdout
 
 
 def test_fork_eager_copy_clones_blocks_one_launch():

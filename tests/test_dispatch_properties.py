@@ -1,0 +1,292 @@
+"""Property-based dispatch parity: random command streams must produce
+bitwise-identical pools across {seed fan-out, single-slab fused, mesh fused}
+with consistent launch accounting.
+
+Streams mix every opcode (FPM/PSM/baseline-adjacent copies, zero-init —
+materialized and lazy — and cross-pool copies), include duplicate
+destinations (exercising the hazard auto-flush), src==dst no-ops, lazy-zero
+sources (the ZI alias fast path), overflow past the top 512 bucket, and both
+``block_axis`` layouts.  The single-device pair runs in-process via
+``tests/_hypo.py``; the three-way comparison including the 8-device mesh
+fused path replays the same generated streams in a subprocess (jax locks the
+host device count at first init).
+"""
+import json
+import os
+import random
+
+import jax
+import numpy as np
+import pytest
+
+from _hypo import given, settings, st
+from _meshproc import run_device_subprocess
+from repro.core import RowCloneEngine, SubarrayAllocator
+from repro.kernels import fused_dispatch as fd
+
+# ---------------------------------------------------------------------------
+# stream generation (shared by the in-process property and the subprocess
+# replay — programs are plain JSON)
+# ---------------------------------------------------------------------------
+
+KINDS = ("copy", "copy", "zero", "lazy", "cross")   # copies twice as likely
+
+
+def gen_program(rng: random.Random, nblk: int, n_instr: int):
+    """A random instruction stream against the engine's public API."""
+    prog = []
+    for _ in range(n_instr):
+        kind = rng.choice(KINDS)
+        if kind == "copy":
+            n = rng.randint(1, 6)
+            # dup dsts and src==dst allowed on purpose: the former forces
+            # hazard auto-flushes, the latter must be a harmless self-copy
+            pairs = [[rng.randrange(nblk), rng.randrange(nblk)]
+                     for _ in range(n)]
+            prog.append(["copy", pairs])
+        elif kind == "zero":
+            ids = [rng.randrange(nblk) for _ in range(rng.randint(1, 4))]
+            prog.append(["zero", ids])
+        elif kind == "lazy":
+            ids = [rng.randrange(nblk) for _ in range(rng.randint(1, 4))]
+            prog.append(["lazy", ids])
+        else:
+            n = rng.randint(1, 4)
+            pairs = [[rng.randrange(nblk), rng.randrange(nblk)]
+                     for _ in range(n)]
+            sp, dp = rng.choice([("k", "v"), ("v", "k")])
+            prog.append(["cross", pairs, sp, dp])
+    return prog
+
+
+def run_program(eng: RowCloneEngine, prog):
+    """Drive one engine through a program inside one batch() (hazards may
+    auto-flush mid-stream).  Returns the launch-hook events."""
+    events = []
+    hook = lambda n, p, mech: events.append((n, p, mech))
+    fd.add_launch_hook(hook)
+    try:
+        with eng.batch():
+            for instr in prog:
+                if instr[0] == "copy":
+                    eng.memcopy([tuple(p) for p in instr[1]])
+                elif instr[0] == "zero":
+                    eng.materialize_zeros(instr[1])
+                elif instr[0] == "lazy":
+                    eng.meminit(instr[1], lazy=True)
+                else:
+                    eng.memcopy_cross([tuple(p) for p in instr[1]],
+                                      instr[2], instr[3])
+    finally:
+        fd.remove_launch_hook(hook)
+    return events
+
+
+def mk_engine(nblk, block_axis, use_fused, mesh=None, nslabs=4, seed=0):
+    alloc = SubarrayAllocator(nblk, nslabs, reserved_zero_per_slab=1)
+    shape = (nblk, 4, 8) if block_axis == 0 else (3, nblk, 4, 8)
+    pools = {
+        "k": jax.random.normal(jax.random.key(seed), shape),
+        "v": jax.random.normal(jax.random.key(seed + 1), shape),
+    }
+    return RowCloneEngine(pools, alloc, mesh=mesh, max_requests=64,
+                          block_axis=block_axis, use_fused=use_fused)
+
+
+def assert_pools_equal(a: RowCloneEngine, b: RowCloneEngine, ctx=""):
+    for name in a.pools:
+        np.testing.assert_array_equal(np.asarray(a.pools[name]),
+                                      np.asarray(b.pools[name]),
+                                      err_msg=f"pool {name} {ctx}")
+
+
+# ---------------------------------------------------------------------------
+# in-process property: seed fan-out vs single-slab fused
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10**6), st.integers(0, 1), st.integers(1, 8))
+def test_property_fused_matches_seed_fanout(seed, block_axis, n_instr):
+    """Random streams: fused flush == seed per-op fan-out, bitwise, with
+    every fused flush exactly one launch."""
+    rng = random.Random(seed)
+    nblk = rng.choice([32, 64])
+    prog = gen_program(rng, nblk, n_instr)
+    fused = mk_engine(nblk, block_axis, use_fused=True)
+    legacy = mk_engine(nblk, block_axis, use_fused=False)
+    ev_f = run_program(fused, prog)
+    ev_l = run_program(legacy, prog)
+    assert_pools_equal(fused, legacy, f"(seed={seed} prog={prog})")
+    # accounting: every fused event is the fused mechanism, one per flushed
+    # chunk, and the stats agree with the hook
+    assert all(e[2] == "fused" for e in ev_f), ev_f
+    assert len(ev_f) == fused.stats.launches
+    assert fused.queue.stats.launches == fused.stats.launches
+    # hazard auto-flush boundaries are path-independent (queue-level)
+    assert fused.queue.stats.hazard_flushes == legacy.queue.stats.hazard_flushes
+    if ev_l:
+        assert len(ev_f) <= len(ev_l)
+    # identical ZI metadata: the alias fast path took the same decisions
+    np.testing.assert_array_equal(fused.alloc.is_zero, legacy.alloc.is_zero)
+
+
+def test_property_overflow_chunks_match():
+    """>512 commands in one flush drain in identical chunks on both paths."""
+    nblk = 2048
+    fused = mk_engine(nblk, 0, use_fused=True)
+    legacy = mk_engine(nblk, 0, use_fused=False)
+    pairs = [(i, 1024 + i) for i in range(600)]
+    for eng in (fused, legacy):
+        eng.alloc.mark_written([s for s, _ in pairs])
+        with eng.batch():
+            eng.memcopy(pairs)
+            eng.materialize_zeros(list(range(700, 720)))
+    assert_pools_equal(fused, legacy, "(overflow)")
+    assert fused.stats.launches == 2           # 512 + 108 -> two buckets
+
+
+# ---------------------------------------------------------------------------
+# three-way parity incl. the sharded mesh path (8 host devices, subprocess)
+# ---------------------------------------------------------------------------
+
+MESH_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import json, sys
+import jax, numpy as np
+from jax.sharding import Mesh
+
+sys.path.insert(0, __TEST_DIR__)
+from test_dispatch_properties import (assert_pools_equal, mk_engine,
+                                      run_program)
+
+spec = json.load(open(sys.argv[1]))
+mesh = Mesh(np.asarray(jax.devices()).reshape(2, 4), ("data", "model"))
+results = []
+for case in spec["cases"]:
+    nblk, ba, prog = case["nblk"], case["block_axis"], case["prog"]
+    seed_eng = mk_engine(nblk, ba, use_fused=False)
+    single = mk_engine(nblk, ba, use_fused=True)
+    sharded = mk_engine(nblk, ba, use_fused=True, mesh=mesh)
+    ev_seed = run_program(seed_eng, prog)
+    ev_single = run_program(single, prog)
+    ev_mesh = run_program(sharded, prog)
+    assert_pools_equal(single, seed_eng, f"single-vs-seed case={case}")
+    assert_pools_equal(sharded, seed_eng, f"mesh-vs-seed case={case}")
+    assert all(e[2] == "fused_mesh" for e in ev_mesh), ev_mesh
+    # launches_per_flush accounting identical across the two fused drains
+    assert len(ev_mesh) == len(ev_single) == sharded.stats.launches, (
+        ev_mesh, ev_single)
+    assert sharded.queue.stats.hazard_flushes == \
+        single.queue.stats.hazard_flushes
+    results.append({"launches": len(ev_mesh),
+                    "seed_launches": len(ev_seed)})
+
+# the sharded drain's Pallas branch (kernel body in interpret mode inside
+# shard_map) on the first stream — the TPU code path must not only exist
+# in CPU CI as the jnp reference
+import functools
+from repro.kernels import ops as kops
+orig = kops.fused_dispatch_sharded
+kops.fused_dispatch_sharded = functools.partial(orig, use_pallas=True)
+try:
+    case = spec["cases"][0]
+    forced = mk_engine(case["nblk"], case["block_axis"], use_fused=True,
+                       mesh=mesh)
+    plain = mk_engine(case["nblk"], case["block_axis"], use_fused=True)
+    run_program(forced, case["prog"])
+    run_program(plain, case["prog"])
+    assert_pools_equal(forced, plain, "pallas-interpret sharded drain")
+finally:
+    kops.fused_dispatch_sharded = orig
+
+print("RESULTS:" + json.dumps(results))
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.mesh
+def test_property_mesh_fused_three_way_parity(tmp_path):
+    """The generated streams replayed under a 2x4 host mesh: seed fan-out,
+    single-slab fused, and the sharded mesh drain agree bitwise, and both
+    fused paths issue exactly one launch per flushed chunk."""
+    rng = random.Random(0xC10E)
+    cases = []
+    for i in range(5):
+        nblk = rng.choice([32, 64])            # 8 shards of 4 or 8 blocks
+        ba = rng.randrange(2)
+        cases.append({"nblk": nblk, "block_axis": ba,
+                      "prog": gen_program(rng, nblk, rng.randint(2, 7))})
+    # overflow across the mesh: >512 commands, sources on every shard
+    cases.append({"nblk": 2048, "block_axis": 0,
+                  "prog": [["copy", [[i, 1024 + i] for i in range(600)]]]})
+    spec = tmp_path / "cases.json"
+    spec.write_text(json.dumps({"cases": cases}))
+    child = MESH_CHILD.replace(
+        "__TEST_DIR__", repr(os.path.dirname(os.path.abspath(__file__))))
+    results = run_device_subprocess(child, args=[str(spec)],
+                                    tmp_path=tmp_path)
+    assert len(results) == len(cases)
+    # the overflow case drains in exactly two collective launches
+    assert results[-1]["launches"] == 2, results[-1]
+
+
+# ---------------------------------------------------------------------------
+# regression: an all-NOP/empty flush is a no-op on every path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.mesh
+def test_unshardable_pool_warns_and_degrades(tmp_path):
+    """nblk not divisible by the device shard count can't be partitioned:
+    the engine must warn once and fall back to the legacy fan-out rather
+    than silently pretending the one-launch invariant holds."""
+    script = r"""
+import os, warnings
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import jax, numpy as np
+from jax.sharding import Mesh
+from repro.core import RowCloneEngine, SubarrayAllocator
+mesh = Mesh(np.asarray(jax.devices()).reshape(2, 4), ("data", "model"))
+nblk = 36                      # % 8 != 0 -> unshardable
+alloc = SubarrayAllocator(nblk, 4)
+pools = {"k": jax.random.normal(jax.random.key(0), (nblk, 4, 8))}
+eng = RowCloneEngine(pools, alloc, mesh=mesh)
+want = np.asarray(pools["k"])
+alloc.mark_written([1])
+with warnings.catch_warnings(record=True) as w:
+    warnings.simplefilter("always")
+    eng.memcopy([(1, 2)])
+    eng.memcopy([(3, 4)])      # second flush: warn only once
+hits = [x for x in w if "legacy" in str(x.message)]
+assert len(hits) == 1, [str(x.message) for x in w]
+np.testing.assert_array_equal(np.asarray(eng.pools["k"][2]), want[1])
+print("OK")
+"""
+    out = run_device_subprocess(script, marker=None, timeout=600,
+                                tmp_path=tmp_path)
+    assert "OK" in out.stdout, out.stdout
+
+
+@pytest.mark.parametrize("use_fused", [True, False])
+def test_empty_and_all_nop_flush_no_launch(use_fused):
+    """Empty queue flush and an all-NOP table must not touch the device on
+    either dispatch path (the fused path used to burn a launch on a table
+    with no valid rows)."""
+    eng = mk_engine(32, 0, use_fused=use_fused)
+    events = []
+    hook = lambda n, p, mech: events.append(mech)
+    fd.add_launch_hook(hook)
+    try:
+        assert eng.flush() == 0
+        with eng.batch():
+            pass
+        eng.memcopy([])
+        eng.meminit([], lazy=False)
+        table = np.full((8, 3), fd.OP_NOP, np.int32)
+        assert eng._dispatch_table(table, 0) == 0
+    finally:
+        fd.remove_launch_hook(hook)
+    assert events == []
+    assert eng.stats.launches == 0

@@ -1,12 +1,9 @@
 """Multi-device semantics tested in a subprocess with 8 forced host devices
 (jax locks the device count at first init, so the main pytest process stays
 single-device)."""
-import json
-import os
-import subprocess
-import sys
-
 import pytest
+
+from _meshproc import run_device_subprocess
 
 SCRIPT = r"""
 import os
@@ -93,21 +90,144 @@ print("RESULTS:" + json.dumps(results))
 """
 
 
+MESH_DISPATCH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import json
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core import RowCloneEngine, SubarrayAllocator
+from repro.kernels import fused_dispatch as fd
+
+results = {}
+mesh = Mesh(np.asarray(jax.devices()).reshape(2, 4), ("data", "model"))
+results["n_devices"] = len(jax.devices())
+nblk = 64           # 8 device shards of 8 blocks each
+
+def build(seed=0, use_fused=True):
+    alloc = SubarrayAllocator(nblk, 4)
+    pools = {"k": jax.random.normal(jax.random.key(seed), (nblk, 4, 8)),
+             "v": jax.random.normal(jax.random.key(seed + 1), (nblk, 4, 8))}
+    return RowCloneEngine(pools, alloc, mesh=mesh, use_fused=use_fused)
+
+events = []
+fd.add_launch_hook(lambda n, p, m: events.append((n, p, m)))
+
+# 1) mixed-opcode flush — FPM local, cross-shard copies over two hop
+#    distances, zero-init, cross-pool local AND cross-shard — is exactly
+#    ONE collective launch
+eng = build()
+want = {n: np.asarray(p) for n, p in eng.pools.items()}
+eng.alloc.mark_written([2, 5, 17, 33, 12])
+with eng.batch():
+    eng.memcopy([(2, 3), (5, 60), (17, 26)])
+    eng.materialize_zeros([40])
+    eng.memcopy_cross([(12, 13), (33, 58)], "k", "v")
+results["mixed_launches"] = len(events)
+results["mixed_mechs"] = sorted(set(e[2] for e in events))
+ref = {n: want[n].copy() for n in want}
+for n in ("k", "v"):
+    ref[n][3] = want[n][2]
+    ref[n][60] = want[n][5]
+    ref[n][26] = want[n][17]
+    ref[n][40] = 0
+ref["v"][13] = want["k"][12]
+ref["v"][58] = want["k"][33]
+results["mixed_ok"] = bool(all(
+    np.array_equal(np.asarray(eng.pools[n]), ref[n]) for n in ref))
+
+# 2) hazard auto-flush parity across a slab boundary: a->b crosses shards,
+#    the dependent b->c forces an auto-flush; two launches, c holds a's bytes
+events.clear()
+eng2 = build(seed=7)
+a, b, c = 2, 33, 50          # shards 0, 4, 6
+olda = np.asarray(eng2.pools["k"][a])
+eng2.alloc.mark_written([a])
+with eng2.batch():
+    eng2.memcopy([(a, b)])
+    eng2.memcopy([(b, c)])
+results["hazard_flushes"] = eng2.queue.stats.hazard_flushes
+results["hazard_launches"] = len(events)
+results["hazard_ok"] = bool(
+    np.array_equal(np.asarray(eng2.pools["k"][b]), olda)
+    and np.array_equal(np.asarray(eng2.pools["k"][c]), olda))
+
+# 3) empty-slab flush: every command lands on shard 0; the other seven
+#    shards drain all-NOP sub-tables inside the same single launch
+events.clear()
+eng3 = build(seed=11)
+want3 = {n: np.asarray(p) for n, p in eng3.pools.items()}
+eng3.alloc.mark_written([1, 2])
+with eng3.batch():
+    eng3.memcopy([(1, 4), (2, 5)])
+    eng3.materialize_zeros([6])
+results["empty_slab_launches"] = len(events)
+ok = True
+for n in ("k", "v"):
+    r = want3[n].copy()
+    r[4] = want3[n][1]
+    r[5] = want3[n][2]
+    r[6] = 0
+    ok = ok and np.array_equal(np.asarray(eng3.pools[n]), r)
+results["empty_slab_ok"] = bool(ok)
+
+# 4) empty queue / all-NOP table: no launch on the mesh path either
+events.clear()
+flush_launches = eng3.flush()
+nop = np.full((8, 3), -1, np.int32)
+results["nop_launches"] = (flush_launches
+                           + eng3._dispatch_table(nop, 0) + len(events))
+
+# 5) serving engine picks the mesh up (layer-stacked block_axis=1 pools):
+#    an eager CoW fork's block clones drain as one collective launch
+from repro.configs import get_config
+from repro.launch.serve import ServingEngine
+cfg = get_config("llama3.2-3b").reduced()
+srv = ServingEngine(cfg, None, mesh=mesh, max_seqs=8, max_blocks_per_seq=8,
+                    num_slabs=4)
+results["serve_nblk_aligned"] = bool(srv.engine.num_blocks % 8 == 0)
+results["serve_has_mesh"] = bool(srv.engine.mesh is mesh)
+sid = srv.cache.new_sequence(prompt_len=2 * srv.rc.page_size)
+srv.engine.alloc.mark_written(srv.cache.blocks_of(sid))
+events.clear()
+srv.cache.fork(sid, 1, eager_copy=True)
+results["serve_fork_launches"] = len(events)
+results["serve_fork_mechs"] = sorted(set(e[2] for e in events))
+
+print("RESULTS:" + json.dumps(results))
+"""
+
+
+@pytest.mark.mesh
+def test_mesh_fused_dispatch_one_launch_per_flush(tmp_path):
+    """Under a 2x4 host mesh the command queue drains every flush as ONE
+    shard_map'd fused launch (launch-count hook), hazards auto-flush across
+    slab boundaries exactly as on one device, and empty-slab / all-NOP
+    flushes behave (no stray launches)."""
+    res = run_device_subprocess(MESH_DISPATCH_SCRIPT, tmp_path=tmp_path)
+    assert res["n_devices"] == 8
+    assert res["mixed_launches"] == 1, res          # launches_per_flush == 1
+    assert res["mixed_mechs"] == ["fused_mesh"], res
+    assert res["mixed_ok"], res
+    assert res["hazard_flushes"] == 1, res
+    assert res["hazard_launches"] == 2, res         # one per flushed table
+    assert res["hazard_ok"], res
+    assert res["empty_slab_launches"] == 1, res
+    assert res["empty_slab_ok"], res
+    assert res["nop_launches"] == 0, res
+    assert res["serve_nblk_aligned"], res
+    assert res["serve_has_mesh"], res
+    assert res["serve_fork_launches"] == 1, res
+    assert res["serve_fork_mechs"] == ["fused_mesh"], res
+
+
 @pytest.mark.slow
 def test_sharded_execution_matches_single_device(tmp_path):
-    script = tmp_path / "multidev.py"
-    script.write_text(SCRIPT)
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.abspath(
-        os.path.join(os.path.dirname(__file__), "..", "src"))
-    env.pop("JAX_PLATFORMS", None)
-    env["JAX_PLATFORMS"] = "cpu"
-    out = subprocess.run([sys.executable, str(script)], env=env,
-                         capture_output=True, text=True, timeout=1200)
-    assert out.returncode == 0, out.stderr[-3000:]
-    line = [l for l in out.stdout.splitlines() if l.startswith("RESULTS:")]
-    assert line, out.stdout
-    res = json.loads(line[0][len("RESULTS:"):])
+    res = run_device_subprocess(SCRIPT, tmp_path=tmp_path)
     assert res["n_devices"] == 8
     assert res["decode_err"] < 5e-2, res      # bf16 pools
     assert res["train_loss_err"] < 5e-3, res
