@@ -1,12 +1,15 @@
 # Tier-1 verification and smoke benchmarks.
 #
-#   make test         - the tier-1 suite (ROADMAP.md "Tier-1 verify");
-#                       runs the mesh dispatch suite first, then the rest
+#   make test         - the tier-1 suite (ROADMAP.md "Tier-1 verify"):
+#                       docstring lint, then the mesh dispatch suite,
+#                       then the rest
 #   make test-mesh    - multi-device mesh dispatch tests only (the tests
 #                       fork 8-host-device subprocesses themselves; the
 #                       exported XLA_FLAGS also covers any future
 #                       in-process mesh test)
 #   make test-fast    - tier-1 minus tests marked `slow`
+#   make check-docs   - fail if a public core/ or kernels/ symbol lacks a
+#                       docstring (tools/check_docs.py)
 #   make bench-smoke  - dispatch benchmark (writes BENCH_dispatch.json)
 #   make bench        - full paper-figure benchmark sweep
 
@@ -14,9 +17,9 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 PY := PYTHONPATH=$(PYTHONPATH) python
 MESH_FLAGS := XLA_FLAGS=--xla_force_host_platform_device_count=8
 
-.PHONY: test test-mesh test-fast bench-smoke bench
+.PHONY: test test-mesh test-fast check-docs bench-smoke bench
 
-test: test-mesh
+test: check-docs test-mesh
 	$(PY) -m pytest -x -q -m "not mesh"
 
 test-mesh:
@@ -24,6 +27,9 @@ test-mesh:
 
 test-fast:
 	$(PY) -m pytest -x -q -m "not slow"
+
+check-docs:
+	$(PY) tools/check_docs.py
 
 bench-smoke:
 	$(PY) benchmarks/bench_dispatch.py

@@ -6,10 +6,16 @@ Measures, for mixed copy+zero batches over a {"k","v"} pool pair:
 * wall-clock per flushed batch (median of repeated flushes, post-warmup),
 * bytes physically moved (identical across paths — the win is dispatch).
 
+Since schema v3 it also A/Bs full SERVING ROUNDS (admission prefill
+staging + CoW fork splits + decode) through the real ServingEngine:
+``fused_staging`` (staging pools + cross-pool promotion through the
+queue — ONE bulk-movement launch per round) vs the seed ``_stage_legacy``
+scatter path (one ad-hoc dispatch per pool per admission).
+
 Emits ``BENCH_dispatch.json``:
 
 {
-  "schema": "bench_dispatch/v2",
+  "schema": "bench_dispatch/v3",
   "backend": "cpu" | "tpu",
   "block": [page, KVH, D], "nblk": int, "pools": ["k", "v"],
   "rows": [{
@@ -29,11 +35,27 @@ Emits ``BENCH_dispatch.json``:
       "summary": {"speedup": float,          # seed/fused wall-clock
                   "launches_fused": float,   # per flush (the "1" this PR
                   "launches_seed": float}    # buys vs the fan-out)
+  },
+  "serve_round": {             # full serving rounds through ServingEngine
+      "arch": str, "max_seqs": int, "rounds": int, "admit_rounds": int,
+      "rows": [{
+          "path": "fused_staging"|"seed_staging",
+          "launches_admit_round": float, # bulk-movement launches in rounds
+                                         # that admit (1.0 fused: prefill
+                                         # staging rides the round's flush)
+          "launches_per_round": float,   # mean over ALL measured rounds
+          "us_per_round": float,         # median post-warmup wall-clock
+          "stage_promotions": int        # blocks promoted via the queue
+      }],
+      "summary": {"speedup": float, "launches_fused": float,
+                  "launches_seed": float},
+      "mesh": {"devices": 8, "mesh_shape": [2, 4],    # sharded-batch leg
+               "rows": [...], "summary": {...}} | null
   }
 }
 
 CLI: PYTHONPATH=src python benchmarks/bench_dispatch.py [--out PATH]
-                                                        [--skip-mesh]
+                                             [--skip-mesh] [--skip-serve]
 """
 from __future__ import annotations
 
@@ -126,6 +148,113 @@ def _bench_path(use_fused: bool, batch: int, mesh=None,
 
 
 # ---------------------------------------------------------------------------
+# serve_round A/B — full serving rounds through the real ServingEngine
+# ---------------------------------------------------------------------------
+
+SERVE_ARCH = "llama3.2-3b"
+SERVE_ROUNDS = 8
+SERVE_ADMIT_ROUNDS = 4
+SERVE_WARMUP = 2             # rounds excluded from the median (compiles)
+
+
+def _bench_serve_path(fused_staging: bool, mesh=None) -> Dict:
+    """One serving-round A/B leg: admit a request per round for the first
+    ``SERVE_ADMIT_ROUNDS`` rounds, fork once, decode every round.  Reports
+    bulk-movement launches/round (hook) and median wall-clock/round."""
+    from repro.configs import get_config
+    from repro.launch.serve import ServingEngine
+    from repro.models import build_model, split_params
+    cfg = get_config(SERVE_ARCH).reduced()
+    model = build_model(cfg)
+    params, _ = split_params(model.init_params(jax.random.key(0)))
+    eng = ServingEngine(cfg, params, mesh=mesh, max_seqs=8,
+                        max_blocks_per_seq=8, fused_staging=fused_staging)
+    rng = np.random.default_rng(0)
+    events: List = []
+    hook = lambda n, p, mech: events.append(mech)
+    fd.add_launch_hook(hook)
+    launches, times, admitted = [], [], []
+    sids: List[int] = []
+    try:
+        for r in range(SERVE_ROUNDS):
+            n0 = len(events)
+            t0 = time.perf_counter()
+            if r < SERVE_ADMIT_ROUNDS:
+                sids.append(eng.add_request(rng.integers(
+                    2, cfg.vocab_size, size=24).astype(np.int32)))
+            if r == SERVE_ADMIT_ROUNDS:
+                eng.fork(sids[0], 1)     # CoW splits on later appends
+            eng.decode_round()
+            jax.block_until_ready([eng.engine.pools["k"],
+                                   eng.engine.pools["v"]])
+            times.append(time.perf_counter() - t0)
+            launches.append(len(events) - n0)
+            admitted.append(r < SERVE_ADMIT_ROUNDS)
+    finally:
+        fd.remove_launch_hook(hook)
+    meas = slice(SERVE_WARMUP, None)
+    admit_launches = [l for l, a in zip(launches[meas], admitted[meas]) if a]
+    return {
+        "path": "fused_staging" if fused_staging else "seed_staging",
+        # admission rounds exercise the staging path: prefill + promotion
+        # + decode.  1.0 fused (ONE launch covers it) vs 2+ for the seed's
+        # per-pool ad-hoc scatters.
+        "launches_admit_round": float(np.mean(admit_launches)),
+        "launches_per_round": float(np.mean(launches[meas])),
+        "us_per_round": float(np.median(times[meas]) * 1e6),
+        "stage_promotions": int(eng.engine.stats.stage_promotions),
+    }
+
+
+def _serve_summary(rows: List[Dict]) -> Dict:
+    f = next(r for r in rows if r["path"] == "fused_staging")
+    s = next(r for r in rows if r["path"] == "seed_staging")
+    return {
+        "speedup": float(s["us_per_round"] / f["us_per_round"]),
+        "launches_fused": f["launches_admit_round"],
+        "launches_seed": s["launches_admit_round"],
+    }
+
+
+def _serve_child() -> None:
+    from jax.sharding import Mesh
+    mesh = Mesh(np.asarray(jax.devices()).reshape(MESH_SHAPE),
+                ("data", "model"))
+    rows = [_bench_serve_path(fs, mesh=mesh) for fs in (True, False)]
+    print("SERVEROWS:" + json.dumps(rows))
+
+
+def _run_serve_section(skip_mesh: bool) -> Optional[Dict]:
+    rows = [_bench_serve_path(fs) for fs in (True, False)]
+    section = {
+        "arch": f"{SERVE_ARCH} (reduced)",
+        "max_seqs": 8,
+        "rounds": SERVE_ROUNDS,
+        "admit_rounds": SERVE_ADMIT_ROUNDS,
+        "rows": rows,
+        "summary": _serve_summary(rows),
+        "mesh": None,
+    }
+    if skip_mesh:
+        return section
+    out = _run_child("--serve-mesh-child")
+    lines = [] if out is None or out.returncode != 0 else [
+        l for l in out.stdout.splitlines() if l.startswith("SERVEROWS:")]
+    if not lines:
+        err = "timeout" if out is None else out.stderr[-2000:]
+        print(f"[bench_dispatch] serve mesh leg failed:\n{err}")
+        return section
+    mrows = json.loads(lines[0][len("SERVEROWS:"):])
+    section["mesh"] = {
+        "devices": int(np.prod(MESH_SHAPE)),
+        "mesh_shape": list(MESH_SHAPE),
+        "rows": mrows,
+        "summary": _serve_summary(mrows),
+    }
+    return section
+
+
+# ---------------------------------------------------------------------------
 # mesh A/B — runs in a subprocess with 8 forced host devices (jax locks the
 # device count at first init, so the parent process can't host it)
 # ---------------------------------------------------------------------------
@@ -139,7 +268,8 @@ def _mesh_child() -> None:
     print("MESHROWS:" + json.dumps(rows))
 
 
-def _run_mesh_section() -> Optional[Dict]:
+def _run_child(flag: str):
+    """Run this file in a fresh interpreter with 8 forced host devices."""
     n_dev = int(np.prod(MESH_SHAPE))
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
@@ -148,18 +278,27 @@ def _run_mesh_section() -> Optional[Dict]:
                                        "src"))
     env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
                                if env.get("PYTHONPATH") else "")
-    out = subprocess.run(
-        [sys.executable, os.path.abspath(__file__), "--mesh-child"],
-        env=env, capture_output=True, text=True, timeout=1200)
-    lines = [l for l in out.stdout.splitlines() if l.startswith("MESHROWS:")]
-    if out.returncode != 0 or not lines:
-        print(f"[bench_dispatch] mesh section failed:\n{out.stderr[-2000:]}")
+    try:
+        return subprocess.run(
+            [sys.executable, os.path.abspath(__file__), flag],
+            env=env, capture_output=True, text=True, timeout=1200)
+    except subprocess.TimeoutExpired:
+        return None
+
+
+def _run_mesh_section() -> Optional[Dict]:
+    out = _run_child("--mesh-child")
+    lines = [] if out is None else [
+        l for l in out.stdout.splitlines() if l.startswith("MESHROWS:")]
+    if out is None or out.returncode != 0 or not lines:
+        err = "timeout" if out is None else out.stderr[-2000:]
+        print(f"[bench_dispatch] mesh section failed:\n{err}")
         return None
     rows = json.loads(lines[0][len("MESHROWS:"):])
     f = [r for r in rows if r["path"] == "fused"]
     s = [r for r in rows if r["path"] == "seed"]
     return {
-        "devices": n_dev,
+        "devices": int(np.prod(MESH_SHAPE)),
         "mesh_shape": list(MESH_SHAPE),
         "rows": rows,
         "summary": {
@@ -173,7 +312,9 @@ def _run_mesh_section() -> Optional[Dict]:
     }
 
 
-def run(skip_mesh: bool = False) -> Dict:
+def run(skip_mesh: bool = False, skip_serve: bool = False) -> Dict:
+    """Full benchmark: single-device dispatch A/B, the mesh leg, and the
+    serve_round section.  Returns the schema-v3 result dict."""
     rows = []
     for batch in BATCHES:
         for use_fused in (True, False):
@@ -183,7 +324,7 @@ def run(skip_mesh: bool = False) -> Dict:
     speedup = (np.mean([r["us_per_flush"] for r in small_s]) /
                np.mean([r["us_per_flush"] for r in small_f]))
     return {
-        "schema": "bench_dispatch/v2",
+        "schema": "bench_dispatch/v3",
         "backend": jax.default_backend(),
         "block": list(BLOCK),
         "nblk": NBLK,
@@ -191,6 +332,7 @@ def run(skip_mesh: bool = False) -> Dict:
         "rows": rows,
         "summary": {"speedup_small_batch": float(speedup)},
         "mesh": None if skip_mesh else _run_mesh_section(),
+        "serve_round": None if skip_serve else _run_serve_section(skip_mesh),
     }
 
 
@@ -202,18 +344,37 @@ def _print_rows(rows) -> None:
               f"{r['bytes_moved'] / 1e6:>9.1f}")
 
 
+def _print_serve(section: Dict) -> None:
+    for r in section["rows"]:
+        print(f"  {r['path']:>14} {r['launches_admit_round']:>8.2f} "
+              f"launches/admit-round {r['us_per_round']:>12.1f} us/round "
+              f"({r['stage_promotions']} promotions)")
+    s = section["summary"]
+    print(f"  round speedup {s['speedup']:.2f}x  (admit-round launches "
+          f"{s['launches_fused']:.2f} fused vs {s['launches_seed']:.2f} "
+          f"seed)")
+
+
 def main() -> None:
+    """CLI entry — see the module docstring for the output schema."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_dispatch.json")
     ap.add_argument("--skip-mesh", action="store_true",
-                    help="skip the 8-device subprocess A/B section")
+                    help="skip the 8-device subprocess A/B sections")
+    ap.add_argument("--skip-serve", action="store_true",
+                    help="skip the serving-round A/B section")
     ap.add_argument("--mesh-child", action="store_true",
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--serve-mesh-child", action="store_true",
                     help=argparse.SUPPRESS)
     args = ap.parse_args()
     if args.mesh_child:
         _mesh_child()
         return
-    result = run(skip_mesh=args.skip_mesh)
+    if args.serve_mesh_child:
+        _serve_child()
+        return
+    result = run(skip_mesh=args.skip_mesh, skip_serve=args.skip_serve)
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
     print(f"{'batch':>6} {'path':>6} {'launches':>9} {'table':>6} "
@@ -229,6 +390,15 @@ def main() -> None:
         print(f"mesh flush speedup: {m['summary']['speedup']:.2f}x  "
               f"(launches/flush {m['summary']['launches_fused']:.2f} fused "
               f"vs {m['summary']['launches_seed']:.2f} seed)")
+    if result["serve_round"]:
+        sr = result["serve_round"]
+        print(f"\nserve_round ({sr['arch']}, {sr['rounds']} rounds, "
+              f"{sr['admit_rounds']} admissions):")
+        _print_serve(sr)
+        if sr["mesh"]:
+            print(f"serve_round mesh ({sr['mesh']['devices']} host "
+                  f"devices):")
+            _print_serve(sr["mesh"])
     print(f"-> {args.out}")
 
 

@@ -1,6 +1,8 @@
-# The paper's primary contribution: the RowClone engine — in-memory bulk
-# copy (FPM/PSM), bulk init via reserved zero rows + lazy-zero (ZI), the
-# subarray-aware allocator, and the CoW paged KV cache built on them.
+"""The paper's primary contribution: the RowClone engine — in-memory bulk
+copy (FPM/PSM), bulk init via reserved zero rows + lazy-zero (ZI), the
+subarray-aware allocator, and the CoW paged KV cache built on them.
+
+See docs/ARCHITECTURE.md for the paper-mechanism → module map."""
 from repro.core.allocator import AllocStats, OutOfBlocks, SubarrayAllocator
 from repro.core.cmdqueue import (BUCKETS, CommandQueue, QueueStats,
                                  ShardPlan, bucket_size, partition_commands)

@@ -18,7 +18,8 @@ import numpy as np
 
 
 class OutOfBlocks(RuntimeError):
-    pass
+    """Raised when an allocation cannot be satisfied from the allowed
+    slabs (the pool — or a batch group's slab subset — is exhausted)."""
 
 
 @dataclasses.dataclass
@@ -58,29 +59,51 @@ class SubarrayAllocator:
 
     # ------------------------------------------------------------------
     def slab_of(self, block_id: int) -> int:
+        """Slab ("subarray") index holding ``block_id``."""
         return block_id // self.slab_size
 
     def free_in_slab(self, slab: int) -> int:
+        """Free blocks remaining in one slab."""
         return len(self._free[slab])
 
     def total_free(self) -> int:
+        """Free blocks remaining across every slab."""
         return sum(len(f) for f in self._free)
 
     # ------------------------------------------------------------------
     def alloc(self, n: int = 1, prefer_slab: Optional[int] = None,
-              zeroed: bool = False) -> List[int]:
+              zeroed: bool = False,
+              allowed_slabs: Optional[Sequence[int]] = None) -> List[int]:
         """Allocate ``n`` blocks, preferring ``prefer_slab`` (subarray-aware
-        placement).  Falls back to the least-loaded slab."""
+        placement).  Falls back to the least-loaded slab.
+
+        ``allowed_slabs`` restricts the fallback set — the sharded-batch
+        serving tables use it to pin a sequence's blocks inside the device
+        group that owns the sequence's batch slot, so share-mask columns
+        can use local numbering.  Raises :class:`OutOfBlocks` when the
+        allowed slabs are exhausted rather than silently crossing the
+        group boundary."""
         out: List[int] = []
+        pool = (list(allowed_slabs) if allowed_slabs is not None
+                else list(range(self.num_slabs)))
         for _ in range(n):
             slab = prefer_slab
-            if slab is None or not self._free[slab]:
+            if slab is None or slab not in pool or not self._free[slab]:
                 if prefer_slab is not None:
                     self.stats.psm_fallback += 1
-                slab = int(np.argmax([len(f) for f in self._free]))
+                slab = pool[int(np.argmax([len(self._free[s])
+                                           for s in pool]))]
                 if not self._free[slab]:
+                    # roll back this request's partial grab: group
+                    # exhaustion is a routine, recoverable event for the
+                    # sharded-batch serving tables, and leaked blocks
+                    # would permanently shrink the group
+                    self.free(out)
+                    self.stats.allocs -= len(out)
+                    self.stats.frees -= len(out)
                     raise OutOfBlocks(
-                        f"pool exhausted ({self.num_blocks} blocks)")
+                        f"pool exhausted ({self.num_blocks} blocks, "
+                        f"slabs {pool})")
             elif prefer_slab is not None:
                 self.stats.fpm_eligible += 1
             bid = self._free[slab].pop()
@@ -90,11 +113,12 @@ class SubarrayAllocator:
             self.stats.allocs += 1
         return out
 
-    def alloc_near(self, src_block: int, zeroed: bool = False) -> int:
+    def alloc_near(self, src_block: int, zeroed: bool = False,
+                   allowed_slabs: Optional[Sequence[int]] = None) -> int:
         """CoW destination placement: same slab as the source when possible
         (paper §3.1 — enables FPM for the copy)."""
         return self.alloc(1, prefer_slab=self.slab_of(src_block),
-                          zeroed=zeroed)[0]
+                          zeroed=zeroed, allowed_slabs=allowed_slabs)[0]
 
     def share(self, ids: Sequence[int]) -> None:
         """CoW share (fork): bump refcounts — the ZI 'in-cache copy': no
@@ -105,6 +129,8 @@ class SubarrayAllocator:
             self.stats.cow_shares += 1
 
     def free(self, ids: Sequence[int]) -> None:
+        """Drop one reference per id; blocks return to their slab's free
+        list when the last sharer releases them."""
         for b in ids:
             assert self.refcount[b] > 0, f"double free of block {b}"
             self.refcount[b] -= 1
@@ -113,14 +139,18 @@ class SubarrayAllocator:
                 self._free[self.slab_of(b)].append(int(b))
 
     def is_shared(self, block_id: int) -> bool:
+        """More than one sequence references the block (CoW pending)."""
         return self.refcount[block_id] > 1
 
     # ------------------------------------------------------------------
     def mark_zero(self, ids: Sequence[int]) -> None:
+        """Set the ZI lazy-zero bit: the blocks are LOGICALLY zero in
+        every primary pool while physically holding stale bytes."""
         self.is_zero[list(ids)] = True
         self.stats.lazy_zero += len(ids)
 
     def mark_written(self, ids: Sequence[int]) -> None:
+        """Clear the lazy-zero bit: the blocks now hold real data."""
         self.is_zero[list(ids)] = False
 
     def pending_zero(self, ids: Sequence[int]) -> List[int]:
@@ -129,4 +159,5 @@ class SubarrayAllocator:
         return [int(b) for b in ids if self.is_zero[b]]
 
     def zero_row_of(self, slab: int) -> int:
+        """The slab's reserved all-zero row (the BuZ broadcast source)."""
         return self.zero_rows[slab]

@@ -22,7 +22,17 @@ chunks instead of raising.
 Hazard guards (the MC's ordering rules): a command whose source was written
 by a pending command, or whose destination is already pending, triggers an
 automatic flush first — so within one table, gather-then-scatter semantics
-and the kernel's sequential DMA drain agree exactly.
+and the kernel's sequential DMA drain agree exactly.  Keys are
+``(pool, block)`` pairs: plain opcodes touch the block in every *primary*
+pool, while ``OP_CROSS_POOL_COPY`` names one pool on each side — so a
+staging→KV promotion of block ``d`` and a later staging write of the same
+numeric block id in a *different* pool do not falsely serialize (see
+:meth:`CommandQueue._hazard_keys`).
+
+Invariant for writers of new opcodes: every command must name its written
+block in ``dst`` (and its read block in ``src`` — stacked
+``pool * nblk + block`` for cross-pool ops) so both the hazard keys here
+and :func:`partition_commands` see every read and write.
 """
 from __future__ import annotations
 
@@ -167,52 +177,82 @@ class CommandQueue:
     """Accumulates ``(opcode, src, dst)`` commands for a RowCloneEngine and
     drains them through the engine's fused dispatch at flush time."""
 
+    #: pool index standing for "every primary pool" in a hazard key (plain
+    #: opcodes move the block in all primary pools at once)
+    ALL_PRIMARY = -1
+
     def __init__(self, engine):
         self.engine = engine
         self.stats = QueueStats()
         self._cmds: List[Tuple[int, int, int]] = []
-        self._pending_dsts: Set[int] = set()
+        # pending destination writes: block id -> set of pool indices
+        # (ALL_PRIMARY = the block is being written in every primary pool)
+        self._pending_dsts: Dict[int, Set[int]] = {}
 
     def __len__(self) -> int:
         return len(self._cmds)
 
     @property
     def pending(self) -> List[Tuple[int, int, int]]:
+        """Copy of the not-yet-flushed ``(opcode, src, dst)`` rows."""
         return list(self._cmds)
 
     # ------------------------------------------------------------------
-    def _hazard_keys(self, opcode: int, src: int,
-                     dst: int) -> Tuple[Optional[int], int]:
-        """Block-id keys used for ordering hazards.  CROSS_POOL ids are
-        stacked (pool*nblk + block); they fold back to plain block ids,
-        which is conservative (a same-id block in another pool also
-        flushes) but never unsafe."""
+    def _hazard_keys(self, opcode: int, src: int, dst: int) -> Tuple[
+            Optional[Tuple[int, int]], Tuple[int, int]]:
+        """``(pool, block)`` keys used for ordering hazards.
+
+        Plain opcodes (FPM/PSM/baseline copy, zero-init) read and write the
+        block in EVERY primary pool → pool key :data:`ALL_PRIMARY`.
+        ``OP_CROSS_POOL_COPY`` carries stacked ``pool * nblk + block`` ids,
+        so its keys name the exact (pool, block) touched — a staging→KV
+        promotion of block ``d`` does not serialize against an unrelated
+        command on the same numeric block id in another pool."""
         nblk = self.engine.num_blocks
         if opcode == OP_CROSS_POOL_COPY:
-            return src % nblk, dst % nblk
+            return ((src // nblk, src % nblk), (dst // nblk, dst % nblk))
         if opcode == OP_ZERO_INIT:
-            return None, dst
-        return src, dst
+            return None, (self.ALL_PRIMARY, dst)
+        return (self.ALL_PRIMARY, src), (self.ALL_PRIMARY, dst)
+
+    def _conflicts(self, key: Tuple[int, int]) -> bool:
+        """Does ``(pool, block)`` overlap any pending destination write?
+        ALL_PRIMARY expands to the primary pool set on either side; a
+        staging-pool key only collides with an exact pool match."""
+        pool, block = key
+        pending = self._pending_dsts.get(block)
+        if pending is None:
+            return False
+        if pool in pending:
+            return True
+        n_primary = self.engine.n_primary
+        if pool == self.ALL_PRIMARY:
+            return any(p == self.ALL_PRIMARY or p < n_primary
+                       for p in pending)
+        return self.ALL_PRIMARY in pending and pool < n_primary
 
     def enqueue(self, opcode: int, src: int, dst: int) -> None:
+        """Append one tagged command, auto-flushing first if it would read
+        or rewrite a pending destination (RAW/WAW within one table would
+        make gather-scatter and sequential drain diverge)."""
         skey, dkey = self._hazard_keys(opcode, src, dst)
-        if (skey is not None and skey in self._pending_dsts) \
-                or dkey in self._pending_dsts:
-            # read-after-write / write-after-write within one table would
-            # make gather-scatter and sequential drain diverge — drain first
+        if (skey is not None and self._conflicts(skey)) \
+                or self._conflicts(dkey):
             self.stats.hazard_flushes += 1
             self.flush()
         self._cmds.append((int(opcode), int(src), int(dst)))
-        self._pending_dsts.add(dkey)
+        self._pending_dsts.setdefault(dkey[1], set()).add(dkey[0])
         self.stats.enqueued += 1
         self.stats.max_pending = max(self.stats.max_pending, len(self._cmds))
 
     def enqueue_copy(self, opcode: int,
                      pairs: Sequence[Tuple[int, int]]) -> None:
+        """Enqueue one copy command per (src, dst) pair under ``opcode``."""
         for s, d in pairs:
             self.enqueue(opcode, s, d)
 
     def enqueue_zero(self, ids: Sequence[int]) -> None:
+        """Enqueue a BuZ zero-init (reserved-zero-row broadcast) per id."""
         for b in ids:
             self.enqueue(OP_ZERO_INIT, -1, b)
 
@@ -224,7 +264,7 @@ class CommandQueue:
         if not self._cmds:
             return 0
         cmds, self._cmds = self._cmds, []
-        self._pending_dsts = set()
+        self._pending_dsts = {}
         launches = 0
         top = BUCKETS[-1]
         for lo in range(0, len(cmds), top):
@@ -234,6 +274,9 @@ class CommandQueue:
             launches += self.engine._dispatch_table(table, len(chunk))
         self.stats.flushes += 1
         self.stats.launches += launches
+        after = getattr(self.engine, "_after_flush", None)
+        if after is not None:
+            after()
         return launches
 
 

@@ -25,7 +25,7 @@ from typing import Dict, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.allocator import SubarrayAllocator
+from repro.core.allocator import OutOfBlocks, SubarrayAllocator
 from repro.core.rowclone import RowCloneEngine
 
 
@@ -35,42 +35,106 @@ class Sequence:
     length: int
     blocks: List[int]          # pool block ids, in order
     slab_home: int             # preferred slab ("subarray" affinity)
+    group: int = 0             # batch group owning the sequence's slot
 
 
 class PagedCoWCache:
-    """Block-table manager with CoW fork over a RowCloneEngine."""
+    """Block-table manager with CoW fork over a RowCloneEngine.
+
+    ``batch_groups`` > 1 enables the sharded-batch serving tables: the
+    decode batch shards over the mesh's (pod, data) axes into that many
+    device groups, so ``device_tables`` emits share-mask columns in LOCAL
+    batch numbering (``max_seqs // batch_groups`` columns; column = slot %
+    local batch) and every sequence's blocks are pinned inside its group's
+    slabs — the placement that lets each device group serve its own
+    sequences from its own slab sweep.  ``batch_groups=1`` (default) keeps
+    the seed's global columns and unconstrained placement.
+    """
 
     def __init__(self, engine: RowCloneEngine, page: int,
-                 max_blocks_per_seq: int, max_seqs: int):
+                 max_blocks_per_seq: int, max_seqs: int,
+                 batch_groups: int = 1):
         self.engine = engine
         self.alloc: SubarrayAllocator = engine.alloc
         self.page = page
         self.max_blocks_per_seq = max_blocks_per_seq
         self.max_seqs = max_seqs
+        if batch_groups > 1:
+            if max_seqs % batch_groups or \
+                    self.alloc.num_blocks % batch_groups or \
+                    self.alloc.num_slabs % batch_groups:
+                raise ValueError(
+                    f"batch_groups={batch_groups} must divide max_seqs="
+                    f"{max_seqs}, nblk={self.alloc.num_blocks} and "
+                    f"num_slabs={self.alloc.num_slabs}")
+        self.batch_groups = batch_groups
+        self.b_local = max_seqs // batch_groups
         self.seqs: Dict[int, Sequence] = {}
         self._next_id = 0
         # device-visible tables (rebuilt lazily)
         self._dirty = True
         self._table = np.full((max_seqs, max_blocks_per_seq), -1, np.int32)
-        self._mask = np.zeros((self.alloc.num_blocks, max_seqs), np.int8)
+        self._mask = np.zeros((self.alloc.num_blocks, self.b_local), np.int8)
         self._base = np.zeros(self.alloc.num_blocks, np.int32)
         self._slot_of: Dict[int, int] = {}      # seq_id -> table row
-        self._free_slots = list(range(max_seqs - 1, -1, -1))
+        # per-group slot free lists (one global group when unsharded)
+        self._free_slots: List[List[int]] = [
+            list(range((g + 1) * self.b_local - 1, g * self.b_local - 1, -1))
+            for g in range(batch_groups)]
+
+    # ------------------------------------------------------------------
+    # group arithmetic (no-ops when batch_groups == 1)
+    # ------------------------------------------------------------------
+    def group_of_block(self, block_id: int) -> int:
+        """Batch group owning the device shard that holds ``block_id``."""
+        return block_id // (self.alloc.num_blocks // self.batch_groups)
+
+    def group_slabs(self, group: int) -> Optional[List[int]]:
+        """Allocator slabs inside ``group``'s block range (None = any)."""
+        if self.batch_groups == 1:
+            return None
+        spg = self.alloc.num_slabs // self.batch_groups
+        return list(range(group * spg, (group + 1) * spg))
+
+    def _pick_group(self) -> int:
+        """Group with a free slot and the most headroom."""
+        best, best_key = -1, None
+        for g in range(self.batch_groups):
+            if not self._free_slots[g]:
+                continue
+            free_blocks = sum(self.alloc.free_in_slab(s)
+                              for s in (self.group_slabs(g) or
+                                        range(self.alloc.num_slabs)))
+            key = (len(self._free_slots[g]), free_blocks)
+            if best_key is None or key > best_key:
+                best, best_key = g, key
+        if best < 0:
+            raise RuntimeError("no free sequence slots")
+        return best
 
     # ------------------------------------------------------------------
     def new_sequence(self, prompt_len: int = 0,
                      prefer_slab: Optional[int] = None) -> int:
+        """Admit a sequence: reserve a batch slot, allocate its prompt
+        blocks (inside the slot's group slabs when the batch shards), and
+        BuZ-lazy-zero them.  Returns the sequence id."""
         sid = self._next_id
         self._next_id += 1
         nblk = (prompt_len + self.page - 1) // self.page
-        if prefer_slab is None:
-            prefer_slab = sid % self.alloc.num_slabs
-        blocks = self.alloc.alloc(nblk, prefer_slab=prefer_slab, zeroed=False)
+        group = self._pick_group()
+        slabs = self.group_slabs(group)
+        if prefer_slab is None or (slabs is not None
+                                   and prefer_slab not in slabs):
+            prefer_slab = (slabs or list(range(self.alloc.num_slabs)))[
+                sid % (len(slabs) if slabs else self.alloc.num_slabs)]
+        blocks = self.alloc.alloc(nblk, prefer_slab=prefer_slab,
+                                  zeroed=False, allowed_slabs=slabs)
         if blocks:
             # fresh blocks logically zeroed via ZI (BuZ, metadata-only)
             self.engine.meminit(blocks)
-        self.seqs[sid] = Sequence(sid, prompt_len, blocks, prefer_slab)
-        slot = self._free_slots.pop()
+        self.seqs[sid] = Sequence(sid, prompt_len, blocks, prefer_slab,
+                                  group)
+        slot = self._free_slots[group].pop()
         self._slot_of[sid] = slot
         self._dirty = True
         return sid
@@ -92,16 +156,37 @@ class PagedCoWCache:
             for _ in range(n_children):
                 sid = self._next_id
                 self._next_id += 1
-                if eager_copy and parent.blocks:
-                    blocks = [self.alloc.alloc_near(b)
-                              for b in parent.blocks]
+                # a CoW share is only visible to readers in the block's own
+                # group: a child landing in another group must eager-copy
+                # its blocks across (PSM transfers through the queue)
+                if self._free_slots[parent.group]:
+                    group = parent.group
+                    eager = eager_copy
+                else:
+                    group = self._pick_group()
+                    eager = True
+                slabs = self.group_slabs(group)
+                if eager and parent.blocks:
+                    blocks = []
+                    try:
+                        for b in parent.blocks:
+                            blocks.append(self.alloc.alloc_near(
+                                b, allowed_slabs=slabs))
+                    except OutOfBlocks:
+                        # group exhaustion is recoverable: roll back this
+                        # child's partial clone (already-created children
+                        # stand; the caller sees the shortfall)
+                        self.alloc.free(blocks)
+                        raise
                     self.engine.memcopy(list(zip(parent.blocks, blocks)))
                 else:
                     self.alloc.share(parent.blocks)
                     blocks = list(parent.blocks)
+                home = parent.slab_home if slabs is None or \
+                    parent.slab_home in slabs else slabs[0]
                 self.seqs[sid] = Sequence(sid, parent.length, blocks,
-                                          parent.slab_home)
-                slot = self._free_slots.pop()
+                                          home, group)
+                slot = self._free_slots[group].pop()
                 self._slot_of[sid] = slot
                 out.append(sid)
         self._dirty = True
@@ -118,8 +203,9 @@ class PagedCoWCache:
             raise ValueError("sequence exceeds max_blocks_per_seq")
         if j >= len(seq.blocks):
             # new tail block — ZI-lazy-zeroed fresh block, FPM-local
-            nb = self.alloc.alloc(1, prefer_slab=seq.slab_home,
-                                  zeroed=False)[0]
+            nb = self.alloc.alloc(1, prefer_slab=seq.slab_home, zeroed=False,
+                                  allowed_slabs=self.group_slabs(seq.group)
+                                  )[0]
             self.engine.meminit([nb])
             seq.blocks.append(nb)
             self._dirty = True
@@ -128,7 +214,8 @@ class PagedCoWCache:
             if self.alloc.is_shared(b):
                 # CoW write to a shared block: allocate in the SAME slab
                 # (subarray-aware placement) and copy via the engine — FPM.
-                nb = self.alloc.alloc_near(b)
+                nb = self.alloc.alloc_near(
+                    b, allowed_slabs=self.group_slabs(seq.group))
                 self.engine.memcopy([(b, nb)])
                 self.alloc.free([b])
                 seq.blocks[j] = nb
@@ -146,15 +233,21 @@ class PagedCoWCache:
             return [self.append_token(sid) for sid in seq_ids]
 
     def free_sequence(self, seq_id: int) -> None:
+        """Release a sequence's blocks (refcount-aware) and its slot."""
         seq = self.seqs.pop(seq_id)
         self.alloc.free(seq.blocks)
-        self._free_slots.append(self._slot_of.pop(seq_id))
+        self._free_slots[seq.group].append(self._slot_of.pop(seq_id))
         self._dirty = True
 
     # ------------------------------------------------------------------
     # device-visible views
     # ------------------------------------------------------------------
     def rebuild_tables(self) -> None:
+        """Recompute the block table, share mask, and base offsets from the
+        live sequences.  With ``batch_groups > 1`` the mask columns are
+        LOCAL (slot % b_local) — valid because every block of a sequence
+        lives in the sequence's own group (asserted here: a violation would
+        silently attach the block to the wrong sequence on-device)."""
         self._table.fill(-1)
         self._mask.fill(0)
         self._base.fill(0)
@@ -166,25 +259,35 @@ class PagedCoWCache:
                 # the slab-sweep attention serves every sharer from the one
                 # physical block (the in-memory dedup the paper's VM-clone
                 # application relies on).
-                self._mask[b, slot] = 1
+                if self.batch_groups > 1:
+                    assert self.group_of_block(b) == seq.group, \
+                        (b, self.group_of_block(b), seq.group, sid)
+                self._mask[b, slot % self.b_local] = 1
                 self._base[b] = j * self.page
         self._dirty = False
 
     def device_tables(self):
+        """(block_table (B, nper), share_mask, base) as device arrays.
+        The share mask has ``max_seqs // batch_groups`` columns — global
+        batch numbering when unsharded, local numbering when the batch
+        shards (see class docstring)."""
         if self._dirty:
             self.rebuild_tables()
         return (jnp.asarray(self._table), jnp.asarray(self._mask),
                 jnp.asarray(self._base))
 
     def seq_lens(self) -> np.ndarray:
+        """(max_seqs,) int32 sequence lengths, indexed by batch slot."""
         lens = np.zeros(self.max_seqs, np.int32)
         for sid, seq in self.seqs.items():
             lens[self._slot_of[sid]] = seq.length
         return lens
 
     def slot_of(self, seq_id: int) -> int:
+        """The sequence's batch-table row (slot // b_local = its group)."""
         return self._slot_of[seq_id]
 
     # convenience for tests/benchmarks
     def blocks_of(self, seq_id: int) -> List[int]:
+        """The sequence's pool block ids, in sequence order."""
         return list(self.seqs[seq_id].blocks)

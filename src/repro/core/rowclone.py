@@ -60,6 +60,7 @@ class EngineStats:
     alias_copies: int = 0
     baseline_copies: int = 0
     cross_pool_copies: int = 0
+    stage_promotions: int = 0   # staged blocks promoted into primary pools
     zero_lazy: int = 0
     zero_materialized: int = 0
     bytes_fpm: int = 0
@@ -83,7 +84,8 @@ class RowCloneEngine:
                  mesh: Optional[Mesh] = None,
                  enable_fpm: bool = True, enable_psm: bool = True,
                  enable_zi: bool = True, max_requests: int = 256,
-                 block_axis: int = 0, use_fused: bool = True):
+                 block_axis: int = 0, use_fused: bool = True,
+                 staging: Optional[Dict[str, str]] = None):
         """``block_axis``: which pool axis indexes blocks.  0 = flat pools
         (nblk, ...); 1 = layer-stacked serving pools (L, nblk, ...) where a
         logical block is L physical pages moved together (L independent
@@ -93,7 +95,17 @@ class RowCloneEngine:
         fused-dispatch launch (default) — under a multi-device mesh, one
         shard_map'd collective launch over per-slab sub-tables.  False
         restores the seed's per-mechanism, per-pool fan-out padded to
-        ``max_requests``, kept for A/B benchmarking."""
+        ``max_requests``, kept for A/B benchmarking.
+
+        ``staging``: map of *staging* pool name -> its paired primary pool
+        (e.g. ``{"k_stage": "k", "v_stage": "v"}``).  Staging pools must
+        come LAST in ``pools`` and share their primary twin's block shape
+        and dtype.  Plain opcodes (memcopy/meminit) move blocks in primary
+        pools only; staged bytes enter and leave a staging pool exclusively
+        through ``OP_CROSS_POOL_COPY`` (``promote_staged``), so allocator
+        metadata (ZI bits, refcounts) keeps describing primary blocks.
+        Staging slot ids are engine-managed (``stage_blocks``), disjoint
+        from the allocator's free lists."""
         self.pools = dict(pools)
         self.alloc = allocator
         self.mesh = mesh
@@ -103,26 +115,56 @@ class RowCloneEngine:
         self.max_requests = max_requests
         self.block_axis = block_axis
         self.use_fused = use_fused
+        self.staging = dict(staging or {})
         self.stats = EngineStats()
         self.queue = CommandQueue(self)
         self.deferred = False
         self._warned_unshardable = False
         self._zero_blocks: Optional[Tuple[jnp.ndarray, ...]] = None
-        nblk = next(iter(pools.values())).shape[block_axis]
-        assert nblk == allocator.num_blocks
+        nblk = allocator.num_blocks
+        for name, p in self.pools.items():
+            assert p.shape[block_axis] == nblk, \
+                f"pool {name!r}: {p.shape[block_axis]} blocks != {nblk}"
+        names = list(self.pools)
+        for sname, pname in self.staging.items():
+            assert sname in self.pools and pname in self.pools, (sname, pname)
+            assert names.index(sname) >= self.n_primary, \
+                f"staging pool {sname!r} must come after every primary pool"
+            assert self.pools[sname].shape == self.pools[pname].shape \
+                and self.pools[sname].dtype == self.pools[pname].dtype, \
+                f"staging pool {sname!r} must mirror {pname!r}"
+        # staging slot free list + ids whose promotion is still queued
+        # (reclaimed by _after_flush once the cross-pool copy has drained)
+        self._stage_free: List[int] = list(range(nblk - 1, -1, -1))
+        self._stage_inflight: List[int] = []
 
     # ------------------------------------------------------------------
     @property
     def num_blocks(self) -> int:
+        """Blocks per pool (every pool shares the allocator's count)."""
         return self.alloc.num_blocks
+
+    @property
+    def n_primary(self) -> int:
+        """Number of leading primary pools (plain opcodes touch exactly
+        these; trailing staging pools only see cross-pool commands)."""
+        return len(self.pools) - len(self.staging)
+
+    @property
+    def primary_names(self) -> Tuple[str, ...]:
+        """Names of the primary pools, in table order."""
+        return tuple(list(self.pools)[:self.n_primary])
 
     def _multi_device(self) -> bool:
         return self.mesh is not None and \
             int(np.prod(self.mesh.devices.shape)) > 1
 
     def _block_bytes(self) -> int:
+        """Bytes one plain command moves = one block across every PRIMARY
+        pool (staging pools never ride plain opcodes)."""
         total = 0
-        for p in self.pools.values():
+        for name in self.primary_names:
+            p = self.pools[name]
             shape = list(p.shape)
             shape.pop(self.block_axis)
             total += int(np.prod(shape)) * p.dtype.itemsize
@@ -234,28 +276,92 @@ class RowCloneEngine:
         pool) through the same queue: each pair becomes one
         ``CROSS_POOL_COPY`` command with stacked ``pool*nblk + block`` ids,
         so it rides the same fused launch as any pending copies/inits.
-        Source and destination pools must share block shape and dtype."""
+        Source and destination pools must share block shape and dtype.
+
+        Staging pools sit outside the allocator's metadata: a staging
+        *source* always holds real bytes (the prefill wrote them), so the
+        lazy-zero materialization below is skipped; a staging *destination*
+        is an engine-managed slot, so no allocator block is marked
+        written."""
         names = list(self.pools)
         ps, pd = names.index(src_pool), names.index(dst_pool)
         nblk = self.num_blocks
         bb = self._pool_block_bytes(dst_pool)
-        # a lazily-zero source physically holds stale bytes; the ZI bit is
-        # per *block* (all pools jointly), so materialize it before the
-        # pool-level copy (the hazard guard orders the zero before the copy)
-        lazy_srcs = [int(s) for s, _ in pairs
-                     if self.enable_zi and self.alloc.is_zero[s]]
-        if lazy_srcs:
-            self.materialize_zeros(lazy_srcs)
+        # a lazily-zero PRIMARY source physically holds stale bytes; the ZI
+        # bit is per *block* (primary pools jointly), so materialize it
+        # before the pool-level copy (the hazard guard orders the zero
+        # before the copy)
+        if src_pool not in self.staging:
+            lazy_srcs = [int(s) for s, _ in pairs
+                         if self.enable_zi and self.alloc.is_zero[s]]
+            if lazy_srcs:
+                self.materialize_zeros(lazy_srcs)
         for s, d in pairs:
             self.queue.enqueue(OP_CROSS_POOL_COPY, ps * nblk + int(s),
                                pd * nblk + int(d))
             self.stats.cross_pool_copies += 1
             self.stats.bytes_cross += bb
-            # dst now holds real data in dst_pool; a block can only carry
-            # the lazy-zero bit when every pool's bytes are logically zero
-            self.alloc.mark_written([int(d)])
+            if dst_pool not in self.staging:
+                # dst now holds real data in dst_pool; a block can only
+                # carry the lazy-zero bit when every primary pool's bytes
+                # are logically zero
+                self.alloc.mark_written([int(d)])
         self._autoflush()
         return len(pairs)
+
+    # ------------------------------------------------------------------
+    # staging — prefill pages park in a staging pool, then promote into
+    # allocator-owned primary blocks through the SAME command queue
+    # ------------------------------------------------------------------
+    def stage_blocks(self, n: int) -> List[int]:
+        """Reserve ``n`` staging slot ids for an incoming prefill write.
+
+        Slots whose promotion is still queued are not reused (the pending
+        ``CROSS_POOL_COPY`` must read the bytes currently parked there);
+        when the free list runs short the engine drains the queue first,
+        which reclaims every in-flight slot."""
+        if not self.staging:
+            raise RuntimeError("engine has no staging pools")
+        if len(self._stage_free) < n:
+            self.flush()           # drains promotions -> reclaims inflight
+        if len(self._stage_free) < n:
+            raise RuntimeError(
+                f"staging pool exhausted ({n} slots requested, "
+                f"{len(self._stage_free)} free of {self.num_blocks})")
+        return [self._stage_free.pop() for _ in range(n)]
+
+    def release_stage_blocks(self, ids: Sequence[int]) -> None:
+        """Return reserved staging slots that were never promoted (e.g. an
+        admission that failed after ``stage_blocks``)."""
+        self._stage_free.extend(int(b) for b in ids)
+
+    def promote_staged(self, pairs: Sequence[Tuple[int, int]]) -> int:
+        """Promote staged prefill pages into primary pool blocks.
+
+        ``pairs``: (staging_slot, dst_block).  Every registered staging
+        pool promotes into its paired primary pool (k_stage→k and
+        v_stage→v move in the same table), one ``CROSS_POOL_COPY`` command
+        per pool pair per block — with pool-aware hazard keys, the whole
+        promotion plus the round's CoW splits and tail inits drain as ONE
+        fused launch at the next flush boundary.  Staging slots are
+        reclaimed automatically once the queue drains."""
+        if not self.staging:
+            raise RuntimeError("engine has no staging pools")
+        with self.batch():
+            for sname, pname in self.staging.items():
+                self.memcopy_cross(pairs, sname, pname)
+            # inside the batch: slots must be in-flight BEFORE the exit
+            # flush so _after_flush reclaims them with that drain
+            self.stats.stage_promotions += len(pairs)
+            self._stage_inflight.extend(int(s) for s, _ in pairs)
+        return len(pairs)
+
+    def _after_flush(self) -> None:
+        """CommandQueue callback: queued promotions have drained, so their
+        staging slots hold dead bytes and may be reused."""
+        if self._stage_inflight:
+            self._stage_free.extend(self._stage_inflight)
+            self._stage_inflight = []
 
     # ------------------------------------------------------------------
     # meminit
@@ -311,7 +417,8 @@ class RowCloneEngine:
                 pools = tuple(self.pools.values())
                 new = kops.fused_dispatch(pools, self._get_zero_blocks(),
                                           jnp.asarray(table),
-                                          block_axis=self.block_axis)
+                                          block_axis=self.block_axis,
+                                          n_primary=self.n_primary)
                 for name, arr in zip(self.pools, new):
                     self.pools[name] = arr
                 self.stats.launches += 1
@@ -328,7 +435,7 @@ class RowCloneEngine:
         new = kops.fused_dispatch_sharded(
             tuple(self.pools.values()), self._get_zero_blocks(), plan,
             mesh=self.mesh, pool_axes=pool_shard_axes(self.mesh),
-            block_axis=self.block_axis)
+            block_axis=self.block_axis, n_primary=self.n_primary)
         for name, arr in zip(self.pools, new):
             self.pools[name] = arr
         self.stats.launches += 1
@@ -387,7 +494,7 @@ class RowCloneEngine:
         launches = 0
         for chunk in _chunks(pairs, self.max_requests):
             ids = jnp.asarray(self._pad(chunk))
-            for name in self.pools:
+            for name in self.primary_names:
                 if self.block_axis == 1:
                     self.pools[name] = _fpm_axis1_jit(self.pools[name],
                                                       ids)
@@ -408,7 +515,7 @@ class RowCloneEngine:
         fn = _fpm_axis1_jit if self.block_axis == 1 else _psm_jit
         for chunk in _chunks(pairs, self.max_requests):
             ids = jnp.asarray(self._pad(chunk))
-            for name in self.pools:
+            for name in self.primary_names:
                 self.pools[name] = fn(self.pools[name], ids)
                 notify_launch(self.max_requests, 1, "legacy_psm")
                 launches += 1
@@ -418,7 +525,7 @@ class RowCloneEngine:
         launches = 0
         for chunk in _chunks(pairs, self.max_requests):
             ids = jnp.asarray(self._pad(chunk))
-            for name in self.pools:
+            for name in self.primary_names:
                 if self.block_axis == 1:
                     self.pools[name] = _baseline_axis1_jit(self.pools[name],
                                                            ids)
@@ -436,7 +543,7 @@ class RowCloneEngine:
             arr = np.full((m,), -1, np.int32)
             arr[: len(chunk)] = np.asarray(chunk, np.int32)
             idv = jnp.asarray(arr)
-            for name in self.pools:
+            for name in self.primary_names:
                 pool = self.pools[name]
                 if self.block_axis == 1:
                     self.pools[name] = _zero_axis1_jit(pool, idv)

@@ -1,12 +1,15 @@
-# Pallas TPU kernels for the perf-critical layers, each with a pure-jnp
-# oracle in ref.py and a jit'd public wrapper in ops.py:
-#   fused_dispatch  — ONE launch per CommandQueue flush: scalar-prefetched
-#                     [opcode,src,dst] table drained as back-to-back DMAs
-#                     over every pool (the MC command-serialization analogue)
-#   fpm_copy        — RowClone FPM: HBM->HBM DMA block copy (no compute)
-#   psm_transfer    — RowClone PSM: cross-chip RDMA block transfer (ICI),
-#                     pipelined; TARGET code (RDMA needs real TPU)
-#   zero_init       — RowClone BuZ: zero-row DMA broadcast
-#   paged_attention — decode attention slab sweep (flash, CoW share mask)
-#   flash_attention — train/prefill attention (causal + prefix-LM)
-#   ssd_chunk       — Mamba2 SSD intra-chunk quadratic term
+"""Pallas TPU kernels for the perf-critical layers, each with a pure-jnp
+oracle in ref.py and a jit'd public wrapper in ops.py:
+
+  fused_dispatch  — ONE launch per CommandQueue flush: scalar-prefetched
+                    [opcode,src,dst] table drained as back-to-back DMAs
+                    over every pool (the MC command-serialization analogue)
+  fpm_copy        — RowClone FPM: HBM->HBM DMA block copy (no compute)
+  psm_transfer    — RowClone PSM: cross-chip RDMA block transfer (ICI),
+                    pipelined; TARGET code (RDMA needs real TPU)
+  zero_init       — RowClone BuZ: zero-row DMA broadcast
+  paged_attention — decode attention slab sweep (flash, CoW share mask)
+  flash_attention — train/prefill attention (causal + prefix-LM)
+  ssd_chunk       — Mamba2 SSD intra-chunk quadratic term
+
+See docs/ARCHITECTURE.md for the paper-mechanism → module map."""

@@ -42,7 +42,7 @@ the pools be aliased in-place with no snapshot copy).
 from __future__ import annotations
 
 import functools
-from typing import Callable, List, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -85,6 +85,7 @@ def add_launch_hook(fn: Callable[[int, int, str], None]) -> None:
 
 
 def remove_launch_hook(fn: Callable[[int, int, str], None]) -> None:
+    """Unregister a hook added with :func:`add_launch_hook`."""
     _LAUNCH_HOOKS.remove(fn)
 
 
@@ -94,6 +95,11 @@ def launch_count() -> int:
 
 
 def notify_launch(n_commands: int, n_pools: int, mechanism: str) -> None:
+    """Record one bulk-movement device dispatch (launch accounting).
+
+    Every path that issues device work for queued commands — the fused
+    drains, the legacy per-op fan-out, and the seed staging scatter —
+    reports here so tests and benchmarks can assert launches/flush."""
     global _LAUNCH_COUNT
     _LAUNCH_COUNT += 1
     for fn in _LAUNCH_HOOKS:
@@ -104,7 +110,15 @@ def notify_launch(n_commands: int, n_pools: int, mechanism: str) -> None:
 # the kernel
 # ---------------------------------------------------------------------------
 
-def _make_kernel(n_pools: int, block_axis: int, nblk: int):
+def _make_kernel(n_pools: int, block_axis: int, nblk: int,
+                 n_primary: Optional[int] = None):
+    """Build the grid body for ``n_pools`` pools, the first ``n_primary``
+    of which are *primary* (default: all).  Plain opcodes (FPM/PSM/baseline
+    copy, zero-init) move the block in every primary pool; trailing
+    *staging* pools are reachable only through ``OP_CROSS_POOL_COPY`` —
+    bulk movement never touches staged bytes it wasn't asked to move."""
+    n_primary = n_pools if n_primary is None else n_primary
+
     def kernel(cmds_ref, *refs):
         zeros = refs[:n_pools]
         # refs[n:2n] are the aliased (donated) pool inputs — never touched;
@@ -140,12 +154,12 @@ def _make_kernel(n_pools: int, block_axis: int, nblk: int):
             @pl.when((op == OP_FPM_COPY) | (op == OP_PSM_COPY) |
                      (op == OP_BASELINE_COPY))
             def _():
-                for p in range(n_pools):
+                for p in range(n_primary):
                     issue(blk(reads[p], s), blk(outs[p], d), sem)
 
             @pl.when(op == OP_ZERO_INIT)
             def _():
-                for p in range(n_pools):
+                for p in range(n_primary):
                     issue(zeros[p].at[0], blk(outs[p], d), sem)
 
             @pl.when(op == OP_CROSS_POOL_COPY)
@@ -177,7 +191,7 @@ def _make_kernel(n_pools: int, block_axis: int, nblk: int):
 
 
 def _fused_dispatch_call(cmds, zero_blocks, pools, *, block_axis: int,
-                         interpret: bool):
+                         interpret: bool, n_primary: Optional[int] = None):
     """The raw pallas_call — shared by the single-slab jit entry and the
     per-shard body of the sharded entry (already inside a jit there)."""
     n_pools = len(pools)
@@ -185,7 +199,7 @@ def _fused_dispatch_call(cmds, zero_blocks, pools, *, block_axis: int,
     grid = ((cmds.shape[0],) if block_axis == 0
             else (cmds.shape[0], pools[0].shape[0]))
     return pl.pallas_call(
-        _make_kernel(n_pools, block_axis, nblk),
+        _make_kernel(n_pools, block_axis, nblk, n_primary),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
@@ -203,25 +217,31 @@ def _fused_dispatch_call(cmds, zero_blocks, pools, *, block_axis: int,
     )(cmds, *zero_blocks, *pools)
 
 
-@functools.partial(jax.jit, static_argnames=("block_axis", "interpret"),
+@functools.partial(jax.jit,
+                   static_argnames=("block_axis", "interpret", "n_primary"),
                    donate_argnums=(2,))
 def _fused_dispatch_jit(cmds, zero_blocks, pools, *, block_axis: int,
-                        interpret: bool):
+                        interpret: bool, n_primary: Optional[int] = None):
     return _fused_dispatch_call(cmds, zero_blocks, pools,
-                                block_axis=block_axis, interpret=interpret)
+                                block_axis=block_axis, interpret=interpret,
+                                n_primary=n_primary)
 
 
 def fused_dispatch_pallas(pools: Sequence, zero_blocks: Sequence, cmds, *,
-                          block_axis: int = 0,
-                          interpret: bool = False) -> Tuple:
+                          block_axis: int = 0, interpret: bool = False,
+                          n_primary: Optional[int] = None) -> Tuple:
     """Execute one flushed command table over every pool in ONE launch.
 
     pools:       sequence of (nblk, ...) or (L, nblk, ...) arrays (donated)
     zero_blocks: per-pool reserved zero row, shape (1,) + block_shape
     cmds:        (m, 3) int32 [opcode, src, dst]; OP_NOP/-1 rows are padding
+    n_primary:   pools[:n_primary] are primary (plain opcodes move the block
+                 in each of them); trailing staging pools only see
+                 ``OP_CROSS_POOL_COPY``.  None = every pool is primary.
     """
     out = _fused_dispatch_jit(cmds, tuple(zero_blocks), tuple(pools),
-                              block_axis=block_axis, interpret=interpret)
+                              block_axis=block_axis, interpret=interpret,
+                              n_primary=n_primary)
     notify_launch(int(cmds.shape[0]), len(out), "fused")
     return tuple(out)
 
@@ -257,7 +277,7 @@ def _scatter_rows(slab, data, dst, valid, block_axis):
 @functools.lru_cache(maxsize=256)
 def _sharded_runner(mesh, pool_axes: Tuple[str, ...], deltas: Tuple[int, ...],
                     n_pools: int, block_axis: int, use_pallas: bool,
-                    interpret: bool):
+                    interpret: bool, n_primary: int):
     """Build (and cache) the jit'd shard_map'd drain for one static plan
     structure.  The jit layer further caches per array shape; table shapes
     are bucketed (cmdqueue.BUCKETS) and decode-round flushes are local-only
@@ -283,11 +303,12 @@ def _sharded_runner(mesh, pool_axes: Tuple[str, ...], deltas: Tuple[int, ...],
         if use_pallas:
             slabs = list(_fused_dispatch_call(
                 tbl, tuple(zeros), tuple(slabs), block_axis=block_axis,
-                interpret=interpret))
+                interpret=interpret, n_primary=n_primary))
         else:
             from repro.kernels import ref as kref
             slabs = list(kref.fused_dispatch(slabs, zeros, tbl,
-                                             block_axis=block_axis))
+                                             block_axis=block_axis,
+                                             n_primary=n_primary))
         # 3) hop the buffers and scatter on the destination shard
         for k, delta in enumerate(deltas):
             perm = [(i, (i + delta) % n_shards) for i in range(n_shards)]
@@ -302,7 +323,12 @@ def _sharded_runner(mesh, pool_axes: Tuple[str, ...], deltas: Tuple[int, ...],
                              else (1, 1, t) + (1,) * (recvd.ndim - 3))
                 picked = jnp.take_along_axis(
                     recvd, sel.reshape(idx_shape), axis=0)[0]
-                valid = (dst_row >= 0) & ((dst_pool < 0) | (dst_pool == pd))
+                # whole-block rows (dst_pool < 0) came from plain opcodes:
+                # they land in every PRIMARY pool only — staging pools take
+                # cross-pool transfers that name them explicitly
+                valid = (dst_row >= 0) & (
+                    (dst_pool == pd) if pd >= n_primary
+                    else ((dst_pool < 0) | (dst_pool == pd)))
                 slabs[pd] = _scatter_rows(slabs[pd],
                                           picked.astype(slabs[pd].dtype),
                                           dst_row, valid, block_axis)
@@ -320,10 +346,13 @@ def _sharded_runner(mesh, pool_axes: Tuple[str, ...], deltas: Tuple[int, ...],
 def sharded_fused_dispatch(pools: Sequence, zero_blocks: Sequence, plan, *,
                            mesh, pool_axes: Tuple[str, ...],
                            block_axis: int = 0, use_pallas: bool = False,
-                           interpret: bool = False) -> Tuple:
+                           interpret: bool = False,
+                           n_primary: Optional[int] = None) -> Tuple:
     """Drain one partitioned flush (a cmdqueue.ShardPlan) as ONE collective
     launch over every pool: per-slab fused sub-table drains + the
-    cross-slab send/recv plan, all inside a single shard_map'd dispatch."""
+    cross-slab send/recv plan, all inside a single shard_map'd dispatch.
+    ``n_primary`` splits primary from trailing staging pools exactly as in
+    :func:`fused_dispatch_pallas`."""
     if plan.deltas:
         send = jnp.asarray(plan.send_rows)
         recv = jnp.asarray(plan.recv_tables)
@@ -332,7 +361,8 @@ def sharded_fused_dispatch(pools: Sequence, zero_blocks: Sequence, plan, *,
         send = jnp.zeros((0, s, 1), jnp.int32)
         recv = jnp.full((0, s, 1, 3), -1, jnp.int32)
     runner = _sharded_runner(mesh, tuple(pool_axes), tuple(plan.deltas),
-                             len(pools), block_axis, use_pallas, interpret)
+                             len(pools), block_axis, use_pallas, interpret,
+                             len(pools) if n_primary is None else n_primary)
     out = runner(jnp.asarray(plan.local_tables), send, recv,
                  tuple(zero_blocks), tuple(pools))
     notify_launch(int(plan.local_tables.shape[1]), len(out), "fused_mesh")

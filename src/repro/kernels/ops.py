@@ -51,6 +51,7 @@ def fpm_copy(pool, ids, *, use_pallas: Optional[bool] = None):
 
 
 def fpm_copy_cross(dst_pool, src_pool, ids, *, use_pallas: Optional[bool] = None):
+    """Pool-to-pool FPM block copy (dst_pool[dst] = src_pool[src])."""
     if _resolve_use_pallas(use_pallas):
         return fpm_copy_cross_pallas(dst_pool, src_pool, ids,
                                      interpret=_interpret())
@@ -64,44 +65,51 @@ def meminit_zero(pool, zero_block, ids, *, use_pallas: Optional[bool] = None):
     return kref.zero_init(pool, ids)
 
 
-@functools.partial(jax.jit, static_argnames=("block_axis",),
+@functools.partial(jax.jit, static_argnames=("block_axis", "n_primary"),
                    donate_argnums=(2,))
-def _fused_ref_jit(cmds, zero_blocks, pools, *, block_axis):
+def _fused_ref_jit(cmds, zero_blocks, pools, *, block_axis, n_primary=None):
     return kref.fused_dispatch(pools, zero_blocks, cmds,
-                               block_axis=block_axis)
+                               block_axis=block_axis, n_primary=n_primary)
 
 
 def fused_dispatch(pools, zero_blocks, cmds, *, block_axis: int = 0,
-                   use_pallas: Optional[bool] = None):
+                   use_pallas: Optional[bool] = None,
+                   n_primary: Optional[int] = None):
     """One launch for a whole flushed command table over every pool.
 
     See kernels/fused_dispatch.py for the opcode table and contract.  On
     CPU the jit'd reference executes (one dispatch, HLO-small); tests force
     ``use_pallas=True`` to run the kernel body in interpret mode.
+    ``n_primary`` marks the first n pools as primary (plain opcodes move
+    the block in each); trailing staging pools only see cross-pool rows.
     """
     if _resolve_use_pallas(use_pallas):
         return fused_dispatch_pallas(pools, zero_blocks, cmds,
                                      block_axis=block_axis,
-                                     interpret=_interpret())
+                                     interpret=_interpret(),
+                                     n_primary=n_primary)
     out = _fused_ref_jit(cmds, tuple(zero_blocks), tuple(pools),
-                         block_axis=block_axis)
+                         block_axis=block_axis, n_primary=n_primary)
     notify_launch(int(cmds.shape[0]), len(out), "fused")
     return tuple(out)
 
 
 def fused_dispatch_sharded(pools, zero_blocks, plan, *, mesh, pool_axes,
                            block_axis: int = 0,
-                           use_pallas: Optional[bool] = None):
+                           use_pallas: Optional[bool] = None,
+                           n_primary: Optional[int] = None):
     """One collective launch for a whole flushed command table across the
     mesh: per-slab fused sub-tables + the cross-slab send/recv plan
     (cmdqueue.ShardPlan).  Resolution matches every other op: the per-shard
     drain runs the Pallas kernel body on TPU (or in interpret mode when
     forced) and the jnp reference elsewhere; the inter-slab hops are
-    ppermute collectives either way."""
+    ppermute collectives either way.  ``n_primary`` as in
+    :func:`fused_dispatch`."""
     return sharded_fused_dispatch(pools, zero_blocks, plan, mesh=mesh,
                                   pool_axes=pool_axes, block_axis=block_axis,
                                   use_pallas=_resolve_use_pallas(use_pallas),
-                                  interpret=_interpret())
+                                  interpret=_interpret(),
+                                  n_primary=n_primary)
 
 
 def baseline_copy(pool, ids):
@@ -124,6 +132,8 @@ def psm_transfer(pool_slab, ids, *, axis_name: str = "model"):
 
 def paged_attention_slab(q, k_slab, v_slab, share_mask, base, seq_lens, *,
                          page: int, use_pallas: Optional[bool] = None):
+    """Partial decode attention over one pool slab (see kernels/ref.py
+    ``paged_attention_slab`` for the full contract)."""
     if _resolve_use_pallas(use_pallas):
         return paged_attention_slab_pallas(q, k_slab, v_slab, share_mask,
                                            base, seq_lens, page=page,
@@ -149,6 +159,7 @@ def flash_attention(q, k, v, *, causal=True, prefix_len=0,
 
 
 def ssd_intra_chunk(xb, dtb, cum, Bb, Cb, *, use_pallas: Optional[bool] = None):
+    """Mamba2 SSD intra-chunk quadratic term (kernels/ssd_chunk.py)."""
     if _resolve_use_pallas(use_pallas):
         return ssd_intra_chunk_pallas(xb, dtb, cum, Bb, Cb,
                                       interpret=_interpret())

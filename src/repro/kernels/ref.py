@@ -57,13 +57,19 @@ def zero_init(pool, ids, fill_value=0.0):
 # row reads or rewrites a block an earlier row writes).
 # ---------------------------------------------------------------------------
 
-def fused_dispatch(pools, zero_blocks, cmds, block_axis=0):
+def fused_dispatch(pools, zero_blocks, cmds, block_axis=0, n_primary=None):
     """pools: sequence of (nblk, ...) or (L, nblk, ...); zero_blocks: per-
-    pool (1,) + block_shape; cmds: (m, 3) int32 [opcode, src, dst]."""
+    pool (1,) + block_shape; cmds: (m, 3) int32 [opcode, src, dst].
+
+    ``n_primary``: the first n_primary pools are primary — plain opcodes
+    (copies, zero-init) move the block in each of them; trailing *staging*
+    pools only receive ``OP_CROSS_POOL_COPY`` rows that name them in their
+    stacked dst id.  None = every pool is primary."""
     from repro.kernels.fused_dispatch import (OP_CROSS_POOL_COPY,
                                               OP_ZERO_INIT)
     pools = list(pools)
     n = len(pools)
+    n_primary = n if n_primary is None else n_primary
     ba = block_axis
     nblk = pools[0].shape[ba]
     op, s, d = cmds[:, 0], cmds[:, 1], cmds[:, 2]
@@ -98,7 +104,10 @@ def fused_dispatch(pools, zero_blocks, cmds, block_axis=0):
                 zb.reshape((1, 1) + zb.shape[1:]),
                 (pool.shape[0], cmds.shape[0]) + pool.shape[2:])
         rows = jnp.where(expand(op == OP_ZERO_INIT, rows), zrows, rows)
-        valid = (op >= 0) & (d >= 0) & (~is_cross | (d // nblk == pd))
+        if pd < n_primary:
+            valid = (op >= 0) & (d >= 0) & (~is_cross | (d // nblk == pd))
+        else:   # staging pool: only cross-pool rows addressed to it land
+            valid = is_cross & (d >= 0) & (d // nblk == pd)
         safe = jnp.where(valid, d_loc, nblk)
         out.append(pool.at[safe].set(rows, mode="drop") if ba == 0
                    else pool.at[:, safe].set(rows, mode="drop"))
@@ -112,6 +121,8 @@ def fused_dispatch(pools, zero_blocks, cmds, block_axis=0):
 # ---------------------------------------------------------------------------
 
 def baseline_copy(pool, src_ids, dst_ids):
+    """RowClone-disabled copy: same result as fpm_copy, but the bytes
+    round-trip the compute pipeline (identity VPU op keeps it honest)."""
     rows = pool[jnp.clip(src_ids, 0, pool.shape[0] - 1)]
     # force a VPU round-trip: identity arithmetic the compiler must keep
     rows = (rows.astype(jnp.float32) * 1.0).astype(pool.dtype)
@@ -250,6 +261,9 @@ def paged_attention_dense_ref(q, k, v, seq_lens):
 
 def flash_attention_ref(q, k, v, pos_q, pos_kv, kv_valid, causal=True,
                         prefix_len=0):
+    """Naive full-matrix attention oracle for the flash kernel.
+
+    q: (B,Sq,H,D); k/v: (B,Skv,KVH,D); masks by position + validity."""
     B, Sq, H, D = q.shape
     KVH = k.shape[2]
     group = H // KVH

@@ -2,15 +2,26 @@
 
 The serving loop is the paper's application showcase:
 
-* admission (``add_request``) — prefill runs on a staging layout, then the
-  staged KV pages move into allocator-chosen pool blocks via the engine's
-  **memcopy** (FPM: same-slab DMA; this is the CPU→"process address space"
-  copy that RowClone §3.2 accelerates);
+* admission (``add_request``) — the prefill forward writes its KV pages
+  directly into the engine's **staging pools** (inside the prefill jit —
+  no separate staging dispatch), and the stage→KV-pool promotion enqueues
+  ``OP_CROSS_POOL_COPY`` commands into the engine's command queue (this is
+  the CPU→"process address space" copy that RowClone §3.2 accelerates,
+  expressed as the GS-DRAM-style pool→pool transfer);
 * ``fork`` — parallel sampling / beam search shares every prompt page by
   refcount (zero bytes), CoW-splitting lazily on the first divergent append;
 * fresh pages are BuZ-lazy-zeroed (ZI metadata bit);
-* each decode step runs one jit'd ``model.decode_step`` over the shared
-  pool with the cache's device tables.
+* each decode round drains the queue ONCE — promotions + CoW splits + tail
+  inits ride one fused launch at the round's flush boundary — then runs
+  one jit'd ``model.decode_step`` over the shared pool with the cache's
+  device tables.  Under a mesh the batch shards over (pod, data) whenever
+  the cache can pin each sequence's blocks in its group's slabs
+  (``batch_shard_count``); the flush is one collective launch either way.
+
+``fused_staging=False`` restores the seed's ``_stage_legacy`` path (one
+ad-hoc gather/scatter dispatch per pool per admission, KV pools written
+directly) for A/B benchmarking — ``benchmarks/bench_dispatch.py
+serve_round`` and the staging parity suite drive both.
 
 CLI:  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b \
           --smoke --requests 8 --steps 32 --fork 2
@@ -27,20 +38,28 @@ import numpy as np
 
 from repro.configs import RowCloneConfig, get_config
 from repro.core import PagedCoWCache, RowCloneEngine, SubarrayAllocator
+from repro.kernels.fused_dispatch import notify_launch
 from repro.launch.mesh import pool_shard_count
 from repro.models import build_model, split_params
+from repro.models.paged import batch_shard_count, make_serving_pools
 
 
 class ServingEngine:
+    """Continuous-batching serving facade over RowCloneEngine +
+    PagedCoWCache: admission (prefill + staged promotion), CoW fork, and
+    greedy decode rounds whose bulk movement drains as one fused launch."""
+
     def __init__(self, cfg, params, mesh=None, max_seqs: int = 16,
                  max_blocks_per_seq: int = 64, num_slabs: int = 4,
-                 rc: Optional[RowCloneConfig] = None, impl: str = "ref"):
+                 rc: Optional[RowCloneConfig] = None, impl: str = "ref",
+                 fused_staging: bool = True):
         self.cfg = cfg
         self.rc = rc or RowCloneConfig()
         self.mesh = mesh
         self.impl = impl
         self.model = build_model(cfg, self.rc)
         self.params = params
+        self.fused_staging = fused_staging
         page = self.rc.page_size
         L = cfg.num_attn_layers
         nblk = max_seqs * max_blocks_per_seq
@@ -49,30 +68,46 @@ class ServingEngine:
         align = int(np.lcm(num_slabs, pool_shard_count(mesh)))
         nblk = -(-nblk // align) * align
         kv_dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
-        shape = (L, nblk, page, cfg.num_kv_heads, cfg.head_dim)
         alloc = SubarrayAllocator(nblk, num_slabs,
                                   reserved_zero_per_slab=self.rc
                                   .zero_blocks_per_slab)
-        # the engine sees the mesh: every decode round's CoW splits + tail
-        # inits drain as ONE shard_map'd collective launch at the flush
-        # boundary (the seed pinned the serving engine to mesh=None)
+        # K/V pools + staging twins share one layout (models/paged.py);
+        # the engine sees the mesh: every decode round's promotions + CoW
+        # splits + tail inits drain as ONE (collective) launch at the
+        # round's flush boundary
+        pools, staging = make_serving_pools(
+            L, nblk, page, cfg.num_kv_heads, cfg.head_dim, kv_dtype,
+            staging=fused_staging)
         self.engine = RowCloneEngine(
-            {"k": jnp.zeros(shape, kv_dtype), "v": jnp.zeros(shape, kv_dtype)},
-            alloc, mesh=mesh, enable_fpm=self.rc.enable_fpm,
+            pools, alloc, mesh=mesh, enable_fpm=self.rc.enable_fpm,
             enable_psm=self.rc.enable_psm, enable_zi=self.rc.enable_zi,
-            block_axis=1)
+            block_axis=1, staging=staging)
+        # shard the decode batch over (pod, data) when the cache can pin
+        # each sequence's blocks inside its batch group's slabs; otherwise
+        # keep global share-mask columns (replicated batch — paged.py)
+        dp = batch_shard_count(mesh, max_seqs)
+        if dp > 1 and (num_slabs % dp or nblk % dp):
+            dp = 1
         self.cache = PagedCoWCache(self.engine, page, max_blocks_per_seq,
-                                   max_seqs)
+                                   max_seqs, batch_groups=dp)
         self.last_logits: Dict[int, np.ndarray] = {}
         self.tokens: Dict[int, List[int]] = {}
         self._decode_jit = jax.jit(self._decode_fn, donate_argnums=(1, 2))
+        # NB: the staging pools are deliberately NOT donated — a runtime
+        # failure inside a donated call would invalidate buffers still
+        # holding earlier admissions' un-promoted pages (their promotions
+        # are queued for the round flush), bricking the engine.  The copy
+        # this costs matches the seed _stage_legacy path; re-enabling
+        # donation needs promotion-aware failure recovery (ROADMAP).
+        self._prefill_stage_jit = jax.jit(self._prefill_stage_fn)
+        if fused_staging:
+            # hold the queue open across admissions: promotions drain with
+            # the round's CoW splits + tail inits at decode_round's flush
+            self.engine.deferred = True
 
     # ------------------------------------------------------------------
-    def add_request(self, prompt: np.ndarray) -> int:
-        """prompt: (S,) int32.  Prefill + stage pages into the pool."""
+    def _prefill_batch(self, prompt: np.ndarray) -> Dict[str, jnp.ndarray]:
         S = int(prompt.shape[0])
-        page = self.rc.page_size
-        sid = self.cache.new_sequence(prompt_len=S)
         batch = {"tokens": jnp.asarray(prompt[None, :])}
         if self.cfg.family == "vlm":
             batch["patch_embeds"] = jnp.zeros(
@@ -81,19 +116,63 @@ class ServingEngine:
             batch["src_embeds"] = jnp.zeros(
                 (1, max(S // self.cfg.src_frames_ratio, 1),
                  self.cfg.d_model), jnp.float32)
-        logits, st = self.model.prefill(self.params, batch, self.mesh,
+        return batch
+
+    def _prefill_stage_fn(self, params, batch, k_stage, v_stage, stage_ids):
+        """Prefill forward + scatter of the prompt's KV pages into the
+        staging pools, ONE jit: the staged write costs no extra dispatch,
+        and the only bulk movement left (staging→KV promotion) goes
+        through the command queue."""
+        logits, st = self.model.prefill(params, batch, self.mesh,
                                         margin_tokens=0)
-        # stage prefill pages into allocator-assigned blocks (FPM memcopy)
+        safe = jnp.where(stage_ids >= 0, stage_ids, k_stage.shape[1])
+        k_stage = k_stage.at[:, safe].set(
+            st["k_pools"].astype(k_stage.dtype), mode="drop")
+        v_stage = v_stage.at[:, safe].set(
+            st["v_pools"].astype(v_stage.dtype), mode="drop")
+        extras = {k: st[k] for k in ("conv_state", "ssm_state",
+                                     "cross_k", "cross_v") if k in st}
+        return logits, k_stage, v_stage, extras
+
+    def add_request(self, prompt: np.ndarray) -> int:
+        """prompt: (S,) int32.  Prefill into the staging pools and enqueue
+        the stage→KV promotion (fused path), or scatter straight into the
+        KV pools (seed ``fused_staging=False`` path)."""
+        S = int(prompt.shape[0])
+        sid = self.cache.new_sequence(prompt_len=S)
+        batch = self._prefill_batch(prompt)
         blocks = self.cache.blocks_of(sid)
-        nper = len(blocks)
-        staging_k = st["k_pools"]  # (L, nper, page, KVH, D)
-        staging_v = st["v_pools"]
-        dst = np.asarray(blocks, np.int32)
-        self.engine.alloc.mark_written(blocks)
-        kpool = self.engine.pools["k"]
-        vpool = self.engine.pools["v"]
-        self.engine.pools["k"] = _stage_jit(kpool, staging_k, jnp.asarray(dst))
-        self.engine.pools["v"] = _stage_jit(vpool, staging_v, jnp.asarray(dst))
+        if self.fused_staging:
+            stage_ids = self.engine.stage_blocks(len(blocks))
+            try:
+                logits, k_stage, v_stage, extras = self._prefill_stage_jit(
+                    self.params, batch, self.engine.pools["k_stage"],
+                    self.engine.pools["v_stage"],
+                    jnp.asarray(np.asarray(stage_ids, np.int32)))
+            except Exception:
+                # failed admission must not strand its staging slots; the
+                # un-donated staging pools are untouched on any failure,
+                # so the engine (and every queued promotion) stays usable
+                self.engine.release_stage_blocks(stage_ids)
+                raise
+            self.engine.pools["k_stage"] = k_stage
+            self.engine.pools["v_stage"] = v_stage
+            # the promotion rides the round's fused flush (queue deferred)
+            self.engine.promote_staged(list(zip(stage_ids, blocks)))
+            st = extras
+        else:
+            logits, st = self.model.prefill(self.params, batch, self.mesh,
+                                            margin_tokens=0)
+            # seed path: one ad-hoc gather/scatter dispatch per pool,
+            # bypassing the command queue (kept for A/B)
+            dst = jnp.asarray(np.asarray(blocks, np.int32))
+            self.engine.alloc.mark_written(blocks)
+            self.engine.pools["k"] = _stage_legacy(self.engine.pools["k"],
+                                                   st["k_pools"], dst)
+            notify_launch(len(blocks), 1, "legacy_stage")
+            self.engine.pools["v"] = _stage_legacy(self.engine.pools["v"],
+                                                   st["v_pools"], dst)
+            notify_launch(len(blocks), 1, "legacy_stage")
         self.last_logits[sid] = np.asarray(logits[0])
         self.tokens[sid] = [int(t) for t in prompt]
         # extra per-seq state (ssm/hybrid/encdec) kept host-side per slot
@@ -149,10 +228,11 @@ class ServingEngine:
             lg = self.last_logits[sid]
             t = int(np.argmax(lg)) if sample_fn is None else sample_fn(lg)
             next_tok[sid] = t
-        # CoW/allocation happens BEFORE the jit step (host metadata); all
-        # CoW splits + tail-block inits for the round drain as ONE fused
-        # launch at the attention-step flush boundary
+        # CoW/allocation happens BEFORE the jit step (host metadata); the
+        # round's staged-prefill promotions + CoW splits + tail-block
+        # inits all drain as ONE fused launch at this flush boundary
         self.cache.append_tokens(live)
+        self.engine.flush()
         table, mask, base = self.cache.device_tables()
         lens = self.cache.seq_lens()
         B = self.cache.max_seqs
@@ -178,9 +258,10 @@ class ServingEngine:
 
 
 @jax.jit
-def _stage_jit(pool, staging, dst_ids):
-    """Move staged prefill pages (L, nper, ...) into pool blocks (L, nblk,
-    ...) — the FPM-cross path (same-device DMA, no compute)."""
+def _stage_legacy(pool, staging, dst_ids):
+    """SEED staging path (``fused_staging=False`` A/B only): scatter the
+    prefill's pages (L, nper, ...) straight into the KV pool, one ad-hoc
+    dispatch per pool, bypassing the command queue."""
     safe = jnp.where(dst_ids >= 0, dst_ids, pool.shape[1])
     return pool.at[:, safe].set(staging.astype(pool.dtype), mode="drop")
 

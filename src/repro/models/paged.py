@@ -46,14 +46,31 @@ def pool_shard_count(mesh: Optional[Mesh]) -> int:
 
 
 def batch_shard_axes(mesh: Mesh, batch: int) -> Tuple[str, ...]:
+    """Mesh axes the decode batch shards over: the (pod, data) subset when
+    it divides ``batch``, else () (replicated batch — e.g. B=1 long-context
+    where the whole pod sweeps for one sequence)."""
     dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
     return dp if dp and batch % size == 0 else ()
 
 
-def combine_axes(mesh: Mesh, batch: int) -> Tuple[str, ...]:
-    """Axes over which decode partials must be LSE-combined."""
-    bs = set(batch_shard_axes(mesh, batch))
+def batch_shard_count(mesh: Optional[Mesh], batch: int) -> int:
+    """Device groups the decode batch splits into (1 = replicated batch).
+    The single owner of this arithmetic for the serving layer: the
+    PagedCoWCache uses it to emit LOCAL share-mask columns and to pin each
+    sequence's blocks inside its group's slabs."""
+    if mesh is None:
+        return 1
+    axes = batch_shard_axes(mesh, batch)
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def combine_axes(mesh: Mesh, batch_axes: Tuple[str, ...]) -> Tuple[str, ...]:
+    """Pool axes over which decode partials must be LSE-combined, given
+    the axes the batch ACTUALLY shards over (which may be () even for a
+    divisible batch — the share-mask column count is the contract, see
+    :func:`paged_attend_append`)."""
+    bs = set(batch_axes)
     return tuple(a for a in pool_shard_axes(mesh) if a not in bs)
 
 
@@ -66,6 +83,36 @@ def _maybe(axes: Tuple[str, ...]):
     if not axes:
         return None
     return axes if len(axes) > 1 else axes[0]
+
+
+# ---------------------------------------------------------------------------
+# pool construction — K/V pools and their staging twins are ONE layout
+# decision (same block shape, same dtype, same (pod, data, model) sharding
+# of the block axis), so cross-pool promotion commands are always legal
+# ---------------------------------------------------------------------------
+
+def make_serving_pools(num_layers: int, nblk: int, page: int, kv_heads: int,
+                       head_dim: int, dtype,
+                       staging: bool = True):
+    """Build the serving engine's pool dict: layer-stacked ``(L, nblk,
+    page, KVH, D)`` K/V pools plus (by default) their staging twins.
+
+    The staging pools are where prefill writes land; staged pages promote
+    into allocator-owned K/V blocks via ``OP_CROSS_POOL_COPY`` through the
+    command queue (RowCloneEngine ``promote_staged``), so every byte of
+    bulk movement in a serving round rides one fused launch.  Returns
+    ``(pools, staging_map)`` ready for the RowCloneEngine constructor —
+    staging pools come last, as the engine's primary/staging split
+    requires, and shard by the same ``pool_shard_count`` as their twins.
+    """
+    shape = (num_layers, nblk, page, kv_heads, head_dim)
+    pools = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    staging_map = {}
+    if staging:
+        pools["k_stage"] = jnp.zeros(shape, dtype)
+        pools["v_stage"] = jnp.zeros(shape, dtype)
+        staging_map = {"k_stage": "k", "v_stage": "v"}
+    return pools, staging_map
 
 
 # ---------------------------------------------------------------------------
@@ -82,8 +129,14 @@ def paged_attend_append(mesh: Optional[Mesh], q, k_new, v_new, k_pool, v_pool,
     k_pool/v_pool: (nblk, page, KVH, D) — block axis sharded (pod,data,model)
     blk_ids:  (B,) int32     GLOBAL pool block id receiving this token
     offsets:  (B,) int32     slot within that block
-    share_mask: (nblk, B) int8 — block readable by sequence b (LOCAL batch
-                             columns when the batch is sharded)
+    share_mask: block-readable-by-sequence bitmap, int8.  Its COLUMN COUNT
+                is the batch-sharding contract: ``(nblk, B // dp)`` means
+                local columns — the batch shards over (pod, data) and row
+                ``b``'s columns index the batch group owning block ``b``'s
+                shard (every sequence's blocks must live in its own group's
+                slabs); ``(nblk, B)`` means global columns — the batch
+                stays replicated and partials combine over every pool axis
+                (correct for any block placement).
     base:     (nblk,) int32  token offset of block within its sequence
     seq_lens: (B,) int32     sequence length INCLUDING the new token
 
@@ -97,10 +150,17 @@ def paged_attend_append(mesh: Optional[Mesh], q, k_new, v_new, k_pool, v_pool,
                                     exclusive=exclusive)
 
     B = q.shape[0]
-    bspec = _maybe(batch_shard_axes(mesh, B))
+    b_axes = batch_shard_axes(mesh, B)
+    dp = int(np.prod([mesh.shape[a] for a in b_axes])) if b_axes else 1
+    if b_axes and share_mask.shape[1] != B // dp:
+        # mask columns are GLOBAL batch numbering: the caller's placement
+        # isn't group-aligned, so replicate the batch instead of sharding
+        # it (every slab serves every sequence; combine spans all axes)
+        b_axes = ()
+    bspec = _maybe(b_axes)
     pspec = pool_spec(mesh)
     mspec = P(pspec[0], None)
-    comb = combine_axes(mesh, B)
+    comb = combine_axes(mesh, b_axes)
 
     fn = functools.partial(_attend_append_local, combine=comb,
                            pool_axes=pool_shard_axes(mesh), page=page,

@@ -6,10 +6,13 @@ Streams mix every opcode (FPM/PSM/baseline-adjacent copies, zero-init —
 materialized and lazy — and cross-pool copies), include duplicate
 destinations (exercising the hazard auto-flush), src==dst no-ops, lazy-zero
 sources (the ZI alias fast path), overflow past the top 512 bucket, and both
-``block_axis`` layouts.  The single-device pair runs in-process via
-``tests/_hypo.py``; the three-way comparison including the 8-device mesh
-fused path replays the same generated streams in a subprocess (jax locks the
-host device count at first init).
+``block_axis`` layouts.  Engines carry staging twins (k_stage/v_stage), so
+streams also drive staging↔KV cross-pool traffic — promotions, demotions,
+staging→staging moves, and dup-dst hazards that cross the primary/staging
+address-space boundary (pool-aware hazard keys).  The single-device pair
+runs in-process via ``tests/_hypo.py``; the three-way comparison including
+the 8-device mesh fused path replays the same generated streams in a
+subprocess (jax locks the host device count at first init).
 """
 import json
 import os
@@ -29,7 +32,16 @@ from repro.kernels import fused_dispatch as fd
 # replay — programs are plain JSON)
 # ---------------------------------------------------------------------------
 
-KINDS = ("copy", "copy", "zero", "lazy", "cross")   # copies twice as likely
+KINDS = ("copy", "copy", "zero", "lazy", "cross", "cross")
+
+#: cross-pool pool pairs: primary↔primary plus every staging flavour —
+#: promotion (stage→primary), demotion (primary→stage), stage→stage
+CROSS_POOL_PAIRS = (
+    ("k", "v"), ("v", "k"),
+    ("k_stage", "k"), ("v_stage", "v"),      # promotions
+    ("k", "k_stage"), ("v", "v_stage"),      # demotions
+    ("k_stage", "v"), ("k_stage", "v_stage"),
+)
 
 
 def gen_program(rng: random.Random, nblk: int, n_instr: int):
@@ -54,7 +66,7 @@ def gen_program(rng: random.Random, nblk: int, n_instr: int):
             n = rng.randint(1, 4)
             pairs = [[rng.randrange(nblk), rng.randrange(nblk)]
                      for _ in range(n)]
-            sp, dp = rng.choice([("k", "v"), ("v", "k")])
+            sp, dp = rng.choice(CROSS_POOL_PAIRS)
             prog.append(["cross", pairs, sp, dp])
     return prog
 
@@ -88,9 +100,12 @@ def mk_engine(nblk, block_axis, use_fused, mesh=None, nslabs=4, seed=0):
     pools = {
         "k": jax.random.normal(jax.random.key(seed), shape),
         "v": jax.random.normal(jax.random.key(seed + 1), shape),
+        "k_stage": jax.random.normal(jax.random.key(seed + 2), shape),
+        "v_stage": jax.random.normal(jax.random.key(seed + 3), shape),
     }
     return RowCloneEngine(pools, alloc, mesh=mesh, max_requests=64,
-                          block_axis=block_axis, use_fused=use_fused)
+                          block_axis=block_axis, use_fused=use_fused,
+                          staging={"k_stage": "k", "v_stage": "v"})
 
 
 def assert_pools_equal(a: RowCloneEngine, b: RowCloneEngine, ctx=""):

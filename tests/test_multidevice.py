@@ -183,7 +183,9 @@ results["nop_launches"] = (flush_launches
                            + eng3._dispatch_table(nop, 0) + len(events))
 
 # 5) serving engine picks the mesh up (layer-stacked block_axis=1 pools):
-#    an eager CoW fork's block clones drain as one collective launch
+#    an eager CoW fork's block clones ride the round's flush boundary and
+#    drain as one collective launch (the serving queue stays deferred
+#    between rounds so staged promotions fuse with the decode round)
 from repro.configs import get_config
 from repro.launch.serve import ServingEngine
 cfg = get_config("llama3.2-3b").reduced()
@@ -191,12 +193,34 @@ srv = ServingEngine(cfg, None, mesh=mesh, max_seqs=8, max_blocks_per_seq=8,
                     num_slabs=4)
 results["serve_nblk_aligned"] = bool(srv.engine.num_blocks % 8 == 0)
 results["serve_has_mesh"] = bool(srv.engine.mesh is mesh)
+results["serve_batch_groups"] = srv.cache.batch_groups
 sid = srv.cache.new_sequence(prompt_len=2 * srv.rc.page_size)
 srv.engine.alloc.mark_written(srv.cache.blocks_of(sid))
 events.clear()
 srv.cache.fork(sid, 1, eager_copy=True)
+results["serve_fork_prelaunches"] = len(events)   # deferred: nothing yet
+srv.engine.flush()                                # the round flush boundary
 results["serve_fork_launches"] = len(events)
 results["serve_fork_mechs"] = sorted(set(e[2] for e in events))
+
+# 6) staged admission promotions fuse into the SAME collective launch as
+#    the round's other bulk movement: enqueue a promotion plus an eager
+#    fork of the OLDER sequence (forking the just-admitted one would read
+#    a pending promotion destination and correctly hazard-flush), then
+#    flush once.  The promotion itself crosses shards (staging slots live
+#    on shard 0, the new sequence's group-1 blocks on shards 4-7), so the
+#    cross-pool rows ride the ppermute send/recv plan.
+events.clear()
+stage_ids = srv.engine.stage_blocks(2)
+sid2 = srv.cache.new_sequence(prompt_len=2 * srv.rc.page_size)
+srv.engine.promote_staged(list(zip(stage_ids, srv.cache.blocks_of(sid2))))
+srv.cache.fork(sid, 1, eager_copy=True)
+results["stage_prelaunches"] = len(events)
+srv.engine.flush()
+results["stage_round_launches"] = len(events)
+results["stage_round_mechs"] = sorted(set(e[2] for e in events))
+results["stage_reclaimed"] = bool(
+    all(s in srv.engine._stage_free for s in stage_ids))
 
 print("RESULTS:" + json.dumps(results))
 """
@@ -221,8 +245,14 @@ def test_mesh_fused_dispatch_one_launch_per_flush(tmp_path):
     assert res["nop_launches"] == 0, res
     assert res["serve_nblk_aligned"], res
     assert res["serve_has_mesh"], res
+    assert res["serve_batch_groups"] == 2, res      # (2, 4) mesh: data dp=2
+    assert res["serve_fork_prelaunches"] == 0, res  # deferred until flush
     assert res["serve_fork_launches"] == 1, res
     assert res["serve_fork_mechs"] == ["fused_mesh"], res
+    assert res["stage_prelaunches"] == 0, res
+    assert res["stage_round_launches"] == 1, res    # promotions + fork fuse
+    assert res["stage_round_mechs"] == ["fused_mesh"], res
+    assert res["stage_reclaimed"], res
 
 
 @pytest.mark.slow
