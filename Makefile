@@ -11,13 +11,16 @@
 #   make check-docs   - fail if a public core/ or kernels/ symbol lacks a
 #                       docstring (tools/check_docs.py)
 #   make bench-smoke  - dispatch benchmark (writes BENCH_dispatch.json)
+#   make bench-serve  - serve_round CI gate: fails if the fused serving
+#                       paths regress above 1.0 launch/round or ring
+#                       staging stops matching the twin's greedy tokens
 #   make bench        - full paper-figure benchmark sweep
 
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 PY := PYTHONPATH=$(PYTHONPATH) python
 MESH_FLAGS := XLA_FLAGS=--xla_force_host_platform_device_count=8
 
-.PHONY: test test-mesh test-fast check-docs bench-smoke bench
+.PHONY: test test-mesh test-fast check-docs bench-smoke bench-serve bench
 
 test: check-docs test-mesh
 	$(PY) -m pytest -x -q -m "not mesh"
@@ -33,6 +36,9 @@ check-docs:
 
 bench-smoke:
 	$(PY) benchmarks/bench_dispatch.py
+
+bench-serve:
+	$(PY) benchmarks/bench_dispatch.py --serve-smoke
 
 bench:
 	$(PY) -m benchmarks.run

@@ -10,12 +10,18 @@ Since schema v3 it also A/Bs full SERVING ROUNDS (admission prefill
 staging + CoW fork splits + decode) through the real ServingEngine:
 ``fused_staging`` (staging pools + cross-pool promotion through the
 queue — ONE bulk-movement launch per round) vs the seed ``_stage_legacy``
-scatter path (one ad-hoc dispatch per pool per admission).
+scatter path (one ad-hoc dispatch per pool per admission).  Schema v4
+adds the ``ring_staging`` path — staging pools sized as a
+``max_admit_pages`` RING through the PoolGroup per-pool block counts —
+and tracks ``pool_bytes_resident`` per serve_round row, so the ~2x
+serving-memory reduction is recorded alongside launches/round and
+wall-clock (greedy tokens are asserted bitwise-identical to the
+full-twin path in ``summary.ring_tokens_match``).
 
 Emits ``BENCH_dispatch.json``:
 
 {
-  "schema": "bench_dispatch/v3",
+  "schema": "bench_dispatch/v4",
   "backend": "cpu" | "tpu",
   "block": [page, KVH, D], "nblk": int, "pools": ["k", "v"],
   "rows": [{
@@ -39,23 +45,27 @@ Emits ``BENCH_dispatch.json``:
   "serve_round": {             # full serving rounds through ServingEngine
       "arch": str, "max_seqs": int, "rounds": int, "admit_rounds": int,
       "rows": [{
-          "path": "fused_staging"|"seed_staging",
+          "path": "fused_staging"|"ring_staging"|"seed_staging",
           "launches_admit_round": float, # bulk-movement launches in rounds
                                          # that admit (1.0 fused: prefill
                                          # staging rides the round's flush)
           "launches_per_round": float,   # mean over ALL measured rounds
           "us_per_round": float,         # median post-warmup wall-clock
-          "stage_promotions": int        # blocks promoted via the queue
+          "stage_promotions": int,       # blocks promoted via the queue
+          "pool_bytes_resident": int,    # engine pool bytes (KV + staging)
+          "stage_capacity": int          # staging slots (ring vs twin)
       }],
       "summary": {"speedup": float, "launches_fused": float,
-                  "launches_seed": float},
+                  "launches_seed": float,
+                  "staging_memory_reduction": float,  # twin/ring resident
+                  "ring_tokens_match": bool},  # greedy tokens bitwise ==
       "mesh": {"devices": 8, "mesh_shape": [2, 4],    # sharded-batch leg
                "rows": [...], "summary": {...}} | null
   }
 }
 
 CLI: PYTHONPATH=src python benchmarks/bench_dispatch.py [--out PATH]
-                                             [--skip-mesh] [--skip-serve]
+                         [--skip-mesh] [--skip-serve] [--serve-smoke]
 """
 from __future__ import annotations
 
@@ -155,12 +165,24 @@ SERVE_ARCH = "llama3.2-3b"
 SERVE_ROUNDS = 8
 SERVE_ADMIT_ROUNDS = 4
 SERVE_WARMUP = 2             # rounds excluded from the median (compiles)
+SERVE_MAX_BLOCKS = 16        # KV nblk = 8 * 16 = 128 blocks
+SERVE_RING_PAGES = 8         # staging-ring slots (vs the 128-slot twin)
+
+#: (row label, fused_staging, max_admit_pages) serve_round legs
+SERVE_PATHS = (("fused_staging", True, None),
+               ("ring_staging", True, SERVE_RING_PAGES),
+               ("seed_staging", False, None))
 
 
-def _bench_serve_path(fused_staging: bool, mesh=None) -> Dict:
+def _bench_serve_path(path: str, fused_staging: bool,
+                      max_admit_pages: Optional[int], mesh=None) -> Dict:
     """One serving-round A/B leg: admit a request per round for the first
     ``SERVE_ADMIT_ROUNDS`` rounds, fork once, decode every round.  Reports
-    bulk-movement launches/round (hook) and median wall-clock/round."""
+    bulk-movement launches/round (hook), median wall-clock/round, and the
+    engine's resident pool bytes (the staging-ring headline).  The row
+    carries the greedy token streams under a private ``_tokens`` key so
+    ``_serve_summary`` can assert ring-vs-twin bitwise parity (stripped
+    before the row is written)."""
     from repro.configs import get_config
     from repro.launch.serve import ServingEngine
     from repro.models import build_model, split_params
@@ -168,7 +190,9 @@ def _bench_serve_path(fused_staging: bool, mesh=None) -> Dict:
     model = build_model(cfg)
     params, _ = split_params(model.init_params(jax.random.key(0)))
     eng = ServingEngine(cfg, params, mesh=mesh, max_seqs=8,
-                        max_blocks_per_seq=8, fused_staging=fused_staging)
+                        max_blocks_per_seq=SERVE_MAX_BLOCKS,
+                        fused_staging=fused_staging,
+                        max_admit_pages=max_admit_pages)
     rng = np.random.default_rng(0)
     events: List = []
     hook = lambda n, p, mech: events.append(mech)
@@ -195,7 +219,7 @@ def _bench_serve_path(fused_staging: bool, mesh=None) -> Dict:
     meas = slice(SERVE_WARMUP, None)
     admit_launches = [l for l, a in zip(launches[meas], admitted[meas]) if a]
     return {
-        "path": "fused_staging" if fused_staging else "seed_staging",
+        "path": path,
         # admission rounds exercise the staging path: prefill + promotion
         # + decode.  1.0 fused (ONE launch covers it) vs 2+ for the seed's
         # per-pool ad-hoc scatters.
@@ -203,16 +227,27 @@ def _bench_serve_path(fused_staging: bool, mesh=None) -> Dict:
         "launches_per_round": float(np.mean(launches[meas])),
         "us_per_round": float(np.median(times[meas]) * 1e6),
         "stage_promotions": int(eng.engine.stats.stage_promotions),
+        "pool_bytes_resident": int(eng.engine.pool_bytes_resident()),
+        "stage_capacity": int(eng.engine.stage_capacity),
+        "_tokens": {str(s): t for s, t in eng.tokens.items()},
     }
 
 
 def _serve_summary(rows: List[Dict]) -> Dict:
+    """Cross-path summary; strips the private ``_tokens`` keys in place."""
     f = next(r for r in rows if r["path"] == "fused_staging")
+    g = next(r for r in rows if r["path"] == "ring_staging")
     s = next(r for r in rows if r["path"] == "seed_staging")
+    tokens = {r["path"]: r.pop("_tokens") for r in rows}
     return {
         "speedup": float(s["us_per_round"] / f["us_per_round"]),
         "launches_fused": f["launches_admit_round"],
         "launches_seed": s["launches_admit_round"],
+        # the v4 headline: ring staging vs full twin, same tokens
+        "staging_memory_reduction": float(f["pool_bytes_resident"]
+                                          / g["pool_bytes_resident"]),
+        "ring_tokens_match": tokens["ring_staging"]
+        == tokens["fused_staging"],
     }
 
 
@@ -220,12 +255,14 @@ def _serve_child() -> None:
     from jax.sharding import Mesh
     mesh = Mesh(np.asarray(jax.devices()).reshape(MESH_SHAPE),
                 ("data", "model"))
-    rows = [_bench_serve_path(fs, mesh=mesh) for fs in (True, False)]
-    print("SERVEROWS:" + json.dumps(rows))
+    rows = [_bench_serve_path(*p, mesh=mesh) for p in SERVE_PATHS]
+    summary = _serve_summary(rows)          # strips _tokens (unserializable
+    print("SERVEROWS:" + json.dumps({"rows": rows,      # sets aside)
+                                     "summary": summary}))
 
 
 def _run_serve_section(skip_mesh: bool) -> Optional[Dict]:
-    rows = [_bench_serve_path(fs) for fs in (True, False)]
+    rows = [_bench_serve_path(*p) for p in SERVE_PATHS]
     section = {
         "arch": f"{SERVE_ARCH} (reduced)",
         "max_seqs": 8,
@@ -244,12 +281,12 @@ def _run_serve_section(skip_mesh: bool) -> Optional[Dict]:
         err = "timeout" if out is None else out.stderr[-2000:]
         print(f"[bench_dispatch] serve mesh leg failed:\n{err}")
         return section
-    mrows = json.loads(lines[0][len("SERVEROWS:"):])
+    payload = json.loads(lines[0][len("SERVEROWS:"):])
     section["mesh"] = {
         "devices": int(np.prod(MESH_SHAPE)),
         "mesh_shape": list(MESH_SHAPE),
-        "rows": mrows,
-        "summary": _serve_summary(mrows),
+        "rows": payload["rows"],
+        "summary": payload["summary"],
     }
     return section
 
@@ -314,7 +351,7 @@ def _run_mesh_section() -> Optional[Dict]:
 
 def run(skip_mesh: bool = False, skip_serve: bool = False) -> Dict:
     """Full benchmark: single-device dispatch A/B, the mesh leg, and the
-    serve_round section.  Returns the schema-v3 result dict."""
+    serve_round section.  Returns the schema-v4 result dict."""
     rows = []
     for batch in BATCHES:
         for use_fused in (True, False):
@@ -324,7 +361,7 @@ def run(skip_mesh: bool = False, skip_serve: bool = False) -> Dict:
     speedup = (np.mean([r["us_per_flush"] for r in small_s]) /
                np.mean([r["us_per_flush"] for r in small_f]))
     return {
-        "schema": "bench_dispatch/v3",
+        "schema": "bench_dispatch/v4",
         "backend": jax.default_backend(),
         "block": list(BLOCK),
         "nblk": NBLK,
@@ -348,11 +385,43 @@ def _print_serve(section: Dict) -> None:
     for r in section["rows"]:
         print(f"  {r['path']:>14} {r['launches_admit_round']:>8.2f} "
               f"launches/admit-round {r['us_per_round']:>12.1f} us/round "
-              f"({r['stage_promotions']} promotions)")
+              f"({r['stage_promotions']} promotions, "
+              f"{r['pool_bytes_resident'] / 1e6:.1f} MB resident, "
+              f"{r['stage_capacity']} staging slots)")
     s = section["summary"]
     print(f"  round speedup {s['speedup']:.2f}x  (admit-round launches "
           f"{s['launches_fused']:.2f} fused vs {s['launches_seed']:.2f} "
           f"seed)")
+    red = s["staging_memory_reduction"]
+    print(f"  staging-ring memory reduction {red:.2f}x  "
+          f"(tokens bitwise-identical: {s['ring_tokens_match']})")
+
+
+def serve_smoke() -> int:
+    """CI gate (``make bench-serve``): run the CPU serve_round legs and
+    FAIL (exit 1) if the fused paths regress above 1.0 bulk-movement
+    launch per round — the one-launch-per-flush invariant this repo is
+    built around — or if ring staging stops matching the full twin's
+    greedy tokens.  Returns the process exit code."""
+    section = _run_serve_section(skip_mesh=True)
+    _print_serve(section)
+    ok = True
+    for row in section["rows"]:
+        if row["path"] in ("fused_staging", "ring_staging"):
+            for key in ("launches_admit_round", "launches_per_round"):
+                if row[key] > 1.0:
+                    print(f"FAIL: {row['path']} {key} = {row[key]:.2f} "
+                          "> 1.0 (serving round no longer drains as one "
+                          "fused launch)")
+                    ok = False
+    if not section["summary"]["ring_tokens_match"]:
+        print("FAIL: ring_staging greedy tokens diverged from "
+              "fused_staging")
+        ok = False
+    if ok:
+        print("bench-serve smoke OK: fused serve rounds still drain as "
+              "one launch")
+    return 0 if ok else 1
 
 
 def main() -> None:
@@ -363,6 +432,9 @@ def main() -> None:
                     help="skip the 8-device subprocess A/B sections")
     ap.add_argument("--skip-serve", action="store_true",
                     help="skip the serving-round A/B section")
+    ap.add_argument("--serve-smoke", action="store_true",
+                    help="CI gate: CPU serve_round legs only; exit 1 if "
+                         "fused launches/round regress above 1.0")
     ap.add_argument("--mesh-child", action="store_true",
                     help=argparse.SUPPRESS)
     ap.add_argument("--serve-mesh-child", action="store_true",
@@ -374,6 +446,8 @@ def main() -> None:
     if args.serve_mesh_child:
         _serve_child()
         return
+    if args.serve_smoke:
+        sys.exit(serve_smoke())
     result = run(skip_mesh=args.skip_mesh, skip_serve=args.skip_serve)
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)

@@ -10,7 +10,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import PagedCoWCache, RowCloneEngine, SubarrayAllocator
+from repro.core import (BlockRef, PagedCoWCache, RowCloneEngine,
+                        SubarrayAllocator)
 from repro.core.migration import execute as migrate_execute, plan_rebalance
 
 
@@ -25,20 +26,27 @@ def main():
     engine = RowCloneEngine(pools, alloc, max_requests=16)
     print(f"pool: {nblk} blocks x {page}tok, {nslabs} slabs "
           f"(reserved zero rows: {alloc.zero_rows})")
+    # the engine's address space: per-pool block counts + base offsets
+    print("address space: " + "  ".join(
+        f"{s.name}[nblk={s.nblk} base={engine.group.base(s.name)}]"
+        for s in engine.group))
 
-    print("\n=== 2. memcopy dispatch: FPM vs PSM ===")
+    print("\n=== 2. memcopy dispatch: FPM vs PSM (BlockRef addressing) ===")
     src = alloc.alloc(2, prefer_slab=0)
     alloc.mark_written(src)
     engine.pools["k"] = engine.pools["k"].at[src[0]].set(1.0)
     dst_near = alloc.alloc_near(src[0])        # same slab -> FPM
     dst_far = alloc.alloc(1, prefer_slab=3)[0]  # cross slab -> PSM
-    counts = engine.memcopy([(src[0], dst_near), (src[1], dst_far)])
+    counts = engine.memcopy([
+        (BlockRef("k", src[0]), BlockRef("k", dst_near)),
+        (BlockRef("k", src[1]), BlockRef("k", dst_far)),
+    ])   # a plain copy moves the block in EVERY primary pool (k AND v)
     print(f"dispatch: {counts}  "
           f"(bytes: fpm={engine.stats.bytes_fpm} psm={engine.stats.bytes_psm})")
 
     print("\n=== 3. meminit: BuZ + ZI lazy zero ===")
     fresh = alloc.alloc(4, prefer_slab=1)
-    engine.meminit(fresh)                      # metadata only
+    engine.meminit([BlockRef("k", b) for b in fresh])     # metadata only
     print(f"lazy-zeroed {len(fresh)} blocks; bytes avoided so far: "
           f"{engine.stats.bytes_avoided}")
     engine.materialize_zeros(fresh[:1])        # zero-row DMA when required

@@ -25,6 +25,10 @@ def main():
     ap.add_argument("--samples-per-request", type=int, default=3)
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--new-tokens", type=int, default=24)
+    ap.add_argument("--staging-ring", type=int, default=4,
+                    help="staging slots (max_admit_pages): a small ring "
+                         "instead of full-size staging twins halves the "
+                         "engine's resident pool bytes; 0 = full twin")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -32,7 +36,14 @@ def main():
     params, _ = split_params(model.init_params(jax.random.key(0)))
     eng = ServingEngine(cfg, params,
                         max_seqs=args.requests * (args.samples_per_request
-                                                  + 1) + 2)
+                                                  + 1) + 2,
+                        max_admit_pages=args.staging_ring or None)
+    g = eng.engine.group
+    print("[serve] pool address space: " + "  ".join(
+        f"{s.name}[nblk={s.nblk} base={g.base(s.name)}]" for s in g))
+    print(f"[serve] resident pool bytes: "
+          f"{eng.engine.pool_bytes_resident() / 1e6:.1f} MB "
+          f"(staging ring: {eng.engine.stage_capacity} slots)")
     rng = np.random.default_rng(0)
 
     print(f"[serve] admitting {args.requests} prompts "

@@ -5,8 +5,10 @@ subarray-aware allocator, and the CoW paged KV cache built on them.
 See docs/ARCHITECTURE.md for the paper-mechanism → module map."""
 from repro.core.allocator import AllocStats, OutOfBlocks, SubarrayAllocator
 from repro.core.cmdqueue import (BUCKETS, CommandQueue, QueueStats,
-                                 ShardPlan, bucket_size, partition_commands)
+                                 ShardPlan, bucket_size, fold_shard_plan,
+                                 partition_commands)
 from repro.core.cow_cache import PagedCoWCache, Sequence
+from repro.core.poolspec import BlockRef, PoolGroup, PoolSpec
 from repro.core.rowclone import EngineStats, RowCloneEngine
 
 __all__ = [
@@ -16,11 +18,15 @@ __all__ = [
     "BUCKETS",
     "bucket_size",
     "partition_commands",
+    "fold_shard_plan",
     "ShardPlan",
     "CommandQueue",
     "QueueStats",
     "PagedCoWCache",
     "Sequence",
+    "PoolSpec",
+    "BlockRef",
+    "PoolGroup",
     "EngineStats",
     "RowCloneEngine",
 ]

@@ -30,9 +30,10 @@ numeric block id in a *different* pool do not falsely serialize (see
 :meth:`CommandQueue._hazard_keys`).
 
 Invariant for writers of new opcodes: every command must name its written
-block in ``dst`` (and its read block in ``src`` — stacked
-``pool * nblk + block`` for cross-pool ops) so both the hazard keys here
-and :func:`partition_commands` see every read and write.
+block in ``dst`` (and its read block in ``src`` — global
+``group.base(pool) + block`` ids for cross-pool ops, see
+core/poolspec.py) so both the hazard keys here and
+:func:`partition_commands` see every read and write.
 """
 from __future__ import annotations
 
@@ -41,6 +42,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+from repro.core.poolspec import PoolGroup
 from repro.kernels.fused_dispatch import (OP_BASELINE_COPY, OP_CROSS_POOL_COPY,
                                           OP_FPM_COPY, OP_NOP, OP_PSM_COPY,
                                           OP_ZERO_INIT)
@@ -67,22 +69,31 @@ class ShardPlan:
     sees the SAME static shapes — sub-tables pad to the max shard occupancy
     (bucketed 8/32/128/512), so the whole flush is one shard_map'd launch.
 
+    Each pool partitions by its **own** shard size (``nblk_p // S`` — the
+    per-pool block counts come from the engine's PoolGroup, so a small
+    staging ring and a large KV pool split into the same shard count with
+    different per-shard slab sizes):
+
     * ``local_tables`` (S, m, 3) int32 ``[opcode, src, dst]`` rows with
-      **slab-local** block ids (``CROSS_POOL_COPY`` ids re-stacked as
-      ``pool * shard_size + local``); ``OP_NOP`` rows pad.
+      **slab-local** block ids; ``CROSS_POOL_COPY`` ids re-stack with the
+      slab-local prefix-sum bases (``local_base[p] + local``, where
+      ``local_base`` runs over ``shard_sizes``) so the per-shard drain
+      decodes them from its own slab shapes; ``OP_NOP`` rows pad.
     * The send/recv plan covers every cross-slab command, grouped by hop
       distance ``delta = (dst_shard - src_shard) mod S`` (the LISA-style
       inter-slab link): sender ``i``'s slot ``j`` for a given delta pairs
       with receiver ``(i + delta) mod S``'s slot ``j``.
-      - ``send_rows`` (K, S, t): local row each sender gathers (every pool
-        is gathered at that row; -1 pads).
+      - ``send_rows`` (K, S, t): *pool-local* slab row each sender gathers
+        (every pool is gathered at that row; the receiver picks the buffer
+        that matters; -1 pads).
       - ``recv_tables`` (K, S, t, 3): ``[buf_pool, dst_pool, dst_row]`` —
         ``buf_pool``/``dst_pool`` are -1 for whole-block copies (each pool
         scatters its own buffer slot); a cross-pool transfer names the
-        source-pool buffer and destination pool; ``dst_row`` -1 pads.
+        source-pool buffer and destination pool; ``dst_row`` is pool-local
+        in the destination slab; -1 pads.
     """
     n_shards: int
-    shard_size: int
+    shard_sizes: Tuple[int, ...]  # per-pool slab size (nblk_p / S)
     n_local: int                 # commands drained inside their own slab
     n_transfer: int              # commands crossing a slab boundary
     local_tables: np.ndarray     # (S, m, 3) int32
@@ -92,23 +103,38 @@ class ShardPlan:
 
 
 def partition_commands(rows: Iterable[Tuple[int, int, int]], *,
-                       n_shards: int, nblk: int) -> ShardPlan:
+                       n_shards: int, group: PoolGroup) -> ShardPlan:
     """Split one flushed (hazard-free) command table into per-slab
     sub-tables plus a cross-slab send/recv plan.
 
-    Classification is by **device shard** (``block_id // shard_size``), not
-    by the opcode's mechanism tag: an ``OP_FPM_COPY`` whose allocator slabs
-    are finer than the device sharding may still cross a shard boundary,
-    and an ``OP_PSM_COPY`` between allocator slabs co-resident on one
-    device drains locally.  Enqueue order is preserved within each shard's
-    sub-table; the flush hazard guards (no read and no rewrite of an
-    earlier row's destination within one table) make the cross-shard
-    interleaving — gather transfer sources, drain local tables, permute
-    and scatter — equivalent to the sequential drain.
+    Classification is by **device shard** (``block_id // shard_size``,
+    with each pool's own shard size — a staging ring shards into smaller
+    slabs than its KV pool), not by the opcode's mechanism tag: an
+    ``OP_FPM_COPY`` whose allocator slabs are finer than the device
+    sharding may still cross a shard boundary, and an ``OP_PSM_COPY``
+    between allocator slabs co-resident on one device drains locally.
+    Plain-opcode ids live in the primary address space (every primary pool
+    shares one block count); ``OP_CROSS_POOL_COPY`` ids are global
+    ``group.base(pool) + block`` and are resolved through ``group``.
+    Enqueue order is preserved within each shard's sub-table; the flush
+    hazard guards (no read and no rewrite of an earlier row's destination
+    within one table) make the cross-shard interleaving — gather transfer
+    sources, drain local tables, permute and scatter — equivalent to the
+    sequential drain.
     """
-    if nblk % n_shards:
-        raise ValueError(f"nblk={nblk} not divisible by {n_shards} shards")
-    ss = nblk // n_shards
+    for spec in group:
+        if spec.nblk % n_shards:
+            raise ValueError(f"pool {spec.name!r}: nblk={spec.nblk} not "
+                             f"divisible by {n_shards} shards")
+    ss = tuple(spec.nblk // n_shards for spec in group)
+    # slab-local prefix-sum bases: the per-shard stacked address space
+    local_base = []
+    run = 0
+    for s_p in ss:
+        local_base.append(run)
+        run += s_p
+    p0 = group.primary.index(True)  # plain ops address the primary space
+    ss0 = ss[p0]
     local: List[List[Tuple[int, int, int]]] = [[] for _ in range(n_shards)]
     # delta -> per-src-shard slot lists of (src_row, buf_pool, dst_pool,
     # dst_row)
@@ -118,22 +144,23 @@ def partition_commands(rows: Iterable[Tuple[int, int, int]], *,
         if op < 0:
             continue
         if op == OP_ZERO_INIT:
-            local[d // ss].append((op, -1, d % ss))
+            local[d // ss0].append((op, -1, d % ss0))
             continue
         if op == OP_CROSS_POOL_COPY:
-            ps, bs = divmod(s, nblk)
-            pd, bd = divmod(d, nblk)
-            sh_s, sh_d = bs // ss, bd // ss
+            ps, bs = group.locate(s)
+            pd, bd = group.locate(d)
+            sh_s, sh_d = bs // ss[ps], bd // ss[pd]
             if sh_s == sh_d:
-                local[sh_d].append((op, ps * ss + bs % ss, pd * ss + bd % ss))
+                local[sh_d].append((op, local_base[ps] + bs % ss[ps],
+                                    local_base[pd] + bd % ss[pd]))
                 continue
-            entry = (bs % ss, ps, pd, bd % ss)
+            entry = (bs % ss[ps], ps, pd, bd % ss[pd])
         else:
-            sh_s, sh_d = s // ss, d // ss
+            sh_s, sh_d = s // ss0, d // ss0
             if sh_s == sh_d:
-                local[sh_d].append((op, s % ss, d % ss))
+                local[sh_d].append((op, s % ss0, d % ss0))
                 continue
-            entry = (s % ss, -1, -1, d % ss)
+            entry = (s % ss0, -1, -1, d % ss0)
         delta = (sh_d - sh_s) % n_shards
         slots = xfer.setdefault(delta, [[] for _ in range(n_shards)])
         slots[sh_s].append(entry)
@@ -158,10 +185,35 @@ def partition_commands(rows: Iterable[Tuple[int, int, int]], *,
             for j, (src_row, ps, pd, dst_row) in enumerate(entries):
                 send_rows[k, sh_s, j] = src_row
                 recv_tables[k, sh_d, j] = (ps, pd, dst_row)
-    return ShardPlan(n_shards=n_shards, shard_size=ss, n_local=n_local,
+    return ShardPlan(n_shards=n_shards, shard_sizes=ss, n_local=n_local,
                      n_transfer=n_transfer, local_tables=local_tables,
                      deltas=deltas, send_rows=send_rows,
                      recv_tables=recv_tables)
+
+
+def fold_shard_plan(plan: ShardPlan) -> ShardPlan:
+    """Re-express a plan over the FULL delta set ``(1 .. S-1)``.
+
+    Every hop distance gets a (possibly all-padding) send/recv table of
+    the plan's existing slot bucket, so the sharded drain's static
+    signature collapses to one shape per ``t`` bucket regardless of which
+    delta subset a flush actually uses.  The jit-cache bound
+    (kernels/fused_dispatch.py) applies this past a threshold of distinct
+    ``(deltas, t)`` signatures: adversarial streams churning delta subsets
+    stop compiling new collective bodies, at the cost of ``S-2`` extra
+    (empty) ppermutes per folded flush."""
+    S = plan.n_shards
+    full = tuple(range(1, S))
+    if plan.deltas == full or not plan.deltas:
+        return plan
+    t = plan.send_rows.shape[2]
+    send = np.full((len(full), S, t), -1, np.int32)
+    recv = np.full((len(full), S, t, 3), -1, np.int32)
+    for k, delta in enumerate(plan.deltas):
+        send[delta - 1] = plan.send_rows[k]
+        recv[delta - 1] = plan.recv_tables[k]
+    return dataclasses.replace(plan, deltas=full, send_rows=send,
+                               recv_tables=recv)
 
 
 @dataclasses.dataclass
@@ -204,13 +256,14 @@ class CommandQueue:
 
         Plain opcodes (FPM/PSM/baseline copy, zero-init) read and write the
         block in EVERY primary pool → pool key :data:`ALL_PRIMARY`.
-        ``OP_CROSS_POOL_COPY`` carries stacked ``pool * nblk + block`` ids,
-        so its keys name the exact (pool, block) touched — a staging→KV
-        promotion of block ``d`` does not serialize against an unrelated
-        command on the same numeric block id in another pool."""
-        nblk = self.engine.num_blocks
+        ``OP_CROSS_POOL_COPY`` carries global ``group.base(pool) + block``
+        ids resolved through the engine's PoolGroup, so its keys name the
+        exact (pool index, local block) touched — a staging→KV promotion
+        of block ``d`` does not serialize against an unrelated command on
+        the same numeric block id in another pool."""
         if opcode == OP_CROSS_POOL_COPY:
-            return ((src // nblk, src % nblk), (dst // nblk, dst % nblk))
+            group = self.engine.group
+            return group.locate(src), group.locate(dst)
         if opcode == OP_ZERO_INIT:
             return None, (self.ALL_PRIMARY, dst)
         return (self.ALL_PRIMARY, src), (self.ALL_PRIMARY, dst)
@@ -225,11 +278,11 @@ class CommandQueue:
             return False
         if pool in pending:
             return True
-        n_primary = self.engine.n_primary
+        primary = self.engine.group.primary
         if pool == self.ALL_PRIMARY:
-            return any(p == self.ALL_PRIMARY or p < n_primary
+            return any(p == self.ALL_PRIMARY or primary[p]
                        for p in pending)
-        return self.ALL_PRIMARY in pending and pool < n_primary
+        return self.ALL_PRIMARY in pending and primary[pool]
 
     def enqueue(self, opcode: int, src: int, dst: int) -> None:
         """Append one tagged command, auto-flushing first if it would read
@@ -284,6 +337,7 @@ __all__ = [
     "BUCKETS",
     "bucket_size",
     "partition_commands",
+    "fold_shard_plan",
     "ShardPlan",
     "CommandQueue",
     "QueueStats",

@@ -30,6 +30,13 @@ send/recv plan executed with ppermute inside the same launch
 seed's per-mechanism, per-pool fan-out (one jit'd call per pool per
 mechanism, padded to ``max_requests``) for A/B benchmarking; on sharded
 arrays those global gather/scatters compile through GSPMD.
+
+Addressing is the engine's :class:`~repro.core.poolspec.PoolGroup`: every
+pool has its OWN block count, cross-pool commands carry global
+``base[pool] + block`` ids (prefix-sum bases), and public calls accept
+:class:`~repro.core.poolspec.BlockRef` operands — which is what lets a
+serving engine size its staging pools as a small recycling ring instead of
+full-size KV twins (~2x less resident pool memory, see launch/serve.py).
 """
 from __future__ import annotations
 
@@ -48,9 +55,23 @@ from repro.core.allocator import SubarrayAllocator
 from repro.core.cmdqueue import (CommandQueue, OP_BASELINE_COPY,
                                  OP_CROSS_POOL_COPY, OP_FPM_COPY, OP_PSM_COPY,
                                  OP_ZERO_INIT, partition_commands)
+from repro.core.poolspec import BlockRef, PoolGroup
 from repro.kernels import ops as kops
 from repro.kernels.fused_dispatch import notify_launch
 from repro.models.paged import pool_shard_axes, pool_shard_count
+
+#: int-based public-API forms already warned about (one warning per form
+#: per process — the shims stay one release, see ISSUE/ROADMAP)
+_WARNED_SHIMS: set = set()
+
+
+def _warn_int_shim(api: str, hint: str) -> None:
+    """Emit the one-per-process DeprecationWarning for a legacy int-based
+    calling convention (the BlockRef form is canonical)."""
+    if api in _WARNED_SHIMS:
+        return
+    _WARNED_SHIMS.add(api)
+    warnings.warn(f"{api}: {hint}", DeprecationWarning, stacklevel=3)
 
 
 @dataclasses.dataclass
@@ -74,9 +95,16 @@ class EngineStats:
 class RowCloneEngine:
     """Owns block pools + allocator; dispatches copy/init requests.
 
-    ``pools`` is a dict name -> jnp array (nblk, ...) — e.g. {"k": k_pools,
-    "v": v_pools} sharing one allocator (paired pools: a request applies to
-    every pool, like K and V pages of one KV block).
+    ``pools`` is a dict name -> jnp array (nblk_p, ...) — e.g. {"k":
+    k_pools, "v": v_pools} sharing one allocator (paired pools: a request
+    applies to every pool, like K and V pages of one KV block).  The
+    engine's address space is its :class:`~repro.core.poolspec.PoolGroup`
+    (``engine.group``): per-pool block counts with prefix-sum base
+    offsets, so staging pools may be sized independently of their KV
+    twins (a small staging *ring* instead of a full-size twin).  Public
+    copy calls address blocks with :class:`~repro.core.poolspec.BlockRef`;
+    bare ints remain accepted as primary-address-space ids (and the
+    pool-name keyword form of ``memcopy_cross`` as a one-release shim).
     """
 
     def __init__(self, pools: Dict[str, jnp.ndarray],
@@ -85,7 +113,8 @@ class RowCloneEngine:
                  enable_fpm: bool = True, enable_psm: bool = True,
                  enable_zi: bool = True, max_requests: int = 256,
                  block_axis: int = 0, use_fused: bool = True,
-                 staging: Optional[Dict[str, str]] = None):
+                 staging: Optional[Dict[str, str]] = None,
+                 group: Optional[PoolGroup] = None):
         """``block_axis``: which pool axis indexes blocks.  0 = flat pools
         (nblk, ...); 1 = layer-stacked serving pools (L, nblk, ...) where a
         logical block is L physical pages moved together (L independent
@@ -97,16 +126,20 @@ class RowCloneEngine:
         restores the seed's per-mechanism, per-pool fan-out padded to
         ``max_requests``, kept for A/B benchmarking.
 
-        ``staging``: map of *staging* pool name -> its paired primary pool
-        (e.g. ``{"k_stage": "k", "v_stage": "v"}``).  Staging pools must
-        come LAST in ``pools`` and share their primary twin's block shape
-        and dtype.  Plain opcodes (memcopy/meminit) move blocks in primary
-        pools only; staged bytes enter and leave a staging pool exclusively
-        through ``OP_CROSS_POOL_COPY`` (``promote_staged``), so allocator
-        metadata (ZI bits, refcounts) keeps describing primary blocks.
-        Staging slot ids are engine-managed (``stage_blocks``), disjoint
-        from the allocator's free lists."""
-        self.pools = dict(pools)
+        ``group``: the engine's :class:`PoolGroup` address space.  When
+        omitted, one is built from the arrays + the ``staging`` map (a
+        staging pool name -> paired primary pool dict, e.g.
+        ``{"k_stage": "k", "v_stage": "v"}``), with each pool's ``nblk``
+        read off its block axis.  Primary pools must match the allocator's
+        block count; staging pools may be ANY size (all staging pools
+        share one size — the promotion slot space) but must mirror their
+        twin's block shape and dtype.  Plain opcodes (memcopy/meminit)
+        move blocks in primary pools only; staged bytes enter and leave a
+        staging pool exclusively through ``OP_CROSS_POOL_COPY``
+        (``promote_staged``), so allocator metadata (ZI bits, refcounts)
+        keeps describing primary blocks.  Staging slot ids are
+        engine-managed (``stage_blocks``), disjoint from the allocator's
+        free lists."""
         self.alloc = allocator
         self.mesh = mesh
         self.enable_fpm = enable_fpm
@@ -115,45 +148,71 @@ class RowCloneEngine:
         self.max_requests = max_requests
         self.block_axis = block_axis
         self.use_fused = use_fused
-        self.staging = dict(staging or {})
+        if group is None:
+            group = PoolGroup.from_pools(pools, block_axis=block_axis,
+                                         staging=staging)
+        self.group = group
+        self.staging = dict(group.staging_map)
+        assert set(group.names) == set(pools), (group.names, list(pools))
+        # group order is the table order everywhere — realign the dict
+        self.pools = {name: pools[name] for name in group.names}
         self.stats = EngineStats()
         self.queue = CommandQueue(self)
         self.deferred = False
         self._warned_unshardable = False
         self._zero_blocks: Optional[Tuple[jnp.ndarray, ...]] = None
         nblk = allocator.num_blocks
-        for name, p in self.pools.items():
-            assert p.shape[block_axis] == nblk, \
-                f"pool {name!r}: {p.shape[block_axis]} blocks != {nblk}"
-        names = list(self.pools)
+        for spec in group:
+            p = self.pools[spec.name]
+            assert p.shape[block_axis] == spec.nblk, \
+                f"pool {spec.name!r}: {p.shape[block_axis]} blocks != " \
+                f"spec nblk {spec.nblk}"
+            if spec.role == "primary":
+                assert spec.nblk == nblk, \
+                    f"primary pool {spec.name!r}: {spec.nblk} blocks != " \
+                    f"allocator's {nblk}"
+        stage_cap = 0
         for sname, pname in self.staging.items():
-            assert sname in self.pools and pname in self.pools, (sname, pname)
-            assert names.index(sname) >= self.n_primary, \
-                f"staging pool {sname!r} must come after every primary pool"
-            assert self.pools[sname].shape == self.pools[pname].shape \
-                and self.pools[sname].dtype == self.pools[pname].dtype, \
-                f"staging pool {sname!r} must mirror {pname!r}"
+            s, p = self.pools[sname], self.pools[pname]
+            s_blk = list(s.shape)
+            cap = s_blk.pop(block_axis)
+            p_blk = list(p.shape)
+            p_blk.pop(block_axis)
+            assert s_blk == p_blk and s.dtype == p.dtype, \
+                f"staging pool {sname!r} must mirror {pname!r}'s block " \
+                "shape and dtype"
+            assert stage_cap in (0, cap), \
+                "staging pools must share one block count (the promotion " \
+                f"slot space): {stage_cap} != {cap}"
+            stage_cap = cap
         # staging slot free list + ids whose promotion is still queued
         # (reclaimed by _after_flush once the cross-pool copy has drained)
-        self._stage_free: List[int] = list(range(nblk - 1, -1, -1))
+        self._stage_free: List[int] = list(range(stage_cap - 1, -1, -1))
         self._stage_inflight: List[int] = []
 
     # ------------------------------------------------------------------
     @property
     def num_blocks(self) -> int:
-        """Blocks per pool (every pool shares the allocator's count)."""
+        """Blocks per PRIMARY pool (the allocator's address space; staging
+        pools size independently — see ``stage_capacity``)."""
         return self.alloc.num_blocks
 
     @property
+    def stage_capacity(self) -> int:
+        """Staging slot ids available per staging pool (0 = no staging)."""
+        return self.group[next(iter(self.staging))].nblk if self.staging \
+            else 0
+
+    @property
     def n_primary(self) -> int:
-        """Number of leading primary pools (plain opcodes touch exactly
-        these; trailing staging pools only see cross-pool commands)."""
-        return len(self.pools) - len(self.staging)
+        """Number of primary pools (plain opcodes touch exactly these;
+        staging pools only see cross-pool commands)."""
+        return self.group.n_primary
 
     @property
     def primary_names(self) -> Tuple[str, ...]:
         """Names of the primary pools, in table order."""
-        return tuple(list(self.pools)[:self.n_primary])
+        return self.group.primary_names
 
     def _multi_device(self) -> bool:
         return self.mesh is not None and \
@@ -175,6 +234,15 @@ class RowCloneEngine:
         shape = list(p.shape)
         shape.pop(self.block_axis)
         return int(np.prod(shape)) * p.dtype.itemsize
+
+    def pool_bytes_resident(self) -> int:
+        """Total bytes resident across every pool array (primary +
+        staging).  The serving-memory headline number: sizing staging as a
+        small ring instead of a full twin (per-pool ``nblk`` in the
+        PoolGroup) roughly halves this for a k/v + staging engine —
+        tracked per serve_round row in BENCH_dispatch.json (schema v4)."""
+        return sum(int(np.prod(p.shape)) * p.dtype.itemsize
+                   for p in self.pools.values())
 
     def _pad(self, pairs: Sequence[Tuple[int, int]]) -> np.ndarray:
         """Seed-style fixed-length padding (legacy fan-out path only)."""
@@ -223,9 +291,30 @@ class RowCloneEngine:
     # ------------------------------------------------------------------
     # memcopy
     # ------------------------------------------------------------------
-    def memcopy(self, pairs: Sequence[Tuple[int, int]],
+    def _primary_id(self, b) -> int:
+        """Resolve a primary-address-space operand: a bare int is an
+        allocator block id; a :class:`BlockRef` must name a primary pool
+        (plain opcodes move the block in EVERY primary pool, so the ref's
+        pool only validates intent — the id is the address)."""
+        if isinstance(b, BlockRef):
+            if b.pool not in self.group.primary_names:
+                raise ValueError(
+                    f"plain copy/init addresses primary pools; "
+                    f"{b.pool!r} is a staging pool (use memcopy_cross)")
+            if not 0 <= int(b.block) < self.num_blocks:
+                raise ValueError(f"block {b.block} out of range for "
+                                 f"primary pools ({self.num_blocks})")
+            return int(b.block)
+        return int(b)
+
+    def memcopy(self, pairs: Sequence[Tuple[object, object]],
                 dst_is_fresh: bool = False) -> Dict[str, int]:
         """Copy block src -> dst for each pair.  Returns dispatch counts.
+
+        Pairs may be bare ints (allocator block ids) or
+        :class:`BlockRef`\\ s naming a primary pool — either way the copy
+        moves the block in every primary pool (K and V pages travel
+        together).
 
         ``dst_is_fresh``: destinations have never been written (e.g. CoW
         targets) — with ZI the engine may satisfy zero-source copies by
@@ -235,6 +324,7 @@ class RowCloneEngine:
         counts = {"fpm": 0, "psm": 0, "baseline": 0}
         bb = self._block_bytes()
         for s, d in pairs:
+            s, d = self._primary_id(s), self._primary_id(d)
             # ZI "in-cache copy" fast path: copying a lazily-zero block is a
             # metadata move — mark dst zero, move no bytes.
             if self.enable_zi and self.alloc.is_zero[s]:
@@ -270,42 +360,73 @@ class RowCloneEngine:
         self._autoflush()
         return counts
 
-    def memcopy_cross(self, pairs: Sequence[Tuple[int, int]],
-                      src_pool: str, dst_pool: str) -> int:
+    def memcopy_cross(self, pairs: Sequence[Tuple[object, object]],
+                      src_pool: Optional[str] = None,
+                      dst_pool: Optional[str] = None) -> int:
         """Pool-to-pool block copy (e.g. prefill staging pool → serving
         pool) through the same queue: each pair becomes one
-        ``CROSS_POOL_COPY`` command with stacked ``pool*nblk + block`` ids,
-        so it rides the same fused launch as any pending copies/inits.
+        ``CROSS_POOL_COPY`` command carrying global ``base[pool] + block``
+        ids from the engine's :class:`PoolGroup`, so it rides the same
+        fused launch as any pending copies/inits — and pools of DIFFERENT
+        sizes (a staging ring vs a full KV pool) coexist in one table.
         Source and destination pools must share block shape and dtype.
+
+        Canonical form: ``pairs`` of ``(BlockRef, BlockRef)`` — each pair
+        names its own pools, so one call may mix pool pairs.  The legacy
+        form (int pairs + ``src_pool``/``dst_pool`` keywords) is a
+        one-release shim and emits a DeprecationWarning.
 
         Staging pools sit outside the allocator's metadata: a staging
         *source* always holds real bytes (the prefill wrote them), so the
         lazy-zero materialization below is skipped; a staging *destination*
         is an engine-managed slot, so no allocator block is marked
         written."""
-        names = list(self.pools)
-        ps, pd = names.index(src_pool), names.index(dst_pool)
-        nblk = self.num_blocks
-        bb = self._pool_block_bytes(dst_pool)
+        if src_pool is not None or dst_pool is not None:
+            if src_pool is None or dst_pool is None:
+                raise TypeError(
+                    "memcopy_cross legacy form needs BOTH src_pool and "
+                    f"dst_pool (got src_pool={src_pool!r}, "
+                    f"dst_pool={dst_pool!r}); pass (BlockRef, BlockRef) "
+                    "pairs instead")
+            _warn_int_shim(
+                "RowCloneEngine.memcopy_cross(pairs, src_pool, dst_pool)",
+                "pass (BlockRef, BlockRef) pairs instead; the pool-name "
+                "keywords are a one-release shim")
+            pairs = [(BlockRef(src_pool, int(s)), BlockRef(dst_pool, int(d)))
+                     for s, d in pairs]
+        else:
+            pairs = [(s if isinstance(s, BlockRef) else None,
+                      d if isinstance(d, BlockRef) else None)
+                     for s, d in pairs]
+            if any(s is None or d is None for s, d in pairs):
+                raise TypeError(
+                    "memcopy_cross pairs must be (BlockRef, BlockRef) "
+                    "(or pass src_pool/dst_pool with int pairs — "
+                    "deprecated)")
+        # validate every ref up front: the lazy-zero scan below indexes
+        # allocator metadata, and a bad block id must fail cleanly before
+        # any command or materialization side effect
+        for s, d in pairs:
+            self.group.gid(s), self.group.gid(d)
         # a lazily-zero PRIMARY source physically holds stale bytes; the ZI
         # bit is per *block* (primary pools jointly), so materialize it
         # before the pool-level copy (the hazard guard orders the zero
         # before the copy)
-        if src_pool not in self.staging:
-            lazy_srcs = [int(s) for s, _ in pairs
-                         if self.enable_zi and self.alloc.is_zero[s]]
-            if lazy_srcs:
-                self.materialize_zeros(lazy_srcs)
+        lazy_srcs = [int(s.block) for s, _ in pairs
+                     if s.pool not in self.staging
+                     and self.enable_zi and self.alloc.is_zero[s.block]]
+        if lazy_srcs:
+            self.materialize_zeros(lazy_srcs)
         for s, d in pairs:
-            self.queue.enqueue(OP_CROSS_POOL_COPY, ps * nblk + int(s),
-                               pd * nblk + int(d))
+            self.queue.enqueue(OP_CROSS_POOL_COPY, self.group.gid(s),
+                               self.group.gid(d))
             self.stats.cross_pool_copies += 1
-            self.stats.bytes_cross += bb
-            if dst_pool not in self.staging:
+            self.stats.bytes_cross += self._pool_block_bytes(d.pool)
+            if d.pool not in self.staging:
                 # dst now holds real data in dst_pool; a block can only
                 # carry the lazy-zero bit when every primary pool's bytes
                 # are logically zero
-                self.alloc.mark_written([int(d)])
+                self.alloc.mark_written([int(d.block)])
         self._autoflush()
         return len(pairs)
 
@@ -316,10 +437,12 @@ class RowCloneEngine:
     def stage_blocks(self, n: int) -> List[int]:
         """Reserve ``n`` staging slot ids for an incoming prefill write.
 
-        Slots whose promotion is still queued are not reused (the pending
-        ``CROSS_POOL_COPY`` must read the bytes currently parked there);
-        when the free list runs short the engine drains the queue first,
-        which reclaims every in-flight slot."""
+        Slot ids index the staging pools' OWN address space
+        (``stage_capacity`` slots — a staging ring may be far smaller than
+        the KV pools).  Slots whose promotion is still queued are not
+        reused (the pending ``CROSS_POOL_COPY`` must read the bytes
+        currently parked there); when the free list runs short the engine
+        drains the queue first, which reclaims every in-flight slot."""
         if not self.staging:
             raise RuntimeError("engine has no staging pools")
         if len(self._stage_free) < n:
@@ -327,7 +450,7 @@ class RowCloneEngine:
         if len(self._stage_free) < n:
             raise RuntimeError(
                 f"staging pool exhausted ({n} slots requested, "
-                f"{len(self._stage_free)} free of {self.num_blocks})")
+                f"{len(self._stage_free)} free of {self.stage_capacity})")
         return [self._stage_free.pop() for _ in range(n)]
 
     def release_stage_blocks(self, ids: Sequence[int]) -> None:
@@ -335,10 +458,12 @@ class RowCloneEngine:
         admission that failed after ``stage_blocks``)."""
         self._stage_free.extend(int(b) for b in ids)
 
-    def promote_staged(self, pairs: Sequence[Tuple[int, int]]) -> int:
+    def promote_staged(self, pairs: Sequence[Tuple[int, object]]) -> int:
         """Promote staged prefill pages into primary pool blocks.
 
-        ``pairs``: (staging_slot, dst_block).  Every registered staging
+        ``pairs``: (staging_slot, dst) — the slot is a ``stage_blocks``
+        id; the destination is a primary block id (int) or a
+        :class:`BlockRef` into a primary pool.  Every registered staging
         pool promotes into its paired primary pool (k_stage→k and
         v_stage→v move in the same table), one ``CROSS_POOL_COPY`` command
         per pool pair per block — with pool-aware hazard keys, the whole
@@ -347,13 +472,15 @@ class RowCloneEngine:
         reclaimed automatically once the queue drains."""
         if not self.staging:
             raise RuntimeError("engine has no staging pools")
+        pairs = [(int(s), self._primary_id(d)) for s, d in pairs]
         with self.batch():
             for sname, pname in self.staging.items():
-                self.memcopy_cross(pairs, sname, pname)
+                self.memcopy_cross([(BlockRef(sname, s), BlockRef(pname, d))
+                                    for s, d in pairs])
             # inside the batch: slots must be in-flight BEFORE the exit
             # flush so _after_flush reclaims them with that drain
             self.stats.stage_promotions += len(pairs)
-            self._stage_inflight.extend(int(s) for s, _ in pairs)
+            self._stage_inflight.extend(s for s, _ in pairs)
         return len(pairs)
 
     def _after_flush(self) -> None:
@@ -366,9 +493,11 @@ class RowCloneEngine:
     # ------------------------------------------------------------------
     # meminit
     # ------------------------------------------------------------------
-    def meminit(self, ids: Sequence[int], lazy: Optional[bool] = None) -> int:
-        """Zero blocks.  Returns number physically zeroed (0 with ZI)."""
-        ids = [int(b) for b in ids]
+    def meminit(self, ids: Sequence[object],
+                lazy: Optional[bool] = None) -> int:
+        """Zero blocks (ints or primary-pool :class:`BlockRef`\\ s).
+        Returns number physically zeroed (0 with ZI)."""
+        ids = [self._primary_id(b) for b in ids]
         if lazy is None:
             lazy = self.enable_zi
         if lazy:
@@ -379,9 +508,10 @@ class RowCloneEngine:
         self.materialize_zeros(ids)
         return len(ids)
 
-    def materialize_zeros(self, ids: Sequence[int]) -> None:
-        """BuZ through the reserved zero row (FPM copy from zero block)."""
-        ids = [int(b) for b in ids]
+    def materialize_zeros(self, ids: Sequence[object]) -> None:
+        """BuZ through the reserved zero row (FPM copy from zero block).
+        ``ids`` are ints or primary-pool :class:`BlockRef`\\ s."""
+        ids = [self._primary_id(b) for b in ids]
         if not ids:
             return
         self.stats.zero_materialized += len(ids)
@@ -399,18 +529,20 @@ class RowCloneEngine:
         if self.use_fused:
             n_shards = pool_shard_count(self.mesh)
             if self._multi_device() and n_shards > 1:
-                if self.num_blocks % n_shards:
+                ragged = [s.name for s in self.group if s.nblk % n_shards]
+                if ragged:
                     # can't partition: slabs would be ragged.  Degrade to
                     # the fan-out, but loudly — the caller loses the
-                    # one-launch-per-flush invariant (serving rounds nblk
-                    # to lcm(slabs, shards) exactly to avoid this).
+                    # one-launch-per-flush invariant (serving rounds every
+                    # pool's nblk to the shard count exactly to avoid
+                    # this).
                     if not self._warned_unshardable:
                         self._warned_unshardable = True
                         warnings.warn(
-                            f"RowCloneEngine: nblk={self.num_blocks} not "
-                            f"divisible by {n_shards} device shards; mesh "
-                            "flushes fall back to the multi-launch legacy "
-                            "fan-out")
+                            f"RowCloneEngine: pools {ragged} have block "
+                            f"counts not divisible by {n_shards} device "
+                            "shards; mesh flushes fall back to the "
+                            "multi-launch legacy fan-out")
                     return self._dispatch_legacy(table)
                 return self._dispatch_sharded(table, n_shards)
             if not self._multi_device():
@@ -418,7 +550,7 @@ class RowCloneEngine:
                 new = kops.fused_dispatch(pools, self._get_zero_blocks(),
                                           jnp.asarray(table),
                                           block_axis=self.block_axis,
-                                          n_primary=self.n_primary)
+                                          primary=self.group.primary)
                 for name, arr in zip(self.pools, new):
                     self.pools[name] = arr
                 self.stats.launches += 1
@@ -427,15 +559,15 @@ class RowCloneEngine:
 
     def _dispatch_sharded(self, table: np.ndarray, n_shards: int) -> int:
         """One collective launch for the whole table: per-slab sub-tables
-        (slab-local ids) drain inside shard_map, cross-slab commands ride
-        the same launch as a ppermute send/recv plan."""
+        (slab-local ids, each pool partitioned by its OWN shard size)
+        drain inside shard_map, cross-slab commands ride the same launch
+        as a ppermute send/recv plan."""
         rows = [(int(op), int(s), int(d)) for op, s, d in table if op >= 0]
-        plan = partition_commands(rows, n_shards=n_shards,
-                                  nblk=self.num_blocks)
+        plan = partition_commands(rows, n_shards=n_shards, group=self.group)
         new = kops.fused_dispatch_sharded(
             tuple(self.pools.values()), self._get_zero_blocks(), plan,
             mesh=self.mesh, pool_axes=pool_shard_axes(self.mesh),
-            block_axis=self.block_axis, n_primary=self.n_primary)
+            block_axis=self.block_axis, primary=self.group.primary)
         for name, arr in zip(self.pools, new):
             self.pools[name] = arr
         self.stats.launches += 1
@@ -561,20 +693,21 @@ class RowCloneEngine:
         the whole run: interleaved opposite-direction copies (k->v, v->k,
         k->v) may carry a write-after-read the hazard guard permits —
         whole-table grouping would reorder the later write ahead of the
-        earlier read and diverge from the fused drain."""
+        earlier read and diverge from the fused drain.  Global ids decode
+        through the PoolGroup's prefix-sum bases (pools may differ in
+        size)."""
         launches = 0
         names = list(self.pools)
-        nblk = self.num_blocks
+        locate = self.group.locate
+        loc = [(locate(s), locate(d)) for s, d in stacked_pairs]
         i = 0
         while i < len(stacked_pairs):
-            key = (stacked_pairs[i][0] // nblk, stacked_pairs[i][1] // nblk)
+            key = (loc[i][0][0], loc[i][1][0])
             run: List[Tuple[int, int]] = []
             j = i
             while j < len(stacked_pairs) and \
-                    (stacked_pairs[j][0] // nblk,
-                     stacked_pairs[j][1] // nblk) == key:
-                run.append((stacked_pairs[j][0] % nblk,
-                            stacked_pairs[j][1] % nblk))
+                    (loc[j][0][0], loc[j][1][0]) == key:
+                run.append((loc[j][0][1], loc[j][1][1]))
                 j += 1
             ps, pd = key
             for chunk in _chunks(run, self.max_requests):

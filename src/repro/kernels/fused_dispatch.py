@@ -21,11 +21,22 @@ Opcodes (also the ``CommandQueue`` tags, core/cmdqueue.py):
   ``OP_PSM_COPY``          1  cross-slab copy (PSM; same DMA on a single slab)
   ``OP_BASELINE_COPY``     2  RowClone-disabled copy (mechanism modeling only)
   ``OP_ZERO_INIT``         3  BuZ — broadcast the reserved zero block into dst
-  ``OP_CROSS_POOL_COPY``   4  pool-to-pool copy; src/dst are *stacked* global
-                              ids ``pool_index * nblk + block`` (pools must
-                              share block shape and dtype)
+  ``OP_CROSS_POOL_COPY``   4  pool-to-pool copy; src/dst are *global* ids
+                              ``base[pool] + block`` where ``base`` is the
+                              prefix sum of per-pool block counts (the
+                              PoolGroup address space, core/poolspec.py) —
+                              pools may have DIFFERENT block counts but must
+                              share block shape and dtype
   ``OP_NOP``              -1  padding row (bucketed table), also ``dst == -1``
   ======================  ==  ==================================================
+
+Pools carry a per-pool **role vector** (``primary`` tuple of bools): plain
+opcodes (0-3) move the named block in every primary pool (all primary pools
+share one block count — the allocator's address space); staging pools are
+reachable only through ``OP_CROSS_POOL_COPY`` rows that name them in a
+global id, and may be any size (e.g. a small staging ring).  The base
+offsets are derived from the pool shapes at trace time, so the table
+encoding and the kernel always agree.
 
 ``block_axis=1`` handles layer-stacked serving pools ``(L, nblk, ...)``: the
 grid grows a layer dimension and each command becomes L independent DMAs, as
@@ -110,14 +121,20 @@ def notify_launch(n_commands: int, n_pools: int, mechanism: str) -> None:
 # the kernel
 # ---------------------------------------------------------------------------
 
-def _make_kernel(n_pools: int, block_axis: int, nblk: int,
-                 n_primary: Optional[int] = None):
-    """Build the grid body for ``n_pools`` pools, the first ``n_primary``
-    of which are *primary* (default: all).  Plain opcodes (FPM/PSM/baseline
-    copy, zero-init) move the block in every primary pool; trailing
-    *staging* pools are reachable only through ``OP_CROSS_POOL_COPY`` —
-    bulk movement never touches staged bytes it wasn't asked to move."""
-    n_primary = n_pools if n_primary is None else n_primary
+def _make_kernel(n_pools: int, block_axis: int, sizes: Tuple[int, ...],
+                 primary: Tuple[bool, ...]):
+    """Build the grid body for ``n_pools`` pools with per-pool block counts
+    ``sizes`` and role vector ``primary``.  Plain opcodes (FPM/PSM/baseline
+    copy, zero-init) move the block in every primary pool; *staging* pools
+    (``primary[p] == False``) are reachable only through
+    ``OP_CROSS_POOL_COPY`` global ids — bulk movement never touches staged
+    bytes it wasn't asked to move.  Cross-pool ids decode against the
+    prefix-sum ``bases`` of ``sizes`` (the PoolGroup address space)."""
+    bases = []
+    run = 0
+    for n in sizes:
+        bases.append(run)
+        run += n
 
     def kernel(cmds_ref, *refs):
         zeros = refs[:n_pools]
@@ -154,22 +171,27 @@ def _make_kernel(n_pools: int, block_axis: int, nblk: int,
             @pl.when((op == OP_FPM_COPY) | (op == OP_PSM_COPY) |
                      (op == OP_BASELINE_COPY))
             def _():
-                for p in range(n_primary):
-                    issue(blk(reads[p], s), blk(outs[p], d), sem)
+                for p in range(n_pools):
+                    if primary[p]:
+                        issue(blk(reads[p], s), blk(outs[p], d), sem)
 
             @pl.when(op == OP_ZERO_INIT)
             def _():
-                for p in range(n_primary):
-                    issue(zeros[p].at[0], blk(outs[p], d), sem)
+                for p in range(n_pools):
+                    if primary[p]:
+                        issue(zeros[p].at[0], blk(outs[p], d), sem)
 
             @pl.when(op == OP_CROSS_POOL_COPY)
             def _():
                 for ps in range(n_pools):
                     for pd in range(n_pools):
-                        @pl.when((s // nblk == ps) & (d // nblk == pd))
+                        @pl.when((s >= bases[ps])
+                                 & (s < bases[ps] + sizes[ps])
+                                 & (d >= bases[pd])
+                                 & (d < bases[pd] + sizes[pd]))
                         def _(ps=ps, pd=pd):
-                            issue(blk(reads[ps], s % nblk),
-                                  blk(outs[pd], d % nblk), sem)
+                            issue(blk(reads[ps], s - bases[ps]),
+                                  blk(outs[pd], d - bases[pd]), sem)
 
         # Semaphores alternate by grid-step parity, mirroring the seed
         # per-mechanism kernels.  NOTE: with start() immediately followed
@@ -190,16 +212,33 @@ def _make_kernel(n_pools: int, block_axis: int, nblk: int,
     return kernel
 
 
+def _as_primary(primary: Optional[Tuple[bool, ...]], n_pools: int,
+                n_primary: Optional[int] = None) -> Tuple[bool, ...]:
+    """Normalize the role arguments: an explicit ``primary`` tuple wins;
+    else the first ``n_primary`` pools are primary (None = all) — the
+    pre-PoolGroup calling convention, kept as a shim."""
+    if primary is not None:
+        assert len(primary) == n_pools, (primary, n_pools)
+        return tuple(bool(p) for p in primary)
+    n_primary = n_pools if n_primary is None else n_primary
+    return tuple(p < n_primary for p in range(n_pools))
+
+
 def _fused_dispatch_call(cmds, zero_blocks, pools, *, block_axis: int,
-                         interpret: bool, n_primary: Optional[int] = None):
+                         interpret: bool,
+                         primary: Optional[Tuple[bool, ...]] = None):
     """The raw pallas_call — shared by the single-slab jit entry and the
-    per-shard body of the sharded entry (already inside a jit there)."""
+    per-shard body of the sharded entry (already inside a jit there).
+    Per-pool block counts (and the global-id base offsets) come from the
+    pool shapes, so the call works unchanged on full pools and on
+    per-shard slabs."""
     n_pools = len(pools)
-    nblk = pools[0].shape[block_axis]
+    sizes = tuple(int(p.shape[block_axis]) for p in pools)
+    primary = _as_primary(primary, n_pools)
     grid = ((cmds.shape[0],) if block_axis == 0
             else (cmds.shape[0], pools[0].shape[0]))
     return pl.pallas_call(
-        _make_kernel(n_pools, block_axis, nblk, n_primary),
+        _make_kernel(n_pools, block_axis, sizes, primary),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
@@ -218,30 +257,36 @@ def _fused_dispatch_call(cmds, zero_blocks, pools, *, block_axis: int,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("block_axis", "interpret", "n_primary"),
+                   static_argnames=("block_axis", "interpret", "primary"),
                    donate_argnums=(2,))
 def _fused_dispatch_jit(cmds, zero_blocks, pools, *, block_axis: int,
-                        interpret: bool, n_primary: Optional[int] = None):
+                        interpret: bool,
+                        primary: Optional[Tuple[bool, ...]] = None):
     return _fused_dispatch_call(cmds, zero_blocks, pools,
                                 block_axis=block_axis, interpret=interpret,
-                                n_primary=n_primary)
+                                primary=primary)
 
 
 def fused_dispatch_pallas(pools: Sequence, zero_blocks: Sequence, cmds, *,
                           block_axis: int = 0, interpret: bool = False,
+                          primary: Optional[Tuple[bool, ...]] = None,
                           n_primary: Optional[int] = None) -> Tuple:
     """Execute one flushed command table over every pool in ONE launch.
 
-    pools:       sequence of (nblk, ...) or (L, nblk, ...) arrays (donated)
+    pools:       sequence of (nblk_p, ...) or (L, nblk_p, ...) arrays
+                 (donated); block counts may differ per pool — cross-pool
+                 ids decode against the prefix-sum bases of those counts
     zero_blocks: per-pool reserved zero row, shape (1,) + block_shape
     cmds:        (m, 3) int32 [opcode, src, dst]; OP_NOP/-1 rows are padding
-    n_primary:   pools[:n_primary] are primary (plain opcodes move the block
-                 in each of them); trailing staging pools only see
-                 ``OP_CROSS_POOL_COPY``.  None = every pool is primary.
+    primary:     per-pool role vector (True = plain opcodes move the block
+                 there; every primary pool shares one block count).  None =
+                 every pool is primary.  ``n_primary`` is the one-release
+                 int shim: the first n pools are primary.
     """
-    out = _fused_dispatch_jit(cmds, tuple(zero_blocks), tuple(pools),
-                              block_axis=block_axis, interpret=interpret,
-                              n_primary=n_primary)
+    out = _fused_dispatch_jit(
+        cmds, tuple(zero_blocks), tuple(pools), block_axis=block_axis,
+        interpret=interpret,
+        primary=_as_primary(primary, len(pools), n_primary))
     notify_launch(int(cmds.shape[0]), len(out), "fused")
     return tuple(out)
 
@@ -277,12 +322,14 @@ def _scatter_rows(slab, data, dst, valid, block_axis):
 @functools.lru_cache(maxsize=256)
 def _sharded_runner(mesh, pool_axes: Tuple[str, ...], deltas: Tuple[int, ...],
                     n_pools: int, block_axis: int, use_pallas: bool,
-                    interpret: bool, n_primary: int):
+                    interpret: bool, primary: Tuple[bool, ...]):
     """Build (and cache) the jit'd shard_map'd drain for one static plan
     structure.  The jit layer further caches per array shape; table shapes
     are bucketed (cmdqueue.BUCKETS) and decode-round flushes are local-only
-    (``deltas=()``), but adversarial streams can still churn distinct delta
-    subsets — bounding that is an open item (ROADMAP)."""
+    (``deltas=()``).  Adversarial streams churning distinct delta subsets
+    are bounded by the signature fold in :func:`sharded_fused_dispatch`:
+    past :data:`MAX_DELTA_SIGNATURES` distinct ``(deltas, t)`` signatures,
+    plans fold to the full delta set so the compile count stays O(1)."""
     n_shards = int(np.prod([mesh.shape[a] for a in pool_axes]))
     axis = pool_axes if len(pool_axes) > 1 else pool_axes[0]
     pspec = P(*([None] * block_axis), axis)
@@ -300,15 +347,17 @@ def _sharded_runner(mesh, pool_axes: Tuple[str, ...], deltas: Tuple[int, ...],
                            for p in slabs])
                 for k in range(len(deltas))]
         # 2) drain this slab's sub-table — same kernel, slab-local ids
+        #    (cross-pool ids re-stacked against the SLAB shapes' prefix
+        #    sums, which is exactly how partition_commands encoded them)
         if use_pallas:
             slabs = list(_fused_dispatch_call(
                 tbl, tuple(zeros), tuple(slabs), block_axis=block_axis,
-                interpret=interpret, n_primary=n_primary))
+                interpret=interpret, primary=primary))
         else:
             from repro.kernels import ref as kref
             slabs = list(kref.fused_dispatch(slabs, zeros, tbl,
                                              block_axis=block_axis,
-                                             n_primary=n_primary))
+                                             primary=primary))
         # 3) hop the buffers and scatter on the destination shard
         for k, delta in enumerate(deltas):
             perm = [(i, (i + delta) % n_shards) for i in range(n_shards)]
@@ -327,8 +376,8 @@ def _sharded_runner(mesh, pool_axes: Tuple[str, ...], deltas: Tuple[int, ...],
                 # they land in every PRIMARY pool only — staging pools take
                 # cross-pool transfers that name them explicitly
                 valid = (dst_row >= 0) & (
-                    (dst_pool == pd) if pd >= n_primary
-                    else ((dst_pool < 0) | (dst_pool == pd)))
+                    ((dst_pool < 0) | (dst_pool == pd)) if primary[pd]
+                    else (dst_pool == pd))
                 slabs[pd] = _scatter_rows(slabs[pd],
                                           picked.astype(slabs[pd].dtype),
                                           dst_row, valid, block_axis)
@@ -343,16 +392,51 @@ def _sharded_runner(mesh, pool_axes: Tuple[str, ...], deltas: Tuple[int, ...],
     return jax.jit(mapped, donate_argnums=(4,))
 
 
+#: distinct (deltas, t) collective signatures compiled per (mesh, pool
+#: structure) before plans fold to the full delta set (jit-cache bound)
+MAX_DELTA_SIGNATURES = 8
+
+_DELTA_SIGS: dict = {}
+
+
+def _bound_delta_signatures(plan, key):
+    """Jit-cache bound for the collective drain: every distinct
+    ``(deltas, t)`` plan signature compiles its own shard_map body, and an
+    adversarial stream can churn up to ``2^(S-1)`` delta subsets.  Past
+    :data:`MAX_DELTA_SIGNATURES` distinct signatures per (mesh, pool
+    structure), fold the plan onto the FULL delta set (cmdqueue
+    ``fold_shard_plan``) — the folded signature is one shape per slot
+    bucket, so the compile count stays O(1) while unseen subsets keep
+    draining correctly (their extra ppermutes carry all-padding tables)."""
+    if not plan.deltas:
+        return plan                 # local-only drain: one signature
+    sigs = _DELTA_SIGS.setdefault(key, set())
+    sig = (plan.deltas, int(plan.send_rows.shape[2]))
+    if sig in sigs:
+        return plan
+    if len(sigs) < MAX_DELTA_SIGNATURES:
+        sigs.add(sig)
+        return plan
+    from repro.core.cmdqueue import fold_shard_plan
+    return fold_shard_plan(plan)
+
+
 def sharded_fused_dispatch(pools: Sequence, zero_blocks: Sequence, plan, *,
                            mesh, pool_axes: Tuple[str, ...],
                            block_axis: int = 0, use_pallas: bool = False,
                            interpret: bool = False,
+                           primary: Optional[Tuple[bool, ...]] = None,
                            n_primary: Optional[int] = None) -> Tuple:
     """Drain one partitioned flush (a cmdqueue.ShardPlan) as ONE collective
     launch over every pool: per-slab fused sub-table drains + the
     cross-slab send/recv plan, all inside a single shard_map'd dispatch.
-    ``n_primary`` splits primary from trailing staging pools exactly as in
-    :func:`fused_dispatch_pallas`."""
+    Pools may carry different block counts (each partitions by its own
+    shard size — ``plan.shard_sizes``); ``primary`` is the per-pool role
+    vector exactly as in :func:`fused_dispatch_pallas` (``n_primary`` kept
+    as the int shim)."""
+    primary = _as_primary(primary, len(pools), n_primary)
+    plan = _bound_delta_signatures(
+        plan, (mesh, tuple(pool_axes), len(pools), block_axis, primary))
     if plan.deltas:
         send = jnp.asarray(plan.send_rows)
         recv = jnp.asarray(plan.recv_tables)
@@ -362,7 +446,7 @@ def sharded_fused_dispatch(pools: Sequence, zero_blocks: Sequence, plan, *,
         recv = jnp.full((0, s, 1, 3), -1, jnp.int32)
     runner = _sharded_runner(mesh, tuple(pool_axes), tuple(plan.deltas),
                              len(pools), block_axis, use_pallas, interpret,
-                             len(pools) if n_primary is None else n_primary)
+                             primary)
     out = runner(jnp.asarray(plan.local_tables), send, recv,
                  tuple(zero_blocks), tuple(pools))
     notify_launch(int(plan.local_tables.shape[1]), len(out), "fused_mesh")

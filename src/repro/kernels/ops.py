@@ -65,31 +65,36 @@ def meminit_zero(pool, zero_block, ids, *, use_pallas: Optional[bool] = None):
     return kref.zero_init(pool, ids)
 
 
-@functools.partial(jax.jit, static_argnames=("block_axis", "n_primary"),
+@functools.partial(jax.jit, static_argnames=("block_axis", "primary"),
                    donate_argnums=(2,))
-def _fused_ref_jit(cmds, zero_blocks, pools, *, block_axis, n_primary=None):
+def _fused_ref_jit(cmds, zero_blocks, pools, *, block_axis, primary=None):
     return kref.fused_dispatch(pools, zero_blocks, cmds,
-                               block_axis=block_axis, n_primary=n_primary)
+                               block_axis=block_axis, primary=primary)
 
 
 def fused_dispatch(pools, zero_blocks, cmds, *, block_axis: int = 0,
                    use_pallas: Optional[bool] = None,
+                   primary: Optional[tuple] = None,
                    n_primary: Optional[int] = None):
     """One launch for a whole flushed command table over every pool.
 
     See kernels/fused_dispatch.py for the opcode table and contract.  On
     CPU the jit'd reference executes (one dispatch, HLO-small); tests force
     ``use_pallas=True`` to run the kernel body in interpret mode.
-    ``n_primary`` marks the first n pools as primary (plain opcodes move
-    the block in each); trailing staging pools only see cross-pool rows.
+    ``primary`` is the per-pool role vector (True = plain opcodes move the
+    block there); pools may carry different block counts — cross-pool rows
+    use global prefix-sum-base ids.  ``n_primary`` is the one-release int
+    shim (first n pools primary).
     """
+    from repro.kernels.fused_dispatch import _as_primary
+    primary = _as_primary(primary, len(pools), n_primary)
     if _resolve_use_pallas(use_pallas):
         return fused_dispatch_pallas(pools, zero_blocks, cmds,
                                      block_axis=block_axis,
                                      interpret=_interpret(),
-                                     n_primary=n_primary)
+                                     primary=primary)
     out = _fused_ref_jit(cmds, tuple(zero_blocks), tuple(pools),
-                         block_axis=block_axis, n_primary=n_primary)
+                         block_axis=block_axis, primary=primary)
     notify_launch(int(cmds.shape[0]), len(out), "fused")
     return tuple(out)
 
@@ -97,19 +102,20 @@ def fused_dispatch(pools, zero_blocks, cmds, *, block_axis: int = 0,
 def fused_dispatch_sharded(pools, zero_blocks, plan, *, mesh, pool_axes,
                            block_axis: int = 0,
                            use_pallas: Optional[bool] = None,
+                           primary: Optional[tuple] = None,
                            n_primary: Optional[int] = None):
     """One collective launch for a whole flushed command table across the
     mesh: per-slab fused sub-tables + the cross-slab send/recv plan
-    (cmdqueue.ShardPlan).  Resolution matches every other op: the per-shard
-    drain runs the Pallas kernel body on TPU (or in interpret mode when
-    forced) and the jnp reference elsewhere; the inter-slab hops are
-    ppermute collectives either way.  ``n_primary`` as in
-    :func:`fused_dispatch`."""
+    (cmdqueue.ShardPlan; every pool partitions by its own shard size).
+    Resolution matches every other op: the per-shard drain runs the Pallas
+    kernel body on TPU (or in interpret mode when forced) and the jnp
+    reference elsewhere; the inter-slab hops are ppermute collectives
+    either way.  ``primary``/``n_primary`` as in :func:`fused_dispatch`."""
     return sharded_fused_dispatch(pools, zero_blocks, plan, mesh=mesh,
                                   pool_axes=pool_axes, block_axis=block_axis,
                                   use_pallas=_resolve_use_pallas(use_pallas),
                                   interpret=_interpret(),
-                                  n_primary=n_primary)
+                                  primary=primary, n_primary=n_primary)
 
 
 def baseline_copy(pool, ids):

@@ -57,25 +57,48 @@ def zero_init(pool, ids, fill_value=0.0):
 # row reads or rewrites a block an earlier row writes).
 # ---------------------------------------------------------------------------
 
-def fused_dispatch(pools, zero_blocks, cmds, block_axis=0, n_primary=None):
-    """pools: sequence of (nblk, ...) or (L, nblk, ...); zero_blocks: per-
-    pool (1,) + block_shape; cmds: (m, 3) int32 [opcode, src, dst].
+def fused_dispatch(pools, zero_blocks, cmds, block_axis=0, primary=None,
+                   n_primary=None):
+    """pools: sequence of (nblk_p, ...) or (L, nblk_p, ...) — block counts
+    may DIFFER per pool; zero_blocks: per-pool (1,) + block_shape; cmds:
+    (m, 3) int32 [opcode, src, dst].
 
-    ``n_primary``: the first n_primary pools are primary — plain opcodes
-    (copies, zero-init) move the block in each of them; trailing *staging*
-    pools only receive ``OP_CROSS_POOL_COPY`` rows that name them in their
-    stacked dst id.  None = every pool is primary."""
+    ``primary``: per-pool role vector — plain opcodes (copies, zero-init)
+    move the block in every primary pool (all primary pools share one
+    block count); *staging* pools only receive ``OP_CROSS_POOL_COPY`` rows
+    that name them in a global ``base[pool] + block`` id, where ``base``
+    is the prefix sum of the pool block counts (the PoolGroup address
+    space).  None = every pool is primary; ``n_primary`` is the int shim
+    (first n pools primary)."""
     from repro.kernels.fused_dispatch import (OP_CROSS_POOL_COPY,
-                                              OP_ZERO_INIT)
+                                              OP_ZERO_INIT, _as_primary)
     pools = list(pools)
     n = len(pools)
-    n_primary = n if n_primary is None else n_primary
+    primary = _as_primary(primary, n, n_primary)
     ba = block_axis
-    nblk = pools[0].shape[ba]
+    sizes = [p.shape[ba] for p in pools]
+    bases = []
+    run = 0
+    for nb in sizes:
+        bases.append(run)
+        run += nb
     op, s, d = cmds[:, 0], cmds[:, 1], cmds[:, 2]
     is_cross = op == OP_CROSS_POOL_COPY
-    s_loc = jnp.where(is_cross, s % nblk, s)
-    d_loc = jnp.where(is_cross, d % nblk, d)
+
+    def pool_of(ids):
+        """Per-row (base, in_pool[p]) decode of global cross-pool ids."""
+        base = jnp.zeros_like(ids)
+        inp = []
+        for p in range(n):
+            m = (ids >= bases[p]) & (ids < bases[p] + sizes[p])
+            inp.append(m)
+            base = jnp.where(m, bases[p], base)
+        return base, inp
+
+    s_base, s_in = pool_of(s)
+    d_base, d_in = pool_of(d)
+    s_loc = jnp.where(is_cross, s - s_base, s)
+    d_loc = jnp.where(is_cross, d - d_base, d)
 
     def gather(arr, idx):
         cl = jnp.clip(idx, 0, arr.shape[ba] - 1)
@@ -93,7 +116,7 @@ def fused_dispatch(pools, zero_blocks, cmds, block_axis=0, n_primary=None):
         for ps in range(n):
             if ps == pd:
                 continue
-            sel = is_cross & (s // nblk == ps)
+            sel = is_cross & s_in[ps]
             rows = jnp.where(expand(sel, rows), gather(pools[ps], s_loc),
                              rows)
         zb = zero_blocks[pd].astype(pool.dtype)
@@ -104,11 +127,11 @@ def fused_dispatch(pools, zero_blocks, cmds, block_axis=0, n_primary=None):
                 zb.reshape((1, 1) + zb.shape[1:]),
                 (pool.shape[0], cmds.shape[0]) + pool.shape[2:])
         rows = jnp.where(expand(op == OP_ZERO_INIT, rows), zrows, rows)
-        if pd < n_primary:
-            valid = (op >= 0) & (d >= 0) & (~is_cross | (d // nblk == pd))
+        if primary[pd]:
+            valid = (op >= 0) & (d >= 0) & (~is_cross | d_in[pd])
         else:   # staging pool: only cross-pool rows addressed to it land
-            valid = is_cross & (d >= 0) & (d // nblk == pd)
-        safe = jnp.where(valid, d_loc, nblk)
+            valid = is_cross & (d >= 0) & d_in[pd]
+        safe = jnp.where(valid, d_loc, sizes[pd])
         out.append(pool.at[safe].set(rows, mode="drop") if ba == 0
                    else pool.at[:, safe].set(rows, mode="drop"))
     return tuple(out)

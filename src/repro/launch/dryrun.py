@@ -1,6 +1,9 @@
+"""Production-mesh dry-run: lower + compile every (arch, shape, mesh) cell
+on 512 placeholder host devices and record memory / roofline / collective
+analysis (EXPERIMENTS.md §Dry-run) — no arrays are ever materialized."""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# The two lines above MUST run before any jax-importing module: jax locks the
+# The env line above MUST run before any jax-importing module: jax locks the
 # device count at first backend init.  512 placeholder host devices let
 # jax.make_mesh build the production (2,16,16)/(16,16) meshes for the
 # multi-pod dry-run: every (arch x shape x mesh) cell is lowered + compiled
@@ -59,6 +62,8 @@ def _bytes_of(type_str: str) -> int:
 
 
 def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-collective result bytes + ring-model wire bytes parsed from an
+    optimized HLO dump (regex scan; see COLLECTIVE_MULT)."""
     out: Dict[str, float] = {}
     wire = 0.0
     for m in COLLECTIVE_RE.finditer(hlo_text):
@@ -147,6 +152,9 @@ def build_cell(arch: str, shape_name: str, mesh):
 # ---------------------------------------------------------------------------
 
 def analyse(compiled, cfg, shape, n_chips: int) -> Dict:
+    """Roofline terms for one compiled cell: loop-aware FLOPs/bytes,
+    per-chip memory, collective wire bytes, and the resulting
+    compute/HBM/ICI-bound step-time estimate."""
     # loop-aware walk of the optimized per-device HLO (xla's cost_analysis
     # counts while bodies once — see hlo_analysis.py)
     from repro.launch.hlo_analysis import analyse_hlo
@@ -196,6 +204,8 @@ def analyse(compiled, cfg, shape, n_chips: int) -> Dict:
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool) -> Dict:
+    """Lower + compile one (arch, shape, mesh) cell and return its row
+    for the dry-run report (status/skip/error + analysis)."""
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     ok, reason = shape_applicable(cfg, shape)
@@ -224,6 +234,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool) -> Dict:
 
 
 def main():
+    """CLI: sweep the requested (arch, shape, mesh) cells and write the
+    dry-run JSON report."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)

@@ -115,12 +115,17 @@ def _parse_computations(hlo: str):
 
 
 class HloCost:
+    """Loop-aware cost walk over a parsed HLO module: while bodies multiply
+    by their inferred trip counts (XLA's own cost_analysis counts them
+    once), giving honest FLOPs/bytes for scan-heavy models."""
+
     def __init__(self, hlo_text: str):
         self.comps, self.syms = _parse_computations(hlo_text)
         self._memo: Dict[Tuple[str, bool], Dict[str, float]] = {}
         self._cur_comp: str = "__entry__"
 
     def entry_cost(self) -> Dict[str, float]:
+        """Aggregate cost dict for the module's entry computation."""
         return self._comp_cost("__entry__", flops_only=False)
 
     # ------------------------------------------------------------------
@@ -360,5 +365,7 @@ class HloCost:
 
 
 def analyse_hlo(hlo_text: str) -> Dict[str, float]:
+    """One-shot helper: loop-aware FLOPs/bytes/collectives for an HLO
+    dump (see :class:`HloCost`)."""
     cost = HloCost(hlo_text).entry_cost()
     return cost

@@ -23,6 +23,8 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 def make_test_mesh(shape: Tuple[int, ...] = (2, 2),
                    axes: Tuple[str, ...] = ("data", "model")) -> Mesh:
+    """Small named mesh over the first ``prod(shape)`` local devices (test
+    and benchmark harnesses; raises when the host has too few)."""
     n = int(np.prod(shape))
     devs = jax.devices()
     if len(devs) < n:

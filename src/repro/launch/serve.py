@@ -52,7 +52,17 @@ class ServingEngine:
     def __init__(self, cfg, params, mesh=None, max_seqs: int = 16,
                  max_blocks_per_seq: int = 64, num_slabs: int = 4,
                  rc: Optional[RowCloneConfig] = None, impl: str = "ref",
-                 fused_staging: bool = True):
+                 fused_staging: bool = True,
+                 max_admit_pages: Optional[int] = None):
+        """``max_admit_pages`` sizes the staging pools as a RING of that
+        many slots (rounded up to the mesh's pool shard count) instead of
+        a full-size twin of the KV pools — slots recycle at every round's
+        flush, so the ring only needs to hold the pages admitted between
+        two flushes (largest prompt's blocks x admissions per round).
+        ``None`` keeps the full twin.  A ring of a few blocks cuts the
+        engine's resident pool bytes by ~2x at unchanged round latency
+        and bitwise-identical decode (BENCH_dispatch.json serve_round,
+        schema v4)."""
         self.cfg = cfg
         self.rc = rc or RowCloneConfig()
         self.mesh = mesh
@@ -65,23 +75,30 @@ class ServingEngine:
         nblk = max_seqs * max_blocks_per_seq
         # pool must tile both the allocator slabs and the mesh's device
         # shards — the sharded fused dispatch partitions by device shard
-        align = int(np.lcm(num_slabs, pool_shard_count(mesh)))
+        shards = pool_shard_count(mesh)
+        align = int(np.lcm(num_slabs, shards))
         nblk = -(-nblk // align) * align
+        if max_admit_pages is None:
+            stage_nblk = nblk          # full twin (legacy sizing)
+        else:
+            stage_nblk = -(-max_admit_pages // shards) * shards
         kv_dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
         alloc = SubarrayAllocator(nblk, num_slabs,
                                   reserved_zero_per_slab=self.rc
                                   .zero_blocks_per_slab)
-        # K/V pools + staging twins share one layout (models/paged.py);
-        # the engine sees the mesh: every decode round's promotions + CoW
-        # splits + tail inits drain as ONE (collective) launch at the
-        # round's flush boundary
-        pools, staging = make_serving_pools(
+        # K/V pools + staging pools are ONE PoolGroup (models/paged.py):
+        # per-pool block counts in the group's prefix-sum address space,
+        # so the (possibly much smaller) staging ring rides the same
+        # fused launch.  The engine sees the mesh: every decode round's
+        # promotions + CoW splits + tail inits drain as ONE (collective)
+        # launch at the round's flush boundary
+        pools, group = make_serving_pools(
             L, nblk, page, cfg.num_kv_heads, cfg.head_dim, kv_dtype,
-            staging=fused_staging)
+            staging=fused_staging, stage_nblk=stage_nblk)
         self.engine = RowCloneEngine(
             pools, alloc, mesh=mesh, enable_fpm=self.rc.enable_fpm,
             enable_psm=self.rc.enable_psm, enable_zi=self.rc.enable_zi,
-            block_axis=1, staging=staging)
+            block_axis=1, group=group)
         # shard the decode batch over (pod, data) when the cache can pin
         # each sequence's blocks inside its batch group's slabs; otherwise
         # keep global share-mask columns (replicated batch — paged.py)
@@ -190,6 +207,8 @@ class ServingEngine:
             self._extras[sid] = extras
 
     def fork(self, sid: int, n: int) -> List[int]:
+        """CoW-fork ``sid`` into ``n`` children (parallel sampling / beam
+        search): prompt pages share by refcount — zero bytes move."""
         kids = self.cache.fork(sid, n)
         for c in kids:
             self.last_logits[c] = self.last_logits[sid].copy()
@@ -199,6 +218,7 @@ class ServingEngine:
         return kids
 
     def free(self, sid: int) -> None:
+        """Release a finished sequence's blocks, slot, and host state."""
         self.cache.free_sequence(sid)
         self.last_logits.pop(sid, None)
         self.tokens.pop(sid, None)
@@ -267,6 +287,8 @@ def _stage_legacy(pool, staging, dst_ids):
 
 
 def main():
+    """CLI: admit random prompts, optionally fork, greedy-decode, and
+    print the RowClone mechanism stats (see the module docstring)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-3b")
     ap.add_argument("--requests", type=int, default=4)
@@ -274,6 +296,10 @@ def main():
     ap.add_argument("--steps", type=int, default=16)
     ap.add_argument("--fork", type=int, default=0)
     ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--staging-ring", type=int, default=0,
+                    help="staging slots (max_admit_pages): size staging "
+                         "as a recycled ring instead of full KV twins "
+                         "(~2x less resident pool memory); 0 = full twin")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -281,7 +307,12 @@ def main():
         cfg = cfg.reduced()
     model = build_model(cfg)
     params, _ = split_params(model.init_params(jax.random.key(0)))
-    eng = ServingEngine(cfg, params, max_seqs=max(args.requests * 4, 8))
+    eng = ServingEngine(cfg, params, max_seqs=max(args.requests * 4, 8),
+                        max_admit_pages=args.staging_ring or None)
+    print(f"[serve] resident pool bytes: "
+          f"{eng.engine.pool_bytes_resident() / 1e6:.1f} MB "
+          f"(staging slots: {eng.engine.stage_capacity} of "
+          f"{eng.engine.num_blocks} KV blocks)")
     rng = np.random.default_rng(0)
     sids = []
     for i in range(args.requests):

@@ -134,6 +134,9 @@ def train_loop(arch: str, steps: int = 50, batch: int = 4, seq_len: int = 128,
                Optional[int] = None, log_every: int = 10,
                checkpoint_every: int = 20, seed: int = 0,
                learning_rate: float = 3e-4):
+    """CPU-scale end-to-end training driver: synthetic batches through the
+    jit'd train step, with optional checkpointing and fault injection
+    (the elastic-runtime tests drive it).  Returns the final metrics."""
     cfg = get_config(arch)
     if smoke:
         cfg = cfg.reduced()
@@ -178,6 +181,7 @@ def train_loop(arch: str, steps: int = 50, batch: int = 4, seq_len: int = 128,
 
 
 def main():
+    """CLI wrapper over :func:`train_loop`."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--steps", type=int, default=50)

@@ -31,6 +31,7 @@ from repro.models.attention import lse_combine, paged_attention_slab
 # ---------------------------------------------------------------------------
 
 def pool_shard_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes (in shard order) that a pool's block axis shards over."""
     return tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
 
 
@@ -75,6 +76,7 @@ def combine_axes(mesh: Mesh, batch_axes: Tuple[str, ...]) -> Tuple[str, ...]:
 
 
 def pool_spec(mesh: Mesh) -> P:
+    """PartitionSpec sharding a flat pool's leading block axis."""
     axes = pool_shard_axes(mesh)
     return P(axes if len(axes) > 1 else (axes[0] if axes else None))
 
@@ -86,33 +88,54 @@ def _maybe(axes: Tuple[str, ...]):
 
 
 # ---------------------------------------------------------------------------
-# pool construction — K/V pools and their staging twins are ONE layout
+# pool construction — K/V pools and their staging pools are ONE layout
 # decision (same block shape, same dtype, same (pod, data, model) sharding
 # of the block axis), so cross-pool promotion commands are always legal
 # ---------------------------------------------------------------------------
 
 def make_serving_pools(num_layers: int, nblk: int, page: int, kv_heads: int,
                        head_dim: int, dtype,
-                       staging: bool = True):
-    """Build the serving engine's pool dict: layer-stacked ``(L, nblk,
-    page, KVH, D)`` K/V pools plus (by default) their staging twins.
+                       staging: bool = True,
+                       stage_nblk: Optional[int] = None):
+    """Build the serving engine's pools: layer-stacked ``(L, nblk, page,
+    KVH, D)`` K/V pools plus (by default) their staging pools.
 
     The staging pools are where prefill writes land; staged pages promote
     into allocator-owned K/V blocks via ``OP_CROSS_POOL_COPY`` through the
     command queue (RowCloneEngine ``promote_staged``), so every byte of
-    bulk movement in a serving round rides one fused launch.  Returns
-    ``(pools, staging_map)`` ready for the RowCloneEngine constructor —
-    staging pools come last, as the engine's primary/staging split
-    requires, and shard by the same ``pool_shard_count`` as their twins.
+    bulk movement in a serving round rides one fused launch.
+
+    ``stage_nblk`` sizes the staging pools INDEPENDENTLY of their KV
+    twins: ``None`` keeps the full-size twin (every KV block has a staging
+    slot), while a small value builds a staging *ring* — just enough slots
+    to park the admissions between two flushes — which is what cuts the
+    serving engine's resident pool bytes by ~2x (slots recycle every
+    round; see launch/serve.py ``max_admit_pages``).  Under a mesh it must
+    divide by the same ``pool_shard_count`` as ``nblk``.
+
+    Returns ``(pools, group)``: the name -> array dict plus the
+    :class:`~repro.core.poolspec.PoolGroup` describing the engine's
+    address space (per-pool block counts, roles, sharding hint) — both go
+    straight into the RowCloneEngine constructor.
     """
+    from repro.core.poolspec import PoolGroup, PoolSpec
+    if stage_nblk is None:
+        stage_nblk = nblk
+    block_shape = (num_layers, page, kv_heads, head_dim)
     shape = (num_layers, nblk, page, kv_heads, head_dim)
+    sshape = (num_layers, stage_nblk, page, kv_heads, head_dim)
+    hint = ("pod", "data", "model")
     pools = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
-    staging_map = {}
+    specs = [PoolSpec("k", nblk, block_shape, dtype, sharding=hint),
+             PoolSpec("v", nblk, block_shape, dtype, sharding=hint)]
     if staging:
-        pools["k_stage"] = jnp.zeros(shape, dtype)
-        pools["v_stage"] = jnp.zeros(shape, dtype)
-        staging_map = {"k_stage": "k", "v_stage": "v"}
-    return pools, staging_map
+        pools["k_stage"] = jnp.zeros(sshape, dtype)
+        pools["v_stage"] = jnp.zeros(sshape, dtype)
+        specs += [PoolSpec("k_stage", stage_nblk, block_shape, dtype,
+                           role="staging", paired="k", sharding=hint),
+                  PoolSpec("v_stage", stage_nblk, block_shape, dtype,
+                           role="staging", paired="v", sharding=hint)]
+    return pools, PoolGroup(specs)
 
 
 # ---------------------------------------------------------------------------

@@ -6,13 +6,17 @@ Streams mix every opcode (FPM/PSM/baseline-adjacent copies, zero-init —
 materialized and lazy — and cross-pool copies), include duplicate
 destinations (exercising the hazard auto-flush), src==dst no-ops, lazy-zero
 sources (the ZI alias fast path), overflow past the top 512 bucket, and both
-``block_axis`` layouts.  Engines carry staging twins (k_stage/v_stage), so
-streams also drive staging↔KV cross-pool traffic — promotions, demotions,
+``block_axis`` layouts.  Engines carry staging pools (k_stage/v_stage) of
+INDEPENDENT size — full twins and staging rings smaller than the KV pools
+(the PoolGroup prefix-sum address space) — so streams also drive
+heterogeneous staging↔KV cross-pool traffic: promotions, demotions,
 staging→staging moves, and dup-dst hazards that cross the primary/staging
-address-space boundary (pool-aware hazard keys).  The single-device pair
-runs in-process via ``tests/_hypo.py``; the three-way comparison including
-the 8-device mesh fused path replays the same generated streams in a
-subprocess (jax locks the host device count at first init).
+address-space boundary (pool-aware hazard keys), with every global id
+resolved through per-pool base offsets rather than uniform stacked
+arithmetic.  The single-device pair runs in-process via ``tests/_hypo.py``;
+the three-way comparison including the 8-device mesh fused path replays the
+same generated streams in a subprocess (jax locks the host device count at
+first init).
 """
 import json
 import os
@@ -24,7 +28,7 @@ import pytest
 
 from _hypo import given, settings, st
 from _meshproc import run_device_subprocess
-from repro.core import RowCloneEngine, SubarrayAllocator
+from repro.core import BlockRef, RowCloneEngine, SubarrayAllocator
 from repro.kernels import fused_dispatch as fd
 
 # ---------------------------------------------------------------------------
@@ -44,8 +48,13 @@ CROSS_POOL_PAIRS = (
 )
 
 
-def gen_program(rng: random.Random, nblk: int, n_instr: int):
-    """A random instruction stream against the engine's public API."""
+def gen_program(rng: random.Random, nblk: int, n_instr: int,
+                stage_nblk=None):
+    """A random instruction stream against the engine's public API.
+    ``stage_nblk`` bounds the block ids drawn for staging pools (None =
+    same as the KV pools — the full-twin layout)."""
+    sizes = {"k": nblk, "v": nblk,
+             "k_stage": stage_nblk or nblk, "v_stage": stage_nblk or nblk}
     prog = []
     for _ in range(n_instr):
         kind = rng.choice(KINDS)
@@ -64,9 +73,9 @@ def gen_program(rng: random.Random, nblk: int, n_instr: int):
             prog.append(["lazy", ids])
         else:
             n = rng.randint(1, 4)
-            pairs = [[rng.randrange(nblk), rng.randrange(nblk)]
-                     for _ in range(n)]
             sp, dp = rng.choice(CROSS_POOL_PAIRS)
+            pairs = [[rng.randrange(sizes[sp]), rng.randrange(sizes[dp])]
+                     for _ in range(n)]
             prog.append(["cross", pairs, sp, dp])
     return prog
 
@@ -87,21 +96,27 @@ def run_program(eng: RowCloneEngine, prog):
                 elif instr[0] == "lazy":
                     eng.meminit(instr[1], lazy=True)
                 else:
-                    eng.memcopy_cross([tuple(p) for p in instr[1]],
-                                      instr[2], instr[3])
+                    sp, dp = instr[2], instr[3]
+                    eng.memcopy_cross([(BlockRef(sp, s), BlockRef(dp, d))
+                                       for s, d in instr[1]])
     finally:
         fd.remove_launch_hook(hook)
     return events
 
 
-def mk_engine(nblk, block_axis, use_fused, mesh=None, nslabs=4, seed=0):
+def mk_engine(nblk, block_axis, use_fused, mesh=None, nslabs=4, seed=0,
+              stage_nblk=None):
+    """Build a 4-pool engine; ``stage_nblk`` sizes the staging pools
+    independently of the KV pools (None = full twin)."""
+    snblk = stage_nblk or nblk
     alloc = SubarrayAllocator(nblk, nslabs, reserved_zero_per_slab=1)
     shape = (nblk, 4, 8) if block_axis == 0 else (3, nblk, 4, 8)
+    sshape = (snblk, 4, 8) if block_axis == 0 else (3, snblk, 4, 8)
     pools = {
         "k": jax.random.normal(jax.random.key(seed), shape),
         "v": jax.random.normal(jax.random.key(seed + 1), shape),
-        "k_stage": jax.random.normal(jax.random.key(seed + 2), shape),
-        "v_stage": jax.random.normal(jax.random.key(seed + 3), shape),
+        "k_stage": jax.random.normal(jax.random.key(seed + 2), sshape),
+        "v_stage": jax.random.normal(jax.random.key(seed + 3), sshape),
     }
     return RowCloneEngine(pools, alloc, mesh=mesh, max_requests=64,
                           block_axis=block_axis, use_fused=use_fused,
@@ -120,15 +135,21 @@ def assert_pools_equal(a: RowCloneEngine, b: RowCloneEngine, ctx=""):
 # ---------------------------------------------------------------------------
 
 @settings(max_examples=12, deadline=None)
-@given(st.integers(0, 10**6), st.integers(0, 1), st.integers(1, 8))
-def test_property_fused_matches_seed_fanout(seed, block_axis, n_instr):
-    """Random streams: fused flush == seed per-op fan-out, bitwise, with
-    every fused flush exactly one launch."""
+@given(st.integers(0, 10**6), st.integers(0, 1), st.integers(1, 8),
+       st.integers(0, 2))
+def test_property_fused_matches_seed_fanout(seed, block_axis, n_instr,
+                                            stage_shift):
+    """Random streams over HETEROGENEOUS pools (staging rings of nblk,
+    nblk/2, nblk/4 slots): fused flush == seed per-op fan-out, bitwise,
+    with every fused flush exactly one launch."""
     rng = random.Random(seed)
     nblk = rng.choice([32, 64])
-    prog = gen_program(rng, nblk, n_instr)
-    fused = mk_engine(nblk, block_axis, use_fused=True)
-    legacy = mk_engine(nblk, block_axis, use_fused=False)
+    stage_nblk = nblk >> stage_shift
+    prog = gen_program(rng, nblk, n_instr, stage_nblk=stage_nblk)
+    fused = mk_engine(nblk, block_axis, use_fused=True,
+                      stage_nblk=stage_nblk)
+    legacy = mk_engine(nblk, block_axis, use_fused=False,
+                       stage_nblk=stage_nblk)
     ev_f = run_program(fused, prog)
     ev_l = run_program(legacy, prog)
     assert_pools_equal(fused, legacy, f"(seed={seed} prog={prog})")
@@ -181,9 +202,11 @@ mesh = Mesh(np.asarray(jax.devices()).reshape(2, 4), ("data", "model"))
 results = []
 for case in spec["cases"]:
     nblk, ba, prog = case["nblk"], case["block_axis"], case["prog"]
-    seed_eng = mk_engine(nblk, ba, use_fused=False)
-    single = mk_engine(nblk, ba, use_fused=True)
-    sharded = mk_engine(nblk, ba, use_fused=True, mesh=mesh)
+    snblk = case.get("stage_nblk")
+    seed_eng = mk_engine(nblk, ba, use_fused=False, stage_nblk=snblk)
+    single = mk_engine(nblk, ba, use_fused=True, stage_nblk=snblk)
+    sharded = mk_engine(nblk, ba, use_fused=True, mesh=mesh,
+                        stage_nblk=snblk)
     ev_seed = run_program(seed_eng, prog)
     ev_single = run_program(single, prog)
     ev_mesh = run_program(sharded, prog)
@@ -208,8 +231,9 @@ kops.fused_dispatch_sharded = functools.partial(orig, use_pallas=True)
 try:
     case = spec["cases"][0]
     forced = mk_engine(case["nblk"], case["block_axis"], use_fused=True,
-                       mesh=mesh)
-    plain = mk_engine(case["nblk"], case["block_axis"], use_fused=True)
+                       mesh=mesh, stage_nblk=case.get("stage_nblk"))
+    plain = mk_engine(case["nblk"], case["block_axis"], use_fused=True,
+                      stage_nblk=case.get("stage_nblk"))
     run_program(forced, case["prog"])
     run_program(plain, case["prog"])
     assert_pools_equal(forced, plain, "pallas-interpret sharded drain")
@@ -225,14 +249,20 @@ print("RESULTS:" + json.dumps(results))
 def test_property_mesh_fused_three_way_parity(tmp_path):
     """The generated streams replayed under a 2x4 host mesh: seed fan-out,
     single-slab fused, and the sharded mesh drain agree bitwise, and both
-    fused paths issue exactly one launch per flushed chunk."""
+    fused paths issue exactly one launch per flushed chunk.  Engines mix
+    full-twin and staging-ring layouts (per-pool shard sizes in the
+    ShardPlan — a ring's 8-block slab partitions alongside a 64-block KV
+    slab in the same collective launch)."""
     rng = random.Random(0xC10E)
     cases = []
     for i in range(5):
         nblk = rng.choice([32, 64])            # 8 shards of 4 or 8 blocks
+        # ring sizes stay divisible by the 8 mesh shards (8 minimum)
+        snblk = rng.choice([nblk, nblk // 2, nblk // 4])
         ba = rng.randrange(2)
-        cases.append({"nblk": nblk, "block_axis": ba,
-                      "prog": gen_program(rng, nblk, rng.randint(2, 7))})
+        cases.append({"nblk": nblk, "block_axis": ba, "stage_nblk": snblk,
+                      "prog": gen_program(rng, nblk, rng.randint(2, 7),
+                                          stage_nblk=snblk)})
     # overflow across the mesh: >512 commands, sources on every shard
     cases.append({"nblk": 2048, "block_axis": 0,
                   "prog": [["copy", [[i, 1024 + i] for i in range(600)]]]})
@@ -245,6 +275,71 @@ def test_property_mesh_fused_three_way_parity(tmp_path):
     assert len(results) == len(cases)
     # the overflow case drains in exactly two collective launches
     assert results[-1]["launches"] == 2, results[-1]
+
+
+# ---------------------------------------------------------------------------
+# regression: adversarial delta subsets must not grow the sharded jit cache
+# without bound — past MAX_DELTA_SIGNATURES distinct (deltas, t) signatures
+# the plan folds onto the full delta set (cmdqueue.fold_shard_plan)
+# ---------------------------------------------------------------------------
+
+JIT_CACHE_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import itertools, json, sys
+import jax, numpy as np
+from jax.sharding import Mesh
+
+sys.path.insert(0, __TEST_DIR__)
+from test_dispatch_properties import assert_pools_equal, mk_engine
+from repro.kernels import fused_dispatch as fd
+
+mesh = Mesh(np.asarray(jax.devices()).reshape(2, 4), ("data", "model"))
+nblk = 64                                  # 8 device shards of 8 blocks
+sharded = mk_engine(nblk, 0, use_fused=True, mesh=mesh)
+oracle = mk_engine(nblk, 0, use_fused=True)
+for eng in (sharded, oracle):
+    eng.alloc.mark_written(list(range(1, 8)))
+
+# adversarial churn: a fresh delta subset per flush (src shard 0, one
+# cross-shard copy per delta — distinct dsts, srcs disjoint from dsts, so
+# no hazard splits the flush)
+subsets = []
+for r in (1, 2, 3):
+    subsets.extend(itertools.combinations(range(1, 8), r))
+subsets = subsets[:3 * fd.MAX_DELTA_SIGNATURES]
+for subset in subsets:
+    pairs = [(1 + j, delta * 8 + 7) for j, delta in enumerate(subset)]
+    for eng in (sharded, oracle):
+        eng.memcopy(pairs)                  # autoflush: one launch each
+
+assert_pools_equal(sharded, oracle, "post-fold parity")
+info = fd._sharded_runner.cache_info()
+print("RESULTS:" + json.dumps({
+    "subsets": len(subsets),
+    "compiled_bodies": info.misses,
+    "max_sigs": fd.MAX_DELTA_SIGNATURES,
+    "launches": sharded.stats.launches,
+}))
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.mesh
+def test_jit_cache_bounded_under_adversarial_deltas(tmp_path):
+    """3x MAX_DELTA_SIGNATURES flushes with pairwise-distinct delta
+    subsets: compiled collective bodies stay O(1) (the threshold plus the
+    one folded full-delta body), every flush is still one launch, and the
+    folded drains stay bitwise-equal to the single-slab oracle."""
+    child = JIT_CACHE_CHILD.replace(
+        "__TEST_DIR__", repr(os.path.dirname(os.path.abspath(__file__))))
+    res = run_device_subprocess(child, tmp_path=tmp_path)
+    assert res["subsets"] == 3 * res["max_sigs"], res
+    # unbounded behaviour would compile one body per subset (24); the
+    # bound admits MAX distinct signatures + 1 folded body
+    assert res["compiled_bodies"] <= res["max_sigs"] + 1, res
+    assert res["launches"] == res["subsets"], res
 
 
 # ---------------------------------------------------------------------------

@@ -260,6 +260,83 @@ def test_admission_round_is_one_launch(served):
 
 
 # ---------------------------------------------------------------------------
+# staging ring: per-pool nblk halves serving memory at bitwise parity
+# ---------------------------------------------------------------------------
+
+def _drive_rounds(eng, cfg, seed, n_rounds=5, hook_events=None):
+    """Deterministic admit/fork/decode rounds (same plan for any engine
+    built from the same seed)."""
+    rng = random.Random(seed)
+    prng = np.random.default_rng(seed)
+    sids: list = []
+    for rnd in range(n_rounds):
+        plan = []
+        if rnd == 0 or (rng.random() < 0.7 and len(sids) < 5):
+            plan.append(("admit", prng.integers(
+                2, cfg.vocab_size, size=rng.choice([9, 16, 24])).astype(
+                    np.int32)))
+        if sids and rng.random() < 0.4:
+            plan.append(("fork", rng.choice(sids)))
+        with fd_hook() as ev:
+            for op, arg in plan:
+                if op == "admit":
+                    sids.append(eng.add_request(arg.copy()))
+                else:
+                    eng.fork(arg, 1)
+            eng.decode_round()
+        if hook_events is not None:
+            hook_events.append([m for _, _, m in ev])
+    return sids
+
+
+@pytest.mark.slow
+def test_staging_ring_halves_memory_bitwise_tokens(served):
+    """The acceptance scenario, single-device leg: a serving engine whose
+    staging pools are a RING (max_admit_pages slots, recycled every
+    flush) instead of full-size KV twins must decode bitwise-identical
+    greedy tokens at one fused launch per round, with >= 1.8x lower
+    resident pool bytes."""
+    from repro.launch.serve import ServingEngine
+    cfg, params = served
+    twin = ServingEngine(cfg, params, max_seqs=8, max_blocks_per_seq=16)
+    ring = ServingEngine(cfg, params, max_seqs=8, max_blocks_per_seq=16,
+                         max_admit_pages=8)
+    assert ring.engine.stage_capacity == 8
+    assert ring.engine.stage_capacity < ring.engine.num_blocks
+    ring_rounds: list = []
+    _drive_rounds(twin, cfg, seed=3)
+    _drive_rounds(ring, cfg, seed=3, hook_events=ring_rounds)
+    assert twin.tokens == ring.tokens
+    for name in ("k", "v"):
+        np.testing.assert_array_equal(
+            np.asarray(twin.engine.pools[name]),
+            np.asarray(ring.engine.pools[name]), err_msg=f"pool {name}")
+    for rnd, mechs in enumerate(ring_rounds):
+        assert all(m == "fused" for m in mechs), (rnd, mechs)
+        assert len(mechs) <= 1, (rnd, mechs)
+    reduction = (twin.engine.pool_bytes_resident()
+                 / ring.engine.pool_bytes_resident())
+    assert reduction >= 1.8, reduction
+
+
+def test_ring_exhaustion_flushes_and_recycles(served):
+    """Admissions beyond the ring's capacity inside one round force an
+    early drain (promotions flush, slots recycle) instead of failing —
+    the ring only ever needs to hold the pages between two flushes."""
+    from repro.launch.serve import ServingEngine
+    cfg, params = served
+    eng = ServingEngine(cfg, params, max_seqs=8, max_blocks_per_seq=16,
+                        max_admit_pages=1)
+    prng = np.random.default_rng(0)
+    for _ in range(3):      # each admission needs the ring's only slot
+        eng.add_request(prng.integers(2, cfg.vocab_size, size=9)
+                        .astype(np.int32))
+    eng.decode_round()
+    assert eng.engine.stats.stage_promotions == 3
+    assert len(eng.engine._stage_free) == eng.engine.stage_capacity
+
+
+# ---------------------------------------------------------------------------
 # mesh leg: sharded-batch serving tables (local share-mask columns)
 # ---------------------------------------------------------------------------
 
@@ -310,6 +387,43 @@ results["groups_used"] = sorted(set(groups.values()))
 results["placement_ok"] = bool(all(
     srv.cache.group_of_block(b) == seq.group
     for seq in srv.cache.seqs.values() for b in seq.blocks))
+
+# staging-ring acceptance, mesh leg: a ring of 8 slots (vs 128-block KV
+# pools) decodes the same greedy tokens as the full twin, one collective
+# launch per round, >= 1.8x lower resident pool bytes
+from repro.kernels import fused_dispatch as fd
+twin = ServingEngine(cfg, params, mesh=mesh, max_seqs=8,
+                     max_blocks_per_seq=16, num_slabs=4)
+ring = ServingEngine(cfg, params, mesh=mesh, max_seqs=8,
+                     max_blocks_per_seq=16, num_slabs=4, max_admit_pages=8)
+rng2 = np.random.default_rng(7)
+ring_mechs = []
+hook = lambda n, p, m: ring_mechs.append(m)
+for i in range(3):
+    p = rng2.integers(2, cfg.vocab_size, size=16).astype(np.int32)
+    tw = twin.add_request(p.copy())
+    fd.add_launch_hook(hook)
+    rg = ring.add_request(p.copy())
+    fd.remove_launch_hook(hook)
+    twin.decode_round()
+    fd.add_launch_hook(hook)
+    n0 = len(ring_mechs)
+    ring.decode_round()
+    fd.remove_launch_hook(hook)
+    assert len(ring_mechs) - n0 <= 1, ring_mechs
+twin.fork(tw, 1)
+ring.fork(rg, 1)
+for _ in range(3):
+    twin.decode_round()
+    ring.decode_round()
+results["ring_capacity"] = ring.engine.stage_capacity
+results["ring_kv_nblk"] = ring.engine.num_blocks
+results["ring_tokens_match"] = bool(all(
+    twin.tokens[s] == ring.tokens[s] for s in twin.tokens))
+results["ring_mechs_fused"] = bool(all(
+    m == "fused_mesh" for m in ring_mechs))
+results["ring_reduction"] = float(
+    twin.engine.pool_bytes_resident() / ring.engine.pool_bytes_resident())
 print("RESULTS:" + json.dumps(results))
 """
 
@@ -327,3 +441,9 @@ def test_sharded_batch_serving_decodes_like_single_device(tmp_path):
     assert res["tokens_match"], res
     assert res["placement_ok"], res
     assert res["groups_used"] == [0, 1], res
+    # staging-ring acceptance on the mesh: 8-slot ring vs 128-block KV,
+    # bitwise greedy tokens, collective launches only, >= 1.8x memory win
+    assert res["ring_capacity"] == 8 < res["ring_kv_nblk"], res
+    assert res["ring_tokens_match"], res
+    assert res["ring_mechs_fused"], res
+    assert res["ring_reduction"] >= 1.8, res

@@ -1,9 +1,10 @@
-"""Docstring lint for the public bulk-movement surface.
+"""Docstring lint for the public bulk-movement + serving surface.
 
-Fails (exit 1) when a public symbol in ``repro.core`` or ``repro.kernels``
-lacks a docstring: module-level functions and classes, plus public methods
-defined on public classes.  "Public" = no leading underscore and defined in
-the package itself (re-exports are checked once, at their definition site).
+Fails (exit 1) when a public symbol in ``repro.core``, ``repro.kernels``,
+``repro.models.paged``, or ``repro.launch`` lacks a docstring:
+module-level functions and classes, plus public methods defined on public
+classes.  "Public" = no leading underscore and defined in the package
+itself (re-exports are checked once, at their definition site).
 
 Run via ``make check-docs`` (wired into ``make test``):
 
@@ -16,15 +17,25 @@ import inspect
 import pkgutil
 import sys
 
-PACKAGES = ("repro.core", "repro.kernels")
+PACKAGES = ("repro.core", "repro.kernels", "repro.models.paged",
+            "repro.launch")
 
 #: dataclass-generated or inherited members that need no prose of their own
 SKIP_METHODS = {"__init__"}
 
 
 def iter_modules(pkg_name):
+    """Yield (name, module) for a package and its submodules — or just the
+    module itself when ``pkg_name`` names a plain module (e.g.
+    ``repro.models.paged``).  Namespace packages (no __init__.py, hence no
+    module docstring of their own — ``repro.launch``) yield only their
+    submodules."""
     pkg = importlib.import_module(pkg_name)
-    yield pkg_name, pkg
+    if not hasattr(pkg, "__path__"):
+        yield pkg_name, pkg
+        return
+    if getattr(pkg, "__file__", None) is not None:
+        yield pkg_name, pkg
     for info in pkgutil.iter_modules(pkg.__path__, prefix=pkg_name + "."):
         yield info.name, importlib.import_module(info.name)
 
