@@ -12,8 +12,10 @@
 #                       docstring (tools/check_docs.py)
 #   make bench-smoke  - dispatch benchmark (writes BENCH_dispatch.json)
 #   make bench-serve  - serve_round CI gate: fails if the fused serving
-#                       paths regress above 1.0 launch/round or ring
-#                       staging stops matching the twin's greedy tokens
+#                       paths regress above 1.0 launch/round, if
+#                       double-buffered burst-admission rounds exceed
+#                       1.0 launch/round, or if ring/burst decode stops
+#                       matching the baseline greedy tokens
 #   make bench        - full paper-figure benchmark sweep
 
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))

@@ -16,12 +16,16 @@ adds the ``ring_staging`` path — staging pools sized as a
 and tracks ``pool_bytes_resident`` per serve_round row, so the ~2x
 serving-memory reduction is recorded alongside launches/round and
 wall-clock (greedy tokens are asserted bitwise-identical to the
-full-twin path in ``summary.ring_tokens_match``).
+full-twin path in ``summary.ring_tokens_match``).  Schema v5 adds the
+``burst_admission`` serve_round leg: rounds admitting MORE staged pages
+than the ring's nominal capacity, single-buffered (early-flush launch)
+vs double-buffered (shadow half absorbs the burst at 1.0 launches/round,
+the CommandStream/source-hazard redesign headline).
 
 Emits ``BENCH_dispatch.json``:
 
 {
-  "schema": "bench_dispatch/v4",
+  "schema": "bench_dispatch/v5",
   "backend": "cpu" | "tpu",
   "block": [page, KVH, D], "nblk": int, "pools": ["k", "v"],
   "rows": [{
@@ -59,6 +63,17 @@ Emits ``BENCH_dispatch.json``:
                   "launches_seed": float,
                   "staging_memory_reduction": float,  # twin/ring resident
                   "ring_tokens_match": bool},  # greedy tokens bitwise ==
+      "burst_admission": {     # admissions/round x pages > ring capacity
+          "ring_pages": int, "admits_per_round": int, "rounds": int,
+          "rows": [{
+              "path": "single_ring"|"double_ring",
+              "launches_per_round": float,  # 1.0 double vs >1.0 single
+              "us_per_round": float,
+              "stage_capacity": int         # ring slots (2x when double)
+          }],
+          "summary": {"launches_single": float, "launches_double": float,
+                      "tokens_match": bool}  # double == single, bitwise
+      },
       "mesh": {"devices": 8, "mesh_shape": [2, 4],    # sharded-batch leg
                "rows": [...], "summary": {...}} | null
   }
@@ -168,10 +183,20 @@ SERVE_WARMUP = 2             # rounds excluded from the median (compiles)
 SERVE_MAX_BLOCKS = 16        # KV nblk = 8 * 16 = 128 blocks
 SERVE_RING_PAGES = 8         # staging-ring slots (vs the 128-slot twin)
 
-#: (row label, fused_staging, max_admit_pages) serve_round legs
-SERVE_PATHS = (("fused_staging", True, None),
+#: (row label, fused_staging, max_admit_pages) serve_round legs — 0 is
+#: ServingEngine.FULL_TWIN (max_admit_pages defaults to the policy-derived
+#: ring since v5, so the twin baseline opts out explicitly)
+SERVE_PATHS = (("fused_staging", True, 0),
                ("ring_staging", True, SERVE_RING_PAGES),
-               ("seed_staging", False, None))
+               ("seed_staging", False, 0))
+
+#: burst_admission leg: rounds park BURST_ADMITS x 1 page into a
+#: BURST_RING_PAGES-slot ring — past nominal capacity, so the
+#: single-buffered ring early-flushes while the double-buffered shadow
+#: half keeps the round at one launch
+BURST_RING_PAGES = 2
+BURST_ADMITS = 3
+BURST_ROUNDS = 4
 
 
 def _bench_serve_path(path: str, fused_staging: bool,
@@ -233,6 +258,78 @@ def _bench_serve_path(path: str, fused_staging: bool,
     }
 
 
+def _bench_burst_path(path: str, double_buffer: bool) -> Dict:
+    """One burst-admission leg (CPU): every round admits ``BURST_ADMITS``
+    one-page prompts into a ``BURST_RING_PAGES``-slot staging ring, then
+    decodes.  The single-buffered ring must early-flush mid-round (extra
+    launch); the double-buffered ring's shadow half keeps the round at
+    one launch.  Rows carry ``_tokens`` for the cross-path parity check
+    (stripped by ``_burst_summary``).  (The mesh burst leg lives in the
+    test suite — tests/test_serving_staging.py MESH_SERVE_CHILD.)"""
+    from repro.configs import get_config
+    from repro.launch.serve import ServingEngine
+    from repro.models import build_model, split_params
+    cfg = get_config(SERVE_ARCH).reduced()
+    model = build_model(cfg)
+    params, _ = split_params(model.init_params(jax.random.key(0)))
+    eng = ServingEngine(cfg, params,
+                        max_seqs=BURST_ADMITS * BURST_ROUNDS,
+                        max_blocks_per_seq=SERVE_MAX_BLOCKS,
+                        max_admit_pages=BURST_RING_PAGES,
+                        double_buffer=double_buffer)
+    rng = np.random.default_rng(0)
+    events: List = []
+    hook = lambda n, p, mech: events.append(mech)
+    fd.add_launch_hook(hook)
+    launches, times = [], []
+    try:
+        for r in range(BURST_ROUNDS):
+            n0 = len(events)
+            t0 = time.perf_counter()
+            for _ in range(BURST_ADMITS):
+                eng.add_request(rng.integers(
+                    2, cfg.vocab_size, size=24).astype(np.int32))
+            eng.decode_round()
+            jax.block_until_ready([eng.engine.pools["k"],
+                                   eng.engine.pools["v"]])
+            times.append(time.perf_counter() - t0)
+            launches.append(len(events) - n0)
+    finally:
+        fd.remove_launch_hook(hook)
+    meas = slice(SERVE_WARMUP, None)
+    return {
+        "path": path,
+        "launches_per_round": float(np.mean(launches[meas])),
+        "us_per_round": float(np.median(times[meas]) * 1e6),
+        "stage_capacity": int(eng.engine.stage_capacity),
+        "_tokens": {str(s): t for s, t in eng.tokens.items()},
+    }
+
+
+def _burst_summary(rows: List[Dict]) -> Dict:
+    """Cross-path burst summary; strips ``_tokens`` in place."""
+    s = next(r for r in rows if r["path"] == "single_ring")
+    d = next(r for r in rows if r["path"] == "double_ring")
+    tokens = {r["path"]: r.pop("_tokens") for r in rows}
+    return {
+        "launches_single": s["launches_per_round"],
+        "launches_double": d["launches_per_round"],
+        "tokens_match": tokens["single_ring"] == tokens["double_ring"],
+    }
+
+
+def _run_burst_section() -> Dict:
+    rows = [_bench_burst_path("single_ring", False),
+            _bench_burst_path("double_ring", True)]
+    return {
+        "ring_pages": BURST_RING_PAGES,
+        "admits_per_round": BURST_ADMITS,
+        "rounds": BURST_ROUNDS,
+        "rows": rows,
+        "summary": _burst_summary(rows),
+    }
+
+
 def _serve_summary(rows: List[Dict]) -> Dict:
     """Cross-path summary; strips the private ``_tokens`` keys in place."""
     f = next(r for r in rows if r["path"] == "fused_staging")
@@ -270,6 +367,7 @@ def _run_serve_section(skip_mesh: bool) -> Optional[Dict]:
         "admit_rounds": SERVE_ADMIT_ROUNDS,
         "rows": rows,
         "summary": _serve_summary(rows),
+        "burst_admission": _run_burst_section(),
         "mesh": None,
     }
     if skip_mesh:
@@ -361,7 +459,7 @@ def run(skip_mesh: bool = False, skip_serve: bool = False) -> Dict:
     speedup = (np.mean([r["us_per_flush"] for r in small_s]) /
                np.mean([r["us_per_flush"] for r in small_f]))
     return {
-        "schema": "bench_dispatch/v4",
+        "schema": "bench_dispatch/v5",
         "backend": jax.default_backend(),
         "block": list(BLOCK),
         "nblk": NBLK,
@@ -395,6 +493,19 @@ def _print_serve(section: Dict) -> None:
     red = s["staging_memory_reduction"]
     print(f"  staging-ring memory reduction {red:.2f}x  "
           f"(tokens bitwise-identical: {s['ring_tokens_match']})")
+    burst = section.get("burst_admission")
+    if burst:
+        for r in burst["rows"]:
+            print(f"  burst {r['path']:>12} "
+                  f"{r['launches_per_round']:>6.2f} launches/round "
+                  f"{r['us_per_round']:>12.1f} us/round "
+                  f"({r['stage_capacity']} staging slots)")
+        b = burst["summary"]
+        print(f"  burst ({burst['admits_per_round']} admits/round, "
+              f"{burst['ring_pages']}-slot ring): "
+              f"{b['launches_double']:.2f} double vs "
+              f"{b['launches_single']:.2f} single launches/round "
+              f"(tokens match: {b['tokens_match']})")
 
 
 def serve_smoke() -> int:
@@ -417,6 +528,18 @@ def serve_smoke() -> int:
     if not section["summary"]["ring_tokens_match"]:
         print("FAIL: ring_staging greedy tokens diverged from "
               "fused_staging")
+        ok = False
+    burst = section["burst_admission"]
+    for row in burst["rows"]:
+        if row["path"] == "double_ring" and \
+                row["launches_per_round"] > 1.0:
+            print(f"FAIL: double-buffered ring burst rounds = "
+                  f"{row['launches_per_round']:.2f} launches/round > 1.0 "
+                  "(the shadow half no longer absorbs admission bursts)")
+            ok = False
+    if not burst["summary"]["tokens_match"]:
+        print("FAIL: double-buffered burst greedy tokens diverged from "
+              "single-buffered")
         ok = False
     if ok:
         print("bench-serve smoke OK: fused serve rounds still drain as "

@@ -2,8 +2,10 @@
 
 Demonstrates the full RowClone serving story: admission (prefill staged into
 the pool with FPM copies), fork-heavy parallel sampling (CoW shares, lazy
-zeros), decode over the shared paged pool, and the engine stats that mirror
-the paper's Table 1 / Fig 2 quantities.
+zeros), decode over the shared paged pool driven by the engine's
+**CommandStream** (each round's bulk movement drains as one launch whose
+FlushTicket is printed), and the engine stats that mirror the paper's
+Table 1 / Fig 2 quantities.
 
     PYTHONPATH=src python examples/serve_cow.py --arch yi-6b --requests 4
 """
@@ -14,6 +16,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core import BlockRef
 from repro.launch.serve import ServingEngine
 from repro.models import build_model, split_params
 
@@ -28,7 +31,11 @@ def main():
     ap.add_argument("--staging-ring", type=int, default=4,
                     help="staging slots (max_admit_pages): a small ring "
                          "instead of full-size staging twins halves the "
-                         "engine's resident pool bytes; 0 = full twin")
+                         "engine's resident pool bytes; 0 = full twin, "
+                         "-1 = derive from the admission policy")
+    ap.add_argument("--double-buffer", action="store_true",
+                    help="double-buffered ring: admission bursts past "
+                         "the ring capacity stay at 1.0 launches/round")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -37,7 +44,9 @@ def main():
     eng = ServingEngine(cfg, params,
                         max_seqs=args.requests * (args.samples_per_request
                                                   + 1) + 2,
-                        max_admit_pages=args.staging_ring or None)
+                        max_admit_pages=(None if args.staging_ring < 0
+                                         else args.staging_ring),
+                        double_buffer=args.double_buffer)
     g = eng.engine.group
     print("[serve] pool address space: " + "  ".join(
         f"{s.name}[nblk={s.nblk} base={g.base(s.name)}]" for s in g))
@@ -70,12 +79,35 @@ def main():
         return int(rng.choice(len(p), p=p))
 
     t0 = time.time()
+    # keep only the tickets' COUNTERS: a retained ticket pins its
+    # post-drain pool snapshot alive on backends without donation
+    rounds = moved_rounds = total_cmds = max_launches = 0
     for step in range(args.new_tokens):
         eng.decode_round(sample_fn=sampler)
+        t = eng.last_ticket
+        rounds += 1
+        if t is not None and t.moved:
+            moved_rounds += 1
+            total_cmds += t.commands
+            max_launches = max(max_launches, t.launches)
     dt = time.time() - t0
     n = len(eng.cache.seqs)
     print(f"[serve] generated {args.new_tokens} tokens x {n} sequences in "
           f"{dt:.1f}s ({args.new_tokens * n / dt:.1f} tok/s on CPU)")
+    print(f"[serve] stream '{eng.stream.name}': {rounds} round flushes, "
+          f"{moved_rounds} moved bulk bytes ({total_cmds} commands, max "
+          f"{max_launches} launch/round)")
+
+    # explicit-stream coda: post-hoc bulk movement through a minted
+    # stream — enqueue, flush, read the ticket's post-drain state
+    demo = eng.engine.stream("demo")
+    src = BlockRef("k", int(eng.cache.blocks_of(parents[0])[0]))
+    spare = int(eng.engine.alloc.alloc(1)[0])   # a free block to copy into
+    demo.memcopy([(src, BlockRef("k", spare))])
+    ticket = demo.flush()
+    blk = ticket.block_state(BlockRef("k", spare))
+    print(f"[serve] demo stream flush: {ticket.commands} command(s), "
+          f"{ticket.launches} launch(es), copied block shape {blk.shape}")
 
     s = eng.engine.stats
     a = eng.engine.alloc.stats

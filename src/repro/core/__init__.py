@@ -10,8 +10,11 @@ from repro.core.cmdqueue import (BUCKETS, CommandQueue, QueueStats,
 from repro.core.cow_cache import PagedCoWCache, Sequence
 from repro.core.poolspec import BlockRef, PoolGroup, PoolSpec
 from repro.core.rowclone import EngineStats, RowCloneEngine
+from repro.core.stream import CommandStream, FlushTicket
 
 __all__ = [
+    "CommandStream",
+    "FlushTicket",
     "AllocStats",
     "OutOfBlocks",
     "SubarrayAllocator",

@@ -19,20 +19,30 @@ gathers while the jit cache stays bounded (4 table shapes per pool
 structure).  Tables longer than the largest bucket are drained in overflow
 chunks instead of raising.
 
-Hazard guards (the MC's ordering rules): a command whose source was written
-by a pending command, or whose destination is already pending, triggers an
-automatic flush first — so within one table, gather-then-scatter semantics
-and the kernel's sequential DMA drain agree exactly.  Keys are
-``(pool, block)`` pairs: plain opcodes touch the block in every *primary*
-pool, while ``OP_CROSS_POOL_COPY`` names one pool on each side — so a
-staging→KV promotion of block ``d`` and a later staging write of the same
-numeric block id in a *different* pool do not falsely serialize (see
-:meth:`CommandQueue._hazard_keys`).
+Hazard guards (the MC's ordering rules) track BOTH sides of every pending
+command — sources and destinations, keyed as ``(pool, block)`` pairs
+(plain opcodes touch the block in every *primary* pool; an
+``OP_CROSS_POOL_COPY`` names one pool on each side, so a staging→KV
+promotion of block ``d`` and a later staging write of the same numeric
+block id in a *different* pool never falsely serialize).  The full hazard
+matrix:
+
+* **RAW** — a command *reading* a pending destination: auto-flush (the
+  gather-then-scatter reference would see stale bytes otherwise).
+* **WAW** — a command *rewriting* a pending destination: auto-flush (two
+  writes to one block in a table have order-dependent results).
+* **WAR** — a command *overwriting* a pending SOURCE: stays in the table
+  (every drain path reads sources before the later write lands), only
+  counted in ``stats.war_hazards``.  What it costs instead is adjacency:
+  the fused kernel's overlapped DMA drain keeps the previous step's copy
+  in flight while the current step issues, so :func:`space_war_rows`
+  inserts an ``OP_NOP`` spacer between the two rows at flush time — the
+  spacer step's trailing wait retires the read before the write starts.
 
 Invariant for writers of new opcodes: every command must name its written
 block in ``dst`` (and its read block in ``src`` — global
 ``group.base(pool) + block`` ids for cross-pool ops, see
-core/poolspec.py) so both the hazard keys here and
+core/poolspec.py) so the hazard keys here, the WAR spacing, and
 :func:`partition_commands` see every read and write.
 """
 from __future__ import annotations
@@ -58,6 +68,74 @@ def bucket_size(n: int) -> int:
         if n <= b:
             return b
     return BUCKETS[-1]
+
+
+#: hazard-key pool index standing for "every primary pool" (plain opcodes
+#: move the named block in all of them at once)
+ALL_PRIMARY = -1
+
+
+def _row_rw(op: int, s: int, d: int, locate):
+    """The ``(reads, writes)`` hazard keys of one table row, each a tuple
+    of ``(pool, block)`` with :data:`ALL_PRIMARY` meaning every primary
+    pool.  ``locate`` decodes cross-pool stacked ids for whatever address
+    space the row lives in (the PoolGroup's global ids, or a ShardPlan
+    slab's local prefix-sum ids)."""
+    if op == OP_CROSS_POOL_COPY:
+        return (locate(s),), (locate(d),)
+    if op == OP_ZERO_INIT:
+        return (), ((ALL_PRIMARY, d),)
+    return ((ALL_PRIMARY, s),), ((ALL_PRIMARY, d),)
+
+
+def _keys_clash(a: Tuple[int, int], b: Tuple[int, int],
+                primary: Tuple[bool, ...]) -> bool:
+    """Do two ``(pool, block)`` hazard keys touch overlapping bytes?
+    :data:`ALL_PRIMARY` expands to the primary pool set on either side; a
+    staging-pool key only collides with an exact pool match."""
+    pa, ba = a
+    pb, bb = b
+    if ba != bb:
+        return False
+    if pa == pb:
+        return True
+    if pa == ALL_PRIMARY:
+        return primary[pb]
+    if pb == ALL_PRIMARY:
+        return primary[pa]
+    return False
+
+
+def space_war_rows(rows: Sequence[Tuple[int, int, int]], locate,
+                   primary: Tuple[bool, ...]
+                   ) -> List[Tuple[int, int, int]]:
+    """Insert ``OP_NOP`` spacer rows so no row writes a ``(pool, block)``
+    the IMMEDIATELY preceding row reads.
+
+    The fused kernel's overlapped drain keeps exactly one prior step's
+    DMAs in flight while the current step issues (the wait trails one step
+    behind), so adjacency is the whole safety contract: RAW/WAW pairs
+    never co-exist in a flushed table (the queue guards), and this pass
+    breaks up adjacent WAR pairs — at the spacer step nothing issues but
+    the trailing wait still retires the in-flight read, so the write that
+    follows can never race it.  Applied by :meth:`CommandQueue.flush` to
+    the global table and by :func:`partition_commands` to every slab
+    sub-table (adjacency is per drained table, not per enqueue order)."""
+    out: List[Tuple[int, int, int]] = []
+    prev_reads: Tuple = ()
+    for row in rows:
+        op, s, d = row
+        if op < 0:
+            out.append(row)
+            prev_reads = ()
+            continue
+        reads, writes = _row_rw(op, s, d, locate)
+        if any(_keys_clash(r, w, primary)
+               for r in prev_reads for w in writes):
+            out.append((OP_NOP, -1, -1))
+        out.append(row)
+        prev_reads = reads
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,6 +174,7 @@ class ShardPlan:
     shard_sizes: Tuple[int, ...]  # per-pool slab size (nblk_p / S)
     n_local: int                 # commands drained inside their own slab
     n_transfer: int              # commands crossing a slab boundary
+    n_spacers: int               # per-slab WAR spacer rows inserted
     local_tables: np.ndarray     # (S, m, 3) int32
     deltas: Tuple[int, ...]      # static ppermute hop distances, sorted
     send_rows: np.ndarray        # (K, S, t) int32
@@ -103,7 +182,9 @@ class ShardPlan:
 
 
 def partition_commands(rows: Iterable[Tuple[int, int, int]], *,
-                       n_shards: int, group: PoolGroup) -> ShardPlan:
+                       n_shards: int, group: PoolGroup,
+                       replicated: Optional[Tuple[bool, ...]] = None
+                       ) -> ShardPlan:
     """Split one flushed (hazard-free) command table into per-slab
     sub-tables plus a cross-slab send/recv plan.
 
@@ -116,17 +197,35 @@ def partition_commands(rows: Iterable[Tuple[int, int, int]], *,
     Plain-opcode ids live in the primary address space (every primary pool
     shares one block count); ``OP_CROSS_POOL_COPY`` ids are global
     ``group.base(pool) + block`` and are resolved through ``group``.
-    Enqueue order is preserved within each shard's sub-table; the flush
-    hazard guards (no read and no rewrite of an earlier row's destination
-    within one table) make the cross-shard interleaving — gather transfer
-    sources, drain local tables, permute and scatter — equivalent to the
-    sequential drain.
-    """
-    for spec in group:
+    Enqueue order is preserved within each shard's sub-table (each
+    sub-table is then WAR-spaced for the overlapped per-shard drain —
+    :func:`space_war_rows`); the flush hazard guards make the cross-shard
+    interleaving — gather transfer sources, drain local tables, permute
+    and scatter — equivalent to the sequential drain.
+
+    ``replicated[p]`` marks pools whose block axis is NOT device-sharded
+    (``PoolSpec.sharding == ()`` — e.g. a staging ring held whole on
+    every device): their slab is the full pool (``shard_sizes[p] ==
+    nblk_p``), a cross-pool read from them is always local to the
+    destination's shard, and a replicated→replicated copy lands in EVERY
+    shard's sub-table so the replicas stay consistent.  A cross-pool
+    WRITE into a replicated pool from a sharded source would need a
+    broadcast hop and raises — the engine degrades that flush to the
+    legacy fan-out (GSPMD inserts the gather)."""
+    if replicated is None:
+        replicated = tuple([False] * len(group))
+    for i, spec in enumerate(group):
+        if replicated[i]:
+            if spec.role == "primary":
+                raise ValueError(
+                    f"primary pool {spec.name!r} cannot be replicated: "
+                    "plain opcodes partition by the primary shard size")
+            continue
         if spec.nblk % n_shards:
             raise ValueError(f"pool {spec.name!r}: nblk={spec.nblk} not "
                              f"divisible by {n_shards} shards")
-    ss = tuple(spec.nblk // n_shards for spec in group)
+    ss = tuple(spec.nblk if replicated[i] else spec.nblk // n_shards
+               for i, spec in enumerate(group))
     # slab-local prefix-sum bases: the per-shard stacked address space
     local_base = []
     run = 0
@@ -149,6 +248,26 @@ def partition_commands(rows: Iterable[Tuple[int, int, int]], *,
         if op == OP_CROSS_POOL_COPY:
             ps, bs = group.locate(s)
             pd, bd = group.locate(d)
+            if replicated[pd]:
+                if not replicated[ps]:
+                    raise ValueError(
+                        f"cross-pool write into replicated pool "
+                        f"{group[pd].name!r} from sharded "
+                        f"{group[ps].name!r} needs a broadcast hop "
+                        "(unsupported in the sharded drain)")
+                # replicated→replicated: every shard applies the same
+                # copy to its replica
+                row = (op, local_base[ps] + bs, local_base[pd] + bd)
+                for sh in range(n_shards):
+                    local[sh].append(row)
+                continue
+            if replicated[ps]:
+                # replicated source: the bytes are resident on the
+                # destination's shard — always a local row there
+                local[bd // ss[pd]].append(
+                    (op, local_base[ps] + bs,
+                     local_base[pd] + bd % ss[pd]))
+                continue
             sh_s, sh_d = bs // ss[ps], bd // ss[pd]
             if sh_s == sh_d:
                 local[sh_d].append((op, local_base[ps] + bs % ss[ps],
@@ -167,7 +286,25 @@ def partition_commands(rows: Iterable[Tuple[int, int, int]], *,
         n_transfer += 1
 
     n_local = sum(len(l) for l in local)
-    m = bucket_size(max((len(l) for l in local), default=0) or 1)
+
+    # per-slab WAR spacing for the overlapped per-shard kernel drain:
+    # adjacency is a property of each drained sub-table, so the spacing
+    # re-runs here against the slab-local stacked address space
+    def _local_locate(gid: int) -> Tuple[int, int]:
+        for i in range(len(ss) - 1, -1, -1):
+            if gid >= local_base[i]:
+                return i, gid - local_base[i]
+        raise AssertionError("unreachable")
+
+    pre_spacing = sum(len(l) for l in local)
+    local = [space_war_rows(l, _local_locate, group.primary)
+             for l in local]
+    n_spacers = sum(len(l) for l in local) - pre_spacing
+    longest = max((len(l) for l in local), default=0) or 1
+    m = bucket_size(longest)
+    while m < longest:   # spacers can push a dense slab past the top
+        m *= 2           # bucket; grow by powers of two (rare, still one
+    # static shape per flush)
     local_tables = np.full((n_shards, m, 3), OP_NOP, np.int32)
     for sh, cmds in enumerate(local):
         if cmds:
@@ -186,9 +323,9 @@ def partition_commands(rows: Iterable[Tuple[int, int, int]], *,
                 send_rows[k, sh_s, j] = src_row
                 recv_tables[k, sh_d, j] = (ps, pd, dst_row)
     return ShardPlan(n_shards=n_shards, shard_sizes=ss, n_local=n_local,
-                     n_transfer=n_transfer, local_tables=local_tables,
-                     deltas=deltas, send_rows=send_rows,
-                     recv_tables=recv_tables)
+                     n_transfer=n_transfer, n_spacers=n_spacers,
+                     local_tables=local_tables, deltas=deltas,
+                     send_rows=send_rows, recv_tables=recv_tables)
 
 
 def fold_shard_plan(plan: ShardPlan) -> ShardPlan:
@@ -220,26 +357,36 @@ def fold_shard_plan(plan: ShardPlan) -> ShardPlan:
 class QueueStats:
     enqueued: int = 0
     flushes: int = 0           # explicit + boundary flushes that moved work
-    hazard_flushes: int = 0    # forced early by an ordering hazard
+    hazard_flushes: int = 0    # forced early by a RAW/WAW ordering hazard
+    war_hazards: int = 0       # WAR-on-source commands admitted (no flush)
+    spacer_rows: int = 0       # OP_NOP spacers inserted for the overlap
     launches: int = 0          # device dispatches issued for flushed tables
     max_pending: int = 0
 
 
 class CommandQueue:
     """Accumulates ``(opcode, src, dst)`` commands for a RowCloneEngine and
-    drains them through the engine's fused dispatch at flush time."""
+    drains them through the engine's fused dispatch at flush time.
+
+    One engine may own several queues — every
+    :class:`~repro.core.stream.CommandStream` wraps its own — and the
+    queue tracks BOTH pending sources and pending destinations, so the
+    engine can serialize cross-stream overlap and reason about in-flight
+    reads (e.g. staging-ring slot lifetime) without draining everything.
+    """
 
     #: pool index standing for "every primary pool" in a hazard key (plain
     #: opcodes move the block in all primary pools at once)
-    ALL_PRIMARY = -1
+    ALL_PRIMARY = ALL_PRIMARY
 
     def __init__(self, engine):
         self.engine = engine
         self.stats = QueueStats()
         self._cmds: List[Tuple[int, int, int]] = []
-        # pending destination writes: block id -> set of pool indices
-        # (ALL_PRIMARY = the block is being written in every primary pool)
+        # pending destination writes / source reads: block id -> set of
+        # pool indices (ALL_PRIMARY = the block in every primary pool)
         self._pending_dsts: Dict[int, Set[int]] = {}
+        self._pending_srcs: Dict[int, Set[int]] = {}
 
     def __len__(self) -> int:
         return len(self._cmds)
@@ -252,7 +399,9 @@ class CommandQueue:
     # ------------------------------------------------------------------
     def _hazard_keys(self, opcode: int, src: int, dst: int) -> Tuple[
             Optional[Tuple[int, int]], Tuple[int, int]]:
-        """``(pool, block)`` keys used for ordering hazards.
+        """``(pool, block)`` keys used for ordering hazards — the same
+        read/write mapping :func:`_row_rw` gives the WAR spacing pass
+        (one source of truth for what a row touches).
 
         Plain opcodes (FPM/PSM/baseline copy, zero-init) read and write the
         block in EVERY primary pool → pool key :data:`ALL_PRIMARY`.
@@ -261,40 +410,60 @@ class CommandQueue:
         exact (pool index, local block) touched — a staging→KV promotion
         of block ``d`` does not serialize against an unrelated command on
         the same numeric block id in another pool."""
-        if opcode == OP_CROSS_POOL_COPY:
-            group = self.engine.group
-            return group.locate(src), group.locate(dst)
-        if opcode == OP_ZERO_INIT:
-            return None, (self.ALL_PRIMARY, dst)
-        return (self.ALL_PRIMARY, src), (self.ALL_PRIMARY, dst)
+        reads, writes = _row_rw(opcode, src, dst, self.engine.group.locate)
+        return (reads[0] if reads else None), writes[0]
 
-    def _conflicts(self, key: Tuple[int, int]) -> bool:
+    def _overlaps(self, key: Tuple[int, int],
+                  pending: Dict[int, Set[int]]) -> bool:
+        pool, block = key
+        hit = pending.get(block)
+        if hit is None:
+            return False
+        primary = self.engine.group.primary
+        return any(_keys_clash(key, (p, block), primary) for p in hit)
+
+    def has_pending_write(self, key: Tuple[int, int]) -> bool:
         """Does ``(pool, block)`` overlap any pending destination write?
         ALL_PRIMARY expands to the primary pool set on either side; a
         staging-pool key only collides with an exact pool match."""
-        pool, block = key
-        pending = self._pending_dsts.get(block)
-        if pending is None:
-            return False
-        if pool in pending:
-            return True
-        primary = self.engine.group.primary
-        if pool == self.ALL_PRIMARY:
-            return any(p == self.ALL_PRIMARY or primary[p]
-                       for p in pending)
-        return self.ALL_PRIMARY in pending and primary[pool]
+        return self._overlaps(key, self._pending_dsts)
+
+    def has_pending_read(self, key: Tuple[int, int]) -> bool:
+        """Does ``(pool, block)`` overlap any pending SOURCE read?  The
+        source-hazard side of the tracking: a block with a pending read
+        must not be rewritten out of band (e.g. a staging-ring slot whose
+        promotion is still queued — the engine keeps such slots out of
+        the free list until this turns False)."""
+        return self._overlaps(key, self._pending_srcs)
 
     def enqueue(self, opcode: int, src: int, dst: int) -> None:
-        """Append one tagged command, auto-flushing first if it would read
-        or rewrite a pending destination (RAW/WAW within one table would
-        make gather-scatter and sequential drain diverge)."""
+        """Append one tagged command.
+
+        RAW/WAW — reading or rewriting a pending destination — auto-flush
+        first (either would make gather-scatter and the in-place drain
+        diverge).  WAR — overwriting a pending *source* — is admitted and
+        counted (``stats.war_hazards``): every drain path reads sources
+        before the later write lands, and :meth:`flush` spaces the pair
+        apart for the overlapped kernel.  Overlap with ANOTHER stream's
+        pending commands serializes that stream first (the engine's
+        cross-stream guard)."""
         skey, dkey = self._hazard_keys(opcode, src, dst)
-        if (skey is not None and self._conflicts(skey)) \
-                or self._conflicts(dkey):
+        guard = getattr(self.engine, "_cross_stream_guard", None)
+        if guard is not None:
+            guard(self, skey, dkey)
+        if (skey is not None and self.has_pending_write(skey)) \
+                or self.has_pending_write(dkey):
             self.stats.hazard_flushes += 1
             self.flush()
+        elif self.has_pending_read(dkey):
+            self.stats.war_hazards += 1
         self._cmds.append((int(opcode), int(src), int(dst)))
         self._pending_dsts.setdefault(dkey[1], set()).add(dkey[0])
+        if skey is not None:
+            self._pending_srcs.setdefault(skey[1], set()).add(skey[0])
+        note = getattr(self.engine, "_note_pending", None)
+        if note is not None:
+            note(self)      # engine tracks queues with pending work only
         self.stats.enqueued += 1
         self.stats.max_pending = max(self.stats.max_pending, len(self._cmds))
 
@@ -313,29 +482,47 @@ class CommandQueue:
     def flush(self) -> int:
         """Drain every pending command.  Returns the number of device
         launches issued (0 when the queue was empty, 1 per bucket-padded
-        chunk otherwise)."""
+        chunk otherwise).  The flushed rows are WAR-spaced
+        (:func:`space_war_rows`) before chunking, so the fused kernel's
+        overlapped drain never sees an adjacent write-after-read pair."""
         if not self._cmds:
             return 0
         cmds, self._cmds = self._cmds, []
         self._pending_dsts = {}
+        self._pending_srcs = {}
+        drained = getattr(self.engine, "_note_drained", None)
+        if drained is not None:
+            drained(self)   # empty again: leave the engine's live set
+        group = self.engine.group
+        if getattr(self.engine, "_flush_spacing", lambda: True)():
+            # single-slab drains consume the spacing directly; the
+            # mesh-partitioned path strips global NOPs and re-spaces per
+            # slab sub-table, so spacing here would only eat chunk budget
+            spaced = space_war_rows(cmds, group.locate, group.primary)
+            self.stats.spacer_rows += len(spaced) - len(cmds)
+        else:
+            spaced = cmds
         launches = 0
         top = BUCKETS[-1]
-        for lo in range(0, len(cmds), top):
-            chunk = cmds[lo:lo + top]
+        for lo in range(0, len(spaced), top):
+            chunk = spaced[lo:lo + top]
             table = np.full((bucket_size(len(chunk)), 3), OP_NOP, np.int32)
             table[:len(chunk)] = np.asarray(chunk, np.int32)
-            launches += self.engine._dispatch_table(table, len(chunk))
+            launches += self.engine._dispatch_table(table, len(chunk),
+                                                    queue=self)
         self.stats.flushes += 1
         self.stats.launches += launches
         after = getattr(self.engine, "_after_flush", None)
         if after is not None:
-            after()
+            after(self)
         return launches
 
 
 __all__ = [
     "BUCKETS",
+    "ALL_PRIMARY",
     "bucket_size",
+    "space_war_rows",
     "partition_commands",
     "fold_shard_plan",
     "ShardPlan",

@@ -16,10 +16,21 @@ MC serializes the commands.  Here:
 Dispatch is **queued and fused** (core/cmdqueue.py): classification tags
 each request with an opcode and enqueues it; at a flush boundary the whole
 table drains as ONE fused kernel launch moving every pool
-(kernels/fused_dispatch.py) — the MC command-drain analogue.  By default
-each public call flushes on return (eager, seed-compatible semantics);
-inside ``with engine.batch():`` commands accumulate and the device sees a
-single launch at exit — the attention-step / benchmark-tick boundary.
+(kernels/fused_dispatch.py) — the MC command-drain analogue, with the
+DMA wait trailing one step behind issue (the overlapped drain; the
+queue's source-hazard tracking keeps adjacent table rows disjoint).
+
+Asynchrony is a first-class surface (core/stream.py): ``engine.stream()``
+mints an ordered :class:`~repro.core.stream.CommandStream`; commands
+enqueued on it drain only at ``stream.flush()``, which returns a
+:class:`~repro.core.stream.FlushTicket` (launch accounting, drained
+command count, post-drain block state on demand).  Streams serialize
+against each other only when they touch the same ``(pool, block)`` (the
+cross-stream guard).  The seed-era surface is a thin wrapper over the
+engine's DEFAULT stream: each public call flushes on return (eager,
+seed-compatible semantics); inside ``with engine.batch():`` commands
+accumulate and the device sees a single launch at exit — the
+attention-step / benchmark-tick boundary.
 
 Tables pad to power-of-two buckets (8/32/128/512, overflow chunked), not the
 seed's fixed ``max_requests`` length.  Under a multi-device mesh the flush
@@ -56,22 +67,10 @@ from repro.core.cmdqueue import (CommandQueue, OP_BASELINE_COPY,
                                  OP_CROSS_POOL_COPY, OP_FPM_COPY, OP_PSM_COPY,
                                  OP_ZERO_INIT, partition_commands)
 from repro.core.poolspec import BlockRef, PoolGroup
+from repro.core.stream import CommandStream
 from repro.kernels import ops as kops
 from repro.kernels.fused_dispatch import notify_launch
 from repro.models.paged import pool_shard_axes, pool_shard_count
-
-#: int-based public-API forms already warned about (one warning per form
-#: per process — the shims stay one release, see ISSUE/ROADMAP)
-_WARNED_SHIMS: set = set()
-
-
-def _warn_int_shim(api: str, hint: str) -> None:
-    """Emit the one-per-process DeprecationWarning for a legacy int-based
-    calling convention (the BlockRef form is canonical)."""
-    if api in _WARNED_SHIMS:
-        return
-    _WARNED_SHIMS.add(api)
-    warnings.warn(f"{api}: {hint}", DeprecationWarning, stacklevel=3)
 
 
 @dataclasses.dataclass
@@ -89,6 +88,7 @@ class EngineStats:
     bytes_baseline: int = 0
     bytes_cross: int = 0
     bytes_avoided: int = 0      # alias + lazy zero
+    cross_stream_flushes: int = 0  # streams serialized by an overlap
     launches: int = 0           # device dispatches issued for bulk movement
 
 
@@ -103,8 +103,9 @@ class RowCloneEngine:
     offsets, so staging pools may be sized independently of their KV
     twins (a small staging *ring* instead of a full-size twin).  Public
     copy calls address blocks with :class:`~repro.core.poolspec.BlockRef`;
-    bare ints remain accepted as primary-address-space ids (and the
-    pool-name keyword form of ``memcopy_cross`` as a one-release shim).
+    bare ints remain accepted as primary-address-space ids.
+    ``memcopy_cross`` takes (BlockRef, BlockRef) pairs only — the
+    pool-name keyword shim is gone.
     """
 
     def __init__(self, pools: Dict[str, jnp.ndarray],
@@ -157,7 +158,17 @@ class RowCloneEngine:
         # group order is the table order everywhere — realign the dict
         self.pools = {name: pools[name] for name in group.names}
         self.stats = EngineStats()
-        self.queue = CommandQueue(self)
+        # every engine owns a DEFAULT CommandStream: the seed-era public
+        # calls (memcopy/flush/batch) are thin wrappers over it; callers
+        # wanting explicit asynchrony mint more with stream().  The
+        # engine tracks only queues with PENDING work (registered on
+        # enqueue, dropped when drained), so minting streams is free:
+        # no registry growth, and the cross-stream guard scans only
+        # queues that could actually conflict.
+        self._live_queues: Dict[int, CommandQueue] = {}
+        self._stream_count = 0
+        self._default_stream = CommandStream(self, "default")
+        self._cur_queue = self._default_stream.queue
         self.deferred = False
         self._warned_unshardable = False
         self._zero_blocks: Optional[Tuple[jnp.ndarray, ...]] = None
@@ -186,9 +197,71 @@ class RowCloneEngine:
                 f"slot space): {stage_cap} != {cap}"
             stage_cap = cap
         # staging slot free list + ids whose promotion is still queued
-        # (reclaimed by _after_flush once the cross-pool copy has drained)
+        # (reclaimed by _after_flush once no stream holds a pending READ
+        # of the slot — the queues' source-hazard tracking)
         self._stage_free: List[int] = list(range(stage_cap - 1, -1, -1))
         self._stage_inflight: List[int] = []
+
+    # ------------------------------------------------------------------
+    # streams
+    # ------------------------------------------------------------------
+    def _note_pending(self, queue: CommandQueue) -> None:
+        """A queue gained pending work: track it for the cross-stream
+        guard, staging-slot reclaim, and engine-wide drains (called by
+        CommandQueue.enqueue)."""
+        self._live_queues[id(queue)] = queue
+
+    def _note_drained(self, queue: CommandQueue) -> None:
+        """A queue drained to empty: drop it from the live set (called by
+        CommandQueue.flush) — drained streams cost nothing, however many
+        a caller mints."""
+        self._live_queues.pop(id(queue), None)
+
+    def stream(self, name: Optional[str] = None) -> CommandStream:
+        """Mint a new ordered :class:`CommandStream` on this engine.
+
+        Commands enqueued on it do NOT flush on return; ``stream.flush()``
+        drains them and returns a :class:`FlushTicket`.  Streams are
+        unordered against each other until they touch the same
+        ``(pool, block)`` — then the earlier stream drains first (the
+        cross-stream guard), so conflicts serialize at block granularity
+        instead of a global barrier.  Minting is cheap and streams need
+        no close(): the engine only tracks queues while they hold
+        pending commands."""
+        self._stream_count += 1
+        if name is None:
+            name = f"stream{self._stream_count}"
+        return CommandStream(self, name)
+
+    @property
+    def queue(self) -> CommandQueue:
+        """The DEFAULT stream's command queue (seed-compatible surface —
+        public engine calls enqueue here unless captured by a stream)."""
+        return self._default_stream.queue
+
+    @property
+    def default_stream(self) -> CommandStream:
+        """The engine's default :class:`CommandStream` (what ``batch()``/
+        ``flush()`` wrap)."""
+        return self._default_stream
+
+    def _cross_stream_guard(self, queue: CommandQueue,
+                            skey, dkey) -> None:
+        """Serialize streams that touch the same blocks: a command about
+        to land on ``queue`` that reads or writes another stream's pending
+        WRITE, or writes another stream's pending READ, drains that other
+        stream first.  (Reading another stream's pending read is harmless
+        — RAR.)  Flush order between unrelated streams stays undefined,
+        which is the asynchrony the API sells.  Only queues with pending
+        work are scanned (the live set)."""
+        for q in list(self._live_queues.values()):
+            if q is queue or not len(q):
+                continue
+            clash = q.has_pending_write(dkey) or q.has_pending_read(dkey) \
+                or (skey is not None and q.has_pending_write(skey))
+            if clash:
+                self.stats.cross_stream_flushes += 1
+                q.flush()
 
     # ------------------------------------------------------------------
     @property
@@ -267,26 +340,40 @@ class RowCloneEngine:
     # flush control
     # ------------------------------------------------------------------
     def flush(self) -> int:
-        """Drain the command queue.  Returns device launches issued."""
-        return self.queue.flush()
+        """Drain the DEFAULT stream's queue (seed-compatible surface).
+        Returns device launches issued; other streams drain through their
+        own ``flush()`` and return :class:`FlushTicket` receipts.  Always
+        targets the default queue — even inside a ``stream.capture()``
+        region, where captured commands stay queued until that stream's
+        explicit flush (calling this mid-capture must not split the
+        capturing stream's launch)."""
+        return self._default_stream.queue.flush()
+
+    def _flush_streams(self) -> None:
+        """Drain EVERY queue with pending commands (the engine-wide
+        barrier some internal paths need, e.g. staging-slot reclaim)."""
+        for q in list(self._live_queues.values()):
+            q.flush()
 
     def _autoflush(self) -> None:
         if not self.deferred:
-            self.queue.flush()
+            self._cur_queue.flush()
 
     @contextlib.contextmanager
     def batch(self) -> Iterator[CommandQueue]:
         """Defer flushing: commands enqueued inside the block drain as one
         fused launch at exit (the attention-step flush boundary).  Pool
-        arrays are STALE inside the block — read them only after exit."""
+        arrays are STALE inside the block — read them only after exit.
+        Composes with stream capture: inside ``stream.capture()`` the
+        commands land on that stream and its flush stays explicit."""
         prev = self.deferred
         self.deferred = True
         try:
-            yield self.queue
+            yield self._cur_queue
         finally:
             self.deferred = prev
             if not self.deferred:
-                self.queue.flush()
+                self._cur_queue.flush()
 
     # ------------------------------------------------------------------
     # memcopy
@@ -356,13 +443,11 @@ class RowCloneEngine:
                 counts["baseline"] += 1
                 self.stats.baseline_copies += 1
                 self.stats.bytes_baseline += bb
-            self.queue.enqueue(op, s, d)
+            self._cur_queue.enqueue(op, s, d)
         self._autoflush()
         return counts
 
-    def memcopy_cross(self, pairs: Sequence[Tuple[object, object]],
-                      src_pool: Optional[str] = None,
-                      dst_pool: Optional[str] = None) -> int:
+    def memcopy_cross(self, pairs: Sequence[Tuple[object, object]]) -> int:
         """Pool-to-pool block copy (e.g. prefill staging pool → serving
         pool) through the same queue: each pair becomes one
         ``CROSS_POOL_COPY`` command carrying global ``base[pool] + block``
@@ -371,38 +456,21 @@ class RowCloneEngine:
         sizes (a staging ring vs a full KV pool) coexist in one table.
         Source and destination pools must share block shape and dtype.
 
-        Canonical form: ``pairs`` of ``(BlockRef, BlockRef)`` — each pair
-        names its own pools, so one call may mix pool pairs.  The legacy
-        form (int pairs + ``src_pool``/``dst_pool`` keywords) is a
-        one-release shim and emits a DeprecationWarning.
+        ``pairs`` are ``(BlockRef, BlockRef)`` — each pair names its own
+        pools, so one call may mix pool pairs.  (The pre-stream
+        ``(pairs, src_pool, dst_pool)`` int form is gone.)
 
         Staging pools sit outside the allocator's metadata: a staging
         *source* always holds real bytes (the prefill wrote them), so the
         lazy-zero materialization below is skipped; a staging *destination*
         is an engine-managed slot, so no allocator block is marked
         written."""
-        if src_pool is not None or dst_pool is not None:
-            if src_pool is None or dst_pool is None:
-                raise TypeError(
-                    "memcopy_cross legacy form needs BOTH src_pool and "
-                    f"dst_pool (got src_pool={src_pool!r}, "
-                    f"dst_pool={dst_pool!r}); pass (BlockRef, BlockRef) "
-                    "pairs instead")
-            _warn_int_shim(
-                "RowCloneEngine.memcopy_cross(pairs, src_pool, dst_pool)",
-                "pass (BlockRef, BlockRef) pairs instead; the pool-name "
-                "keywords are a one-release shim")
-            pairs = [(BlockRef(src_pool, int(s)), BlockRef(dst_pool, int(d)))
-                     for s, d in pairs]
-        else:
-            pairs = [(s if isinstance(s, BlockRef) else None,
-                      d if isinstance(d, BlockRef) else None)
-                     for s, d in pairs]
-            if any(s is None or d is None for s, d in pairs):
-                raise TypeError(
-                    "memcopy_cross pairs must be (BlockRef, BlockRef) "
-                    "(or pass src_pool/dst_pool with int pairs — "
-                    "deprecated)")
+        pairs = [(s if isinstance(s, BlockRef) else None,
+                  d if isinstance(d, BlockRef) else None)
+                 for s, d in pairs]
+        if any(s is None or d is None for s, d in pairs):
+            raise TypeError(
+                "memcopy_cross pairs must be (BlockRef, BlockRef)")
         # validate every ref up front: the lazy-zero scan below indexes
         # allocator metadata, and a bad block id must fail cleanly before
         # any command or materialization side effect
@@ -418,8 +486,8 @@ class RowCloneEngine:
         if lazy_srcs:
             self.materialize_zeros(lazy_srcs)
         for s, d in pairs:
-            self.queue.enqueue(OP_CROSS_POOL_COPY, self.group.gid(s),
-                               self.group.gid(d))
+            self._cur_queue.enqueue(OP_CROSS_POOL_COPY, self.group.gid(s),
+                                    self.group.gid(d))
             self.stats.cross_pool_copies += 1
             self.stats.bytes_cross += self._pool_block_bytes(d.pool)
             if d.pool not in self.staging:
@@ -439,14 +507,15 @@ class RowCloneEngine:
 
         Slot ids index the staging pools' OWN address space
         (``stage_capacity`` slots — a staging ring may be far smaller than
-        the KV pools).  Slots whose promotion is still queued are not
-        reused (the pending ``CROSS_POOL_COPY`` must read the bytes
-        currently parked there); when the free list runs short the engine
-        drains the queue first, which reclaims every in-flight slot."""
+        the KV pools).  Slots with a pending READ on any stream are not
+        reused (a queued ``CROSS_POOL_COPY`` promotion must see the bytes
+        currently parked there — the queues' source-hazard tracking is
+        the ground truth); when the free list runs short the engine
+        drains every stream first, which reclaims the in-flight slots."""
         if not self.staging:
             raise RuntimeError("engine has no staging pools")
         if len(self._stage_free) < n:
-            self.flush()           # drains promotions -> reclaims inflight
+            self._flush_streams()  # drains promotions -> reclaims inflight
         if len(self._stage_free) < n:
             raise RuntimeError(
                 f"staging pool exhausted ({n} slots requested, "
@@ -483,12 +552,26 @@ class RowCloneEngine:
             self._stage_inflight.extend(s for s, _ in pairs)
         return len(pairs)
 
-    def _after_flush(self) -> None:
-        """CommandQueue callback: queued promotions have drained, so their
-        staging slots hold dead bytes and may be reused."""
-        if self._stage_inflight:
-            self._stage_free.extend(self._stage_inflight)
-            self._stage_inflight = []
+    def _after_flush(self, queue: Optional[CommandQueue] = None) -> None:
+        """CommandQueue callback after any stream drains: a staging slot
+        is reusable exactly when NO stream still holds a pending read of
+        it (the source-hazard tracking) — promotions that drained free
+        their slots, promotions still queued on another stream keep
+        theirs."""
+        if not self._stage_inflight:
+            return
+        sidx = [self.group.index(name) for name in self.staging]
+        queues = list(self._live_queues.values())
+        still: List[int] = []
+        freed: List[int] = []
+        for slot in self._stage_inflight:
+            if any(q.has_pending_read((p, slot))
+                   for q in queues for p in sidx):
+                still.append(slot)
+            else:
+                freed.append(slot)
+        self._stage_free.extend(freed)
+        self._stage_inflight = still
 
     # ------------------------------------------------------------------
     # meminit
@@ -515,21 +598,45 @@ class RowCloneEngine:
         if not ids:
             return
         self.stats.zero_materialized += len(ids)
-        self.queue.enqueue_zero(ids)
+        self._cur_queue.enqueue_zero(ids)
         self.alloc.mark_written(ids)  # physically zero: ordinary data now
         self._autoflush()
 
     # ------------------------------------------------------------------
     # dispatch — called by CommandQueue.flush with a bucket-padded table
     # ------------------------------------------------------------------
-    def _dispatch_table(self, table: np.ndarray, n_cmds: int) -> int:
-        """Execute one flushed command table.  Returns launches issued."""
+    def _flush_spacing(self) -> bool:
+        """Should CommandQueue.flush WAR-space the global table?  Yes for
+        every single-device drain (the fused kernel consumes the spacing;
+        the legacy fan-out ignores NOP rows, keeping A/B stats aligned).
+        No when the flush will be mesh-partitioned: _dispatch_sharded
+        strips global NOPs and partition_commands re-spaces each slab
+        sub-table, so global spacers would only eat 512-row chunk budget
+        (risking an extra collective launch) for nothing."""
+        return not (self.use_fused and self._multi_device()
+                    and pool_shard_count(self.mesh) > 1)
+
+    def _pool_replicated(self) -> Tuple[bool, ...]:
+        """Per-pool replication vector from the ``PoolSpec.sharding``
+        hints: ``()`` marks a pool held whole on every device (a small
+        staging ring) — its block axis never partitions in the sharded
+        drain."""
+        return tuple(s.sharding == () for s in self.group)
+
+    def _dispatch_table(self, table: np.ndarray, n_cmds: int,
+                        queue: Optional[CommandQueue] = None) -> int:
+        """Execute one flushed command table.  Returns launches issued.
+        ``queue`` (the flushing CommandQueue, when called from a flush)
+        receives accounting the dispatch path itself produces — e.g. the
+        per-slab WAR spacers the mesh partitioner inserts."""
         if not int((np.asarray(table)[:, 0] >= 0).sum()):
             return 0        # all-NOP/empty table: no launch on ANY path
         if self.use_fused:
             n_shards = pool_shard_count(self.mesh)
             if self._multi_device() and n_shards > 1:
-                ragged = [s.name for s in self.group if s.nblk % n_shards]
+                replicated = self._pool_replicated()
+                ragged = [s.name for i, s in enumerate(self.group)
+                          if not replicated[i] and s.nblk % n_shards]
                 if ragged:
                     # can't partition: slabs would be ragged.  Degrade to
                     # the fan-out, but loudly — the caller loses the
@@ -544,7 +651,14 @@ class RowCloneEngine:
                             "shards; mesh flushes fall back to the "
                             "multi-launch legacy fan-out")
                     return self._dispatch_legacy(table)
-                return self._dispatch_sharded(table, n_shards)
+                if any(replicated) and self._writes_replicated(table,
+                                                               replicated):
+                    # a sharded→replicated cross write needs a broadcast
+                    # hop the collective drain doesn't model; GSPMD's
+                    # global gather/scatter handles it on the fan-out
+                    return self._dispatch_legacy(table)
+                return self._dispatch_sharded(table, n_shards, replicated,
+                                              queue)
             if not self._multi_device():
                 pools = tuple(self.pools.values())
                 new = kops.fused_dispatch(pools, self._get_zero_blocks(),
@@ -557,17 +671,40 @@ class RowCloneEngine:
                 return 1
         return self._dispatch_legacy(table)
 
-    def _dispatch_sharded(self, table: np.ndarray, n_shards: int) -> int:
+    def _writes_replicated(self, table: np.ndarray,
+                           replicated: Tuple[bool, ...]) -> bool:
+        """Does any cross-pool row write a replicated pool from a SHARDED
+        source?  (Replicated→replicated writes drain collectively — every
+        shard applies them to its replica.)"""
+        for op, s, d in table:
+            if int(op) != OP_CROSS_POOL_COPY:
+                continue
+            ps, _ = self.group.locate(int(s))
+            pd, _ = self.group.locate(int(d))
+            if replicated[pd] and not replicated[ps]:
+                return True
+        return False
+
+    def _dispatch_sharded(self, table: np.ndarray, n_shards: int,
+                          replicated: Tuple[bool, ...],
+                          queue: Optional[CommandQueue] = None) -> int:
         """One collective launch for the whole table: per-slab sub-tables
-        (slab-local ids, each pool partitioned by its OWN shard size)
-        drain inside shard_map, cross-slab commands ride the same launch
-        as a ppermute send/recv plan."""
+        (slab-local ids, each pool partitioned by its OWN shard size;
+        replicated pools ride whole on every shard) drain inside
+        shard_map, cross-slab commands ride the same launch as a ppermute
+        send/recv plan.  The partitioner's per-slab WAR spacers are
+        credited to the flushing ``queue``'s stats (global spacing is
+        skipped on this path — _flush_spacing)."""
         rows = [(int(op), int(s), int(d)) for op, s, d in table if op >= 0]
-        plan = partition_commands(rows, n_shards=n_shards, group=self.group)
+        plan = partition_commands(rows, n_shards=n_shards, group=self.group,
+                                  replicated=replicated)
+        if queue is not None:
+            queue.stats.spacer_rows += plan.n_spacers
         new = kops.fused_dispatch_sharded(
             tuple(self.pools.values()), self._get_zero_blocks(), plan,
             mesh=self.mesh, pool_axes=pool_shard_axes(self.mesh),
-            block_axis=self.block_axis, primary=self.group.primary)
+            block_axis=self.block_axis, primary=self.group.primary,
+            replicated=replicated)
         for name, arr in zip(self.pools, new):
             self.pools[name] = arr
         self.stats.launches += 1

@@ -1,0 +1,217 @@
+"""Asynchronous command streams — ``CommandStream`` and ``FlushTicket``.
+
+RowClone's memory controller does not stop the world at every bulk
+operation: copy/init commands queue behind ongoing requests and drain
+while the CPU keeps issuing (paper §2.3; LISA pipelines inter-subarray
+hops the same way).  The engine API used to hide that asynchrony —
+``batch()``/``flush()`` was an implicit global barrier on one anonymous
+queue.  This module names it:
+
+* :class:`CommandStream` — an **ordered** stream of bulk-movement
+  commands on one engine.  ``engine.stream()`` mints one; callers enqueue
+  ``memcopy``/``meminit``/``materialize_zeros``/``memcopy_cross``/
+  ``promote_staged`` onto it (no implicit flush on return — asynchrony is
+  explicit), or :meth:`CommandStream.capture` an arbitrary code region so
+  every engine call inside lands on the stream (how the serving engine
+  routes the paged cache's CoW splits into its round stream).
+* :class:`FlushTicket` — the receipt ``stream.flush()`` returns: launch
+  accounting, drained command count, hazard counters, and post-drain
+  block state **on demand** (a zero-copy reference to the post-drain
+  pool arrays; nothing is fetched until asked, and the bytes stay
+  readable until a LATER flush donates the buffers — ``expired`` /
+  a descriptive error mark that boundary, metadata never expires).
+
+Ordering model: commands on ONE stream execute in enqueue order, with the
+CommandQueue's hazard matrix (RAW/WAW auto-flush, WAR admitted + spaced
+for the overlapped kernel drain — core/cmdqueue.py).  Streams are
+unordered against each other until they touch: enqueueing a command that
+overlaps ANOTHER stream's pending reads or writes first drains that
+stream (the engine's cross-stream guard), so inter-stream conflicts
+serialize at (pool, block) granularity instead of a global barrier.
+
+The engine's seed-era surface survives as a compatibility layer: every
+``RowCloneEngine`` owns a *default* stream; ``engine.memcopy(...)`` etc.
+enqueue there (eager flush-on-return unless inside ``engine.batch()``),
+and ``engine.flush()`` drains it — thin wrappers, same semantics.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Dict, Iterator, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.cmdqueue import CommandQueue
+from repro.core.poolspec import BlockRef
+
+
+@dataclasses.dataclass(frozen=True)
+class FlushTicket:
+    """Receipt for one :meth:`CommandStream.flush`.
+
+    Holds the launch accounting of the drain and a zero-copy reference to
+    the post-drain pool arrays; block contents transfer from device only
+    when :meth:`block_state` asks.  A ticket with ``commands == 0``
+    records an empty flush (no device work).
+
+    **Validity window**: the engine's dispatch paths DONATE the pool
+    buffers (that is what keeps a flush snapshot-free), so a ticket's
+    block state stays readable only until a later flush — or the serving
+    decode step — consumes those buffers.  Metadata (``launches``,
+    ``commands``, counters) never expires; :attr:`expired` reports
+    whether the bytes are still resident, and an expired
+    :meth:`block_state`/:meth:`wait` raises a descriptive error instead
+    of surfacing jax's deleted-array failure."""
+
+    stream: str                 #: name of the stream that flushed
+    seq: int                    #: flush sequence number on that stream
+    commands: int               #: command rows drained by this flush
+    launches: int               #: device launches the drain issued
+    war_hazards: int            #: cumulative WAR commands admitted so far
+    spacer_rows: int            #: cumulative overlap spacers inserted
+    _engine: Any = dataclasses.field(repr=False)
+    _pools: Dict[str, Any] = dataclasses.field(repr=False)
+
+    @property
+    def moved(self) -> bool:
+        """Did this flush issue any device work?"""
+        return self.launches > 0
+
+    @property
+    def expired(self) -> bool:
+        """True once a later flush (or decode step) has donated the
+        ticket's pool buffers — block state is no longer readable."""
+        return any(getattr(p, "is_deleted", lambda: False)()
+                   for p in self._pools.values())
+
+    def _check_live(self) -> None:
+        if self.expired:
+            raise RuntimeError(
+                f"FlushTicket(stream={self.stream!r}, seq={self.seq}) "
+                "expired: a later flush donated the pool buffers it "
+                "references — read block_state()/wait() before the next "
+                "flush (ticket metadata never expires)")
+
+    def wait(self) -> "FlushTicket":
+        """Block until every post-drain pool array is resident (the
+        explicit synchronization point callers opt into — jax dispatch is
+        asynchronous underneath)."""
+        import jax
+        self._check_live()
+        jax.block_until_ready(list(self._pools.values()))
+        return self
+
+    def block_state(self, ref: Union[BlockRef, int]
+                    ) -> Union[np.ndarray, Dict[str, np.ndarray]]:
+        """Post-drain contents of one block, fetched on demand (valid
+        until a later flush donates the buffers — see the class
+        docstring).
+
+        A :class:`BlockRef` returns that pool's block; a bare int (a
+        primary-address-space id) returns ``{pool name: block}`` over
+        every primary pool — the shape a plain opcode moves."""
+        self._check_live()
+        ba = self._engine.block_axis
+        if isinstance(ref, BlockRef):
+            pool = self._pools[ref.pool]
+            b = int(ref.block)
+            return np.asarray(pool[b] if ba == 0 else pool[:, b])
+        b = int(ref)
+        return {name: np.asarray(self._pools[name][b] if ba == 0
+                                 else self._pools[name][:, b])
+                for name in self._engine.primary_names}
+
+
+class CommandStream:
+    """An ordered bulk-movement command stream on one RowCloneEngine.
+
+    Mint with ``engine.stream(name)``.  Enqueue calls mirror the engine's
+    public API but do NOT flush on return — the device sees the stream's
+    work when :meth:`flush` is called (returning a :class:`FlushTicket`),
+    when a RAW/WAW hazard inside the stream forces an early drain, or
+    when another stream's conflicting enqueue serializes this one.
+    """
+
+    def __init__(self, engine, name: str,
+                 queue: Optional[CommandQueue] = None):
+        self.engine = engine
+        self.name = name
+        self.queue = queue if queue is not None else CommandQueue(engine)
+        self._seq = 0
+
+    def __len__(self) -> int:
+        return len(self.queue)
+
+    def __repr__(self) -> str:
+        return (f"CommandStream({self.name!r}, pending={len(self.queue)}, "
+                f"flushed={self._seq})")
+
+    @property
+    def pending(self):
+        """Copy of the not-yet-flushed ``(opcode, src, dst)`` rows."""
+        return self.queue.pending
+
+    # ------------------------------------------------------------------
+    @contextlib.contextmanager
+    def capture(self) -> Iterator["CommandStream"]:
+        """Route every engine enqueue inside the block onto THIS stream,
+        deferred (no flush-on-return).  The serving engine wraps a whole
+        round's cache work in one capture so promotions + CoW splits +
+        tail inits accumulate on its round stream and drain as one
+        launch at ``flush()``."""
+        eng = self.engine
+        prev_q, prev_d = eng._cur_queue, eng.deferred
+        eng._cur_queue, eng.deferred = self.queue, True
+        try:
+            yield self
+        finally:
+            eng._cur_queue, eng.deferred = prev_q, prev_d
+
+    # ------------------------------------------------------------------
+    # enqueue surface — the engine's public verbs, routed onto this stream
+    # ------------------------------------------------------------------
+    def memcopy(self, pairs: Sequence[Tuple[object, object]],
+                dst_is_fresh: bool = False):
+        """Enqueue block copies (``RowCloneEngine.memcopy`` semantics)."""
+        with self.capture():
+            return self.engine.memcopy(pairs, dst_is_fresh=dst_is_fresh)
+
+    def memcopy_cross(self, pairs: Sequence[Tuple[BlockRef, BlockRef]]):
+        """Enqueue pool-to-pool copies (``memcopy_cross`` semantics)."""
+        with self.capture():
+            return self.engine.memcopy_cross(pairs)
+
+    def meminit(self, ids: Sequence[object], lazy: Optional[bool] = None):
+        """Enqueue zero-inits (``RowCloneEngine.meminit`` semantics —
+        with ZI this is metadata-only and enqueues nothing)."""
+        with self.capture():
+            return self.engine.meminit(ids, lazy=lazy)
+
+    def materialize_zeros(self, ids: Sequence[object]):
+        """Enqueue BuZ zero-row broadcasts (``materialize_zeros``)."""
+        with self.capture():
+            return self.engine.materialize_zeros(ids)
+
+    def promote_staged(self, pairs: Sequence[Tuple[int, object]]):
+        """Enqueue staging→primary promotions (``promote_staged``)."""
+        with self.capture():
+            return self.engine.promote_staged(pairs)
+
+    # ------------------------------------------------------------------
+    def flush(self) -> FlushTicket:
+        """Drain the stream's pending commands and return the
+        :class:`FlushTicket` receipt (commands drained, launches issued,
+        post-drain block state on demand)."""
+        n = len(self.queue)
+        launches = self.queue.flush()
+        ticket = FlushTicket(
+            stream=self.name, seq=self._seq, commands=n, launches=launches,
+            war_hazards=self.queue.stats.war_hazards,
+            spacer_rows=self.queue.stats.spacer_rows,
+            _engine=self.engine, _pools=dict(self.engine.pools))
+        self._seq += 1
+        return ticket
+
+
+__all__ = ["CommandStream", "FlushTicket"]

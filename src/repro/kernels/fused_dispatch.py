@@ -7,12 +7,17 @@ per pool (up to 8 launches for one mixed request batch).  This kernel is the
 TPU analogue of the MC's command queue drain: **one** ``pallas_call`` whose
 scalar-prefetched SMEM table is ``(m, 3)`` int32 ``[opcode, src, dst]`` rows;
 the grid body switches on the opcode and issues the corresponding HBM→HBM
-``make_async_copy`` (copies) or zero-row broadcast DMA (init), reusing the
-alternating-semaphore structure of the single-mechanism kernels it
-replaces (the drain itself is serial — each DMA completes before the
-next; see the note in the kernel body).  Multi-pool engines (K and V
-pages of one KV block) pass every pool to the same launch; each grid step
-moves the block in all of them.
+``make_async_copy`` (copies) or zero-row broadcast DMA (init) on
+alternating semaphore slots.  The drain is **overlapped**: each step
+starts its DMAs and the wait trails one step behind (the previous step's
+descriptors are reconstructed and waited after the current step issues),
+so two adjacent commands' DMAs pipeline — the MC keeping its command bus
+busy while a copy completes.  Safety is adjacency-local and guaranteed by
+the CommandQueue's source-hazard tracking: flushed tables never carry
+RAW/WAW pairs at all, and WAR pairs (a row overwriting an earlier row's
+source) are kept non-adjacent by spacer rows (``cmdqueue.space_war_rows``).
+Multi-pool engines (K and V pages of one KV block) pass every pool to the
+same launch; each grid step moves the block in all of them.
 
 Opcodes (also the ``CommandQueue`` tags, core/cmdqueue.py):
 
@@ -122,14 +127,28 @@ def notify_launch(n_commands: int, n_pools: int, mechanism: str) -> None:
 # ---------------------------------------------------------------------------
 
 def _make_kernel(n_pools: int, block_axis: int, sizes: Tuple[int, ...],
-                 primary: Tuple[bool, ...]):
+                 primary: Tuple[bool, ...], overlap: bool):
     """Build the grid body for ``n_pools`` pools with per-pool block counts
     ``sizes`` and role vector ``primary``.  Plain opcodes (FPM/PSM/baseline
     copy, zero-init) move the block in every primary pool; *staging* pools
     (``primary[p] == False``) are reachable only through
     ``OP_CROSS_POOL_COPY`` global ids — bulk movement never touches staged
     bytes it wasn't asked to move.  Cross-pool ids decode against the
-    prefix-sum ``bases`` of ``sizes`` (the PoolGroup address space)."""
+    prefix-sum ``bases`` of ``sizes`` (the PoolGroup address space).
+
+    ``overlap=True`` is the OVERLAPPED drain: each step starts its DMAs on
+    the parity semaphore slot and the *wait* trails one step behind — the
+    previous step's copies are reconstructed (same src/dst/semaphore, the
+    standard deferred-wait idiom) and waited only after the current step
+    has issued, so up to two steps' DMAs are in flight at once.  The
+    safety contract is adjacency-local: consecutive rows must touch
+    disjoint blocks.  RAW/WAW never co-exist in one flushed table (the
+    CommandQueue guards), and WAR pairs — a row overwriting an earlier
+    row's *source* — are kept non-adjacent by the queue's spacer rows
+    (cmdqueue.space_war_rows): at the spacer step nothing issues but the
+    trailing wait still fires, so the in-flight read completes before the
+    write starts.  ``overlap=False`` keeps the serial per-step
+    start-then-wait drain (A/B and debugging)."""
     bases = []
     run = 0
     for n in sizes:
@@ -139,113 +158,142 @@ def _make_kernel(n_pools: int, block_axis: int, sizes: Tuple[int, ...],
     def kernel(cmds_ref, *refs):
         zeros = refs[:n_pools]
         # refs[n:2n] are the aliased (donated) pool inputs — never touched;
-        # both reads and writes go through ``outs`` (in place).  The drain
-        # is serial and the CommandQueue excludes read-after-write and
-        # write-after-write within a table, so in-place source reads equal
-        # pre-flush state reads — and no snapshot copy of the pools is
-        # ever materialized.
+        # both reads and writes go through ``outs`` (in place).  The
+        # CommandQueue excludes read-after-write and write-after-write
+        # within a table, so in-place source reads equal pre-flush state
+        # reads — and no snapshot copy of the pools is ever materialized.
         outs = refs[2 * n_pools:3 * n_pools]
-        sems = refs[3 * n_pools:3 * n_pools + 2]
+        sem = refs[3 * n_pools]          # DMA semaphore pair, shape (2,)
         reads = outs
 
         i = pl.program_id(0)
-        op = cmds_ref[i, 0]
-        s = cmds_ref[i, 1]
-        d = cmds_ref[i, 2]
         if block_axis == 1:
             l = pl.program_id(1)
-            step = i * pl.num_programs(1) + l
+            L = pl.num_programs(1)
+            step = i * L + l
+            n_steps = pl.num_programs(0) * L
         else:
             l = None
+            L = 1
             step = i
+            n_steps = pl.num_programs(0)
 
-        def blk(ref, b):
-            return ref.at[l, b] if block_axis == 1 else ref.at[b]
+        def blk(ref, b, lay):
+            return ref.at[lay, b] if block_axis == 1 else ref.at[b]
 
-        def issue(src, dst, sem):
-            cp = pltpu.make_async_copy(src, dst, sem)
-            cp.start()
-            cp.wait()
+        def visit(ci, lay, slot, act):
+            """Apply ``act`` (start / wait / both) to every DMA descriptor
+            of command ``ci`` at layer ``lay``, tracked by semaphore slot
+            ``slot``.  Reconstructing the descriptors from the SMEM table
+            makes the deferred wait possible: the waiting step rebuilds
+            the exact copies the issuing step started."""
+            op = cmds_ref[ci, 0]
+            s = cmds_ref[ci, 1]
+            d = cmds_ref[ci, 2]
+            sm = sem.at[slot]
 
-        def dispatch(sem):
-            @pl.when((op == OP_FPM_COPY) | (op == OP_PSM_COPY) |
-                     (op == OP_BASELINE_COPY))
+            @pl.when((op >= 0) & (d >= 0))
             def _():
-                for p in range(n_pools):
-                    if primary[p]:
-                        issue(blk(reads[p], s), blk(outs[p], d), sem)
+                @pl.when((op == OP_FPM_COPY) | (op == OP_PSM_COPY) |
+                         (op == OP_BASELINE_COPY))
+                def _():
+                    for p in range(n_pools):
+                        if primary[p]:
+                            act(pltpu.make_async_copy(
+                                blk(reads[p], s, lay), blk(outs[p], d, lay),
+                                sm))
 
-            @pl.when(op == OP_ZERO_INIT)
-            def _():
-                for p in range(n_pools):
-                    if primary[p]:
-                        issue(zeros[p].at[0], blk(outs[p], d), sem)
+                @pl.when(op == OP_ZERO_INIT)
+                def _():
+                    for p in range(n_pools):
+                        if primary[p]:
+                            act(pltpu.make_async_copy(
+                                zeros[p].at[0], blk(outs[p], d, lay), sm))
 
-            @pl.when(op == OP_CROSS_POOL_COPY)
-            def _():
-                for ps in range(n_pools):
-                    for pd in range(n_pools):
-                        @pl.when((s >= bases[ps])
-                                 & (s < bases[ps] + sizes[ps])
-                                 & (d >= bases[pd])
-                                 & (d < bases[pd] + sizes[pd]))
-                        def _(ps=ps, pd=pd):
-                            issue(blk(reads[ps], s - bases[ps]),
-                                  blk(outs[pd], d - bases[pd]), sem)
+                @pl.when(op == OP_CROSS_POOL_COPY)
+                def _():
+                    for ps in range(n_pools):
+                        for pd in range(n_pools):
+                            @pl.when((s >= bases[ps])
+                                     & (s < bases[ps] + sizes[ps])
+                                     & (d >= bases[pd])
+                                     & (d < bases[pd] + sizes[pd]))
+                            def _(ps=ps, pd=pd):
+                                act(pltpu.make_async_copy(
+                                    blk(reads[ps], s - bases[ps], lay),
+                                    blk(outs[pd], d - bases[pd], lay), sm))
 
-        # Semaphores alternate by grid-step parity, mirroring the seed
-        # per-mechanism kernels.  NOTE: with start() immediately followed
-        # by wait() the drain is fully serial — the parity split is the
-        # slot structure for a future overlapped drain (wait one step
-        # behind), which would also need source-hazard tracking in the
-        # CommandQueue (it guards pending *destinations* only).
-        @pl.when((op >= 0) & (d >= 0))
+        if not overlap:
+            # serial drain: per-step start+wait back to back (seed shape)
+            visit(i, l, step % 2, lambda cp: (cp.start(), cp.wait()))
+            return
+
+        # Overlapped drain — issue now, wait one step behind:
+        #   step k   : start(k) on sem[k%2]; wait(k-1) on sem[(k-1)%2]
+        #   last step: additionally wait(last)
+        # Slot k%2 is reused by step k+2, which runs only after step k+1
+        # waited step k — so two slots bound the in-flight window to the
+        # adjacent pair the spacing contract protects.
+        visit(i, l, step % 2, lambda cp: cp.start())
+        if block_axis == 1:
+            prev_i = (step - 1) // L
+            prev_l = (step - 1) % L
+        else:
+            prev_i, prev_l = i - 1, None
+
+        @pl.when(step > 0)
         def _():
-            @pl.when(step % 2 == 0)
-            def _():
-                dispatch(sems[0])
+            visit(prev_i, prev_l, (step - 1) % 2, lambda cp: cp.wait())
 
-            @pl.when(step % 2 == 1)
-            def _():
-                dispatch(sems[1])
+        @pl.when(step == n_steps - 1)
+        def _():
+            visit(i, l, step % 2, lambda cp: cp.wait())
 
     return kernel
 
 
-def _as_primary(primary: Optional[Tuple[bool, ...]], n_pools: int,
-                n_primary: Optional[int] = None) -> Tuple[bool, ...]:
-    """Normalize the role arguments: an explicit ``primary`` tuple wins;
-    else the first ``n_primary`` pools are primary (None = all) — the
-    pre-PoolGroup calling convention, kept as a shim."""
-    if primary is not None:
-        assert len(primary) == n_pools, (primary, n_pools)
-        return tuple(bool(p) for p in primary)
-    n_primary = n_pools if n_primary is None else n_primary
-    return tuple(p < n_primary for p in range(n_pools))
+def _as_primary(primary: Optional[Tuple[bool, ...]],
+                n_pools: int) -> Tuple[bool, ...]:
+    """Normalize the per-pool role vector: ``None`` means every pool is
+    primary (single-address-space engines); an explicit tuple is validated
+    against the pool count.  (The pre-PoolGroup ``n_primary`` int shim is
+    gone — callers pass the role vector.)"""
+    if primary is None:
+        return tuple([True] * n_pools)
+    assert len(primary) == n_pools, (primary, n_pools)
+    return tuple(bool(p) for p in primary)
 
 
 def _fused_dispatch_call(cmds, zero_blocks, pools, *, block_axis: int,
                          interpret: bool,
-                         primary: Optional[Tuple[bool, ...]] = None):
+                         primary: Optional[Tuple[bool, ...]] = None,
+                         overlap: bool = True):
     """The raw pallas_call — shared by the single-slab jit entry and the
     per-shard body of the sharded entry (already inside a jit there).
     Per-pool block counts (and the global-id base offsets) come from the
     pool shapes, so the call works unchanged on full pools and on
-    per-shard slabs."""
+    per-shard slabs.
+
+    ``overlap``: overlapped DMA drain (wait trails one step behind issue).
+    Tables must then keep adjacent rows disjoint — tables produced by
+    ``CommandQueue.flush`` / ``partition_commands`` are WAR-spaced; direct
+    callers handing in raw tables with adjacent write-after-read pairs
+    must pass ``overlap=False``."""
     n_pools = len(pools)
     sizes = tuple(int(p.shape[block_axis]) for p in pools)
     primary = _as_primary(primary, n_pools)
     grid = ((cmds.shape[0],) if block_axis == 0
             else (cmds.shape[0], pools[0].shape[0]))
     return pl.pallas_call(
-        _make_kernel(n_pools, block_axis, sizes, primary),
+        _make_kernel(n_pools, block_axis, sizes, primary, overlap),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
             in_specs=[pl.BlockSpec(memory_space=pl.ANY)] * (2 * n_pools),
             out_specs=[pl.BlockSpec(memory_space=pl.ANY)] * n_pools,
-            scratch_shapes=[pltpu.SemaphoreType.DMA,
-                            pltpu.SemaphoreType.DMA],
+            # one DMA semaphore per in-flight slot: the overlapped drain
+            # alternates parity, the serial drain just alternates
+            scratch_shapes=[pltpu.SemaphoreType.DMA((2,))],
         ),
         out_shape=[jax.ShapeDtypeStruct(p.shape, p.dtype) for p in pools],
         # operand order: cmds, zeros (n), donated pools (n); pools are
@@ -257,20 +305,22 @@ def _fused_dispatch_call(cmds, zero_blocks, pools, *, block_axis: int,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("block_axis", "interpret", "primary"),
+                   static_argnames=("block_axis", "interpret", "primary",
+                                    "overlap"),
                    donate_argnums=(2,))
 def _fused_dispatch_jit(cmds, zero_blocks, pools, *, block_axis: int,
                         interpret: bool,
-                        primary: Optional[Tuple[bool, ...]] = None):
+                        primary: Optional[Tuple[bool, ...]] = None,
+                        overlap: bool = True):
     return _fused_dispatch_call(cmds, zero_blocks, pools,
                                 block_axis=block_axis, interpret=interpret,
-                                primary=primary)
+                                primary=primary, overlap=overlap)
 
 
 def fused_dispatch_pallas(pools: Sequence, zero_blocks: Sequence, cmds, *,
                           block_axis: int = 0, interpret: bool = False,
                           primary: Optional[Tuple[bool, ...]] = None,
-                          n_primary: Optional[int] = None) -> Tuple:
+                          overlap: bool = True) -> Tuple:
     """Execute one flushed command table over every pool in ONE launch.
 
     pools:       sequence of (nblk_p, ...) or (L, nblk_p, ...) arrays
@@ -280,13 +330,15 @@ def fused_dispatch_pallas(pools: Sequence, zero_blocks: Sequence, cmds, *,
     cmds:        (m, 3) int32 [opcode, src, dst]; OP_NOP/-1 rows are padding
     primary:     per-pool role vector (True = plain opcodes move the block
                  there; every primary pool shares one block count).  None =
-                 every pool is primary.  ``n_primary`` is the one-release
-                 int shim: the first n pools are primary.
+                 every pool is primary.
+    overlap:     overlapped DMA drain — the wait trails one step behind
+                 issue.  Requires adjacent rows disjoint (queue-flushed
+                 tables are WAR-spaced; see ``_fused_dispatch_call``).
     """
     out = _fused_dispatch_jit(
         cmds, tuple(zero_blocks), tuple(pools), block_axis=block_axis,
-        interpret=interpret,
-        primary=_as_primary(primary, len(pools), n_primary))
+        interpret=interpret, primary=_as_primary(primary, len(pools)),
+        overlap=overlap)
     notify_launch(int(cmds.shape[0]), len(out), "fused")
     return tuple(out)
 
@@ -322,17 +374,27 @@ def _scatter_rows(slab, data, dst, valid, block_axis):
 @functools.lru_cache(maxsize=256)
 def _sharded_runner(mesh, pool_axes: Tuple[str, ...], deltas: Tuple[int, ...],
                     n_pools: int, block_axis: int, use_pallas: bool,
-                    interpret: bool, primary: Tuple[bool, ...]):
+                    interpret: bool, primary: Tuple[bool, ...],
+                    replicated: Tuple[bool, ...]):
     """Build (and cache) the jit'd shard_map'd drain for one static plan
     structure.  The jit layer further caches per array shape; table shapes
     are bucketed (cmdqueue.BUCKETS) and decode-round flushes are local-only
     (``deltas=()``).  Adversarial streams churning distinct delta subsets
     are bounded by the signature fold in :func:`sharded_fused_dispatch`:
     past :data:`MAX_DELTA_SIGNATURES` distinct ``(deltas, t)`` signatures,
-    plans fold to the full delta set so the compile count stays O(1)."""
+    plans fold to the full delta set so the compile count stays O(1).
+
+    ``replicated[p]`` marks pools whose block axis is NOT sharded (the
+    ``PoolSpec.sharding == ()`` hint — e.g. a small staging ring held
+    whole on every device): their in/out specs replicate, each shard sees
+    the full pool as its slab, and cross-pool reads from them are always
+    slab-local (``partition_commands`` classifies them by the sharded
+    side)."""
     n_shards = int(np.prod([mesh.shape[a] for a in pool_axes]))
     axis = pool_axes if len(pool_axes) > 1 else pool_axes[0]
     pspec = P(*([None] * block_axis), axis)
+    pool_specs = tuple(P() if replicated[p] else pspec
+                       for p in range(n_pools))
     lspec = P(axis, None, None)             # local tables   (S, m, 3)
     sspec = P(None, axis, None)             # send rows      (K, S, t)
     rspec = P(None, axis, None, None)       # recv tables    (K, S, t, 3)
@@ -385,9 +447,10 @@ def _sharded_runner(mesh, pool_axes: Tuple[str, ...], deltas: Tuple[int, ...],
 
     mapped = shard_map(
         body, mesh=mesh,
-        # P() replicates the zero rows; pspec applies to every pool leaf
-        in_specs=(lspec, sspec, rspec, P(), pspec),
-        out_specs=tuple([pspec] * n_pools),
+        # P() replicates the zero rows; per-pool specs shard or replicate
+        # each pool leaf according to its PoolSpec.sharding hint
+        in_specs=(lspec, sspec, rspec, P(), pool_specs),
+        out_specs=pool_specs,
         check_vma=False)
     return jax.jit(mapped, donate_argnums=(4,))
 
@@ -426,17 +489,22 @@ def sharded_fused_dispatch(pools: Sequence, zero_blocks: Sequence, plan, *,
                            block_axis: int = 0, use_pallas: bool = False,
                            interpret: bool = False,
                            primary: Optional[Tuple[bool, ...]] = None,
-                           n_primary: Optional[int] = None) -> Tuple:
+                           replicated: Optional[Tuple[bool, ...]] = None
+                           ) -> Tuple:
     """Drain one partitioned flush (a cmdqueue.ShardPlan) as ONE collective
     launch over every pool: per-slab fused sub-table drains + the
     cross-slab send/recv plan, all inside a single shard_map'd dispatch.
     Pools may carry different block counts (each partitions by its own
     shard size — ``plan.shard_sizes``); ``primary`` is the per-pool role
-    vector exactly as in :func:`fused_dispatch_pallas` (``n_primary`` kept
-    as the int shim)."""
-    primary = _as_primary(primary, len(pools), n_primary)
+    vector exactly as in :func:`fused_dispatch_pallas`; ``replicated``
+    marks pools held whole on every device (``PoolSpec.sharding == ()``
+    hints), which must match the plan's partitioning."""
+    primary = _as_primary(primary, len(pools))
+    if replicated is None:
+        replicated = tuple([False] * len(pools))
     plan = _bound_delta_signatures(
-        plan, (mesh, tuple(pool_axes), len(pools), block_axis, primary))
+        plan, (mesh, tuple(pool_axes), len(pools), block_axis, primary,
+               replicated))
     if plan.deltas:
         send = jnp.asarray(plan.send_rows)
         recv = jnp.asarray(plan.recv_tables)
@@ -446,7 +514,7 @@ def sharded_fused_dispatch(pools: Sequence, zero_blocks: Sequence, plan, *,
         recv = jnp.full((0, s, 1, 3), -1, jnp.int32)
     runner = _sharded_runner(mesh, tuple(pool_axes), tuple(plan.deltas),
                              len(pools), block_axis, use_pallas, interpret,
-                             primary)
+                             primary, tuple(replicated))
     out = runner(jnp.asarray(plan.local_tables), send, recv,
                  tuple(zero_blocks), tuple(pools))
     notify_launch(int(plan.local_tables.shape[1]), len(out), "fused_mesh")

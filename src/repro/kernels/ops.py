@@ -74,8 +74,7 @@ def _fused_ref_jit(cmds, zero_blocks, pools, *, block_axis, primary=None):
 
 def fused_dispatch(pools, zero_blocks, cmds, *, block_axis: int = 0,
                    use_pallas: Optional[bool] = None,
-                   primary: Optional[tuple] = None,
-                   n_primary: Optional[int] = None):
+                   primary: Optional[tuple] = None):
     """One launch for a whole flushed command table over every pool.
 
     See kernels/fused_dispatch.py for the opcode table and contract.  On
@@ -83,11 +82,10 @@ def fused_dispatch(pools, zero_blocks, cmds, *, block_axis: int = 0,
     ``use_pallas=True`` to run the kernel body in interpret mode.
     ``primary`` is the per-pool role vector (True = plain opcodes move the
     block there); pools may carry different block counts — cross-pool rows
-    use global prefix-sum-base ids.  ``n_primary`` is the one-release int
-    shim (first n pools primary).
+    use global prefix-sum-base ids.
     """
     from repro.kernels.fused_dispatch import _as_primary
-    primary = _as_primary(primary, len(pools), n_primary)
+    primary = _as_primary(primary, len(pools))
     if _resolve_use_pallas(use_pallas):
         return fused_dispatch_pallas(pools, zero_blocks, cmds,
                                      block_axis=block_axis,
@@ -103,19 +101,20 @@ def fused_dispatch_sharded(pools, zero_blocks, plan, *, mesh, pool_axes,
                            block_axis: int = 0,
                            use_pallas: Optional[bool] = None,
                            primary: Optional[tuple] = None,
-                           n_primary: Optional[int] = None):
+                           replicated: Optional[tuple] = None):
     """One collective launch for a whole flushed command table across the
     mesh: per-slab fused sub-tables + the cross-slab send/recv plan
     (cmdqueue.ShardPlan; every pool partitions by its own shard size).
     Resolution matches every other op: the per-shard drain runs the Pallas
     kernel body on TPU (or in interpret mode when forced) and the jnp
     reference elsewhere; the inter-slab hops are ppermute collectives
-    either way.  ``primary``/``n_primary`` as in :func:`fused_dispatch`."""
+    either way.  ``primary`` as in :func:`fused_dispatch`; ``replicated``
+    marks pools held whole on every device (must match the plan)."""
     return sharded_fused_dispatch(pools, zero_blocks, plan, mesh=mesh,
                                   pool_axes=pool_axes, block_axis=block_axis,
                                   use_pallas=_resolve_use_pallas(use_pallas),
                                   interpret=_interpret(),
-                                  primary=primary, n_primary=n_primary)
+                                  primary=primary, replicated=replicated)
 
 
 def baseline_copy(pool, ids):

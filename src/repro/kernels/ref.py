@@ -57,8 +57,7 @@ def zero_init(pool, ids, fill_value=0.0):
 # row reads or rewrites a block an earlier row writes).
 # ---------------------------------------------------------------------------
 
-def fused_dispatch(pools, zero_blocks, cmds, block_axis=0, primary=None,
-                   n_primary=None):
+def fused_dispatch(pools, zero_blocks, cmds, block_axis=0, primary=None):
     """pools: sequence of (nblk_p, ...) or (L, nblk_p, ...) — block counts
     may DIFFER per pool; zero_blocks: per-pool (1,) + block_shape; cmds:
     (m, 3) int32 [opcode, src, dst].
@@ -68,13 +67,12 @@ def fused_dispatch(pools, zero_blocks, cmds, block_axis=0, primary=None,
     block count); *staging* pools only receive ``OP_CROSS_POOL_COPY`` rows
     that name them in a global ``base[pool] + block`` id, where ``base``
     is the prefix sum of the pool block counts (the PoolGroup address
-    space).  None = every pool is primary; ``n_primary`` is the int shim
-    (first n pools primary)."""
+    space).  None = every pool is primary."""
     from repro.kernels.fused_dispatch import (OP_CROSS_POOL_COPY,
                                               OP_ZERO_INIT, _as_primary)
     pools = list(pools)
     n = len(pools)
-    primary = _as_primary(primary, n, n_primary)
+    primary = _as_primary(primary, n)
     ba = block_axis
     sizes = [p.shape[ba] for p in pools]
     bases = []

@@ -40,6 +40,15 @@ def pool_shard_count(mesh: Optional[Mesh]) -> int:
     return _psc(mesh)
 
 
+def pool_partition_spec(mesh: Mesh, spec=None, block_axis: int = 0):
+    """PartitionSpec for one pool from its ``PoolSpec.sharding`` hint
+    (models/paged.py owns the semantics; re-exported for the launch
+    layer): None = default joint pool axes, ``()`` = replicated, a tuple
+    = exactly those mesh axes."""
+    from repro.models.paged import pool_partition_spec as _pps
+    return _pps(mesh, spec, block_axis=block_axis)
+
+
 def sharding_for(mesh: Mesh, shape: Tuple[int, ...], axes) -> NamedSharding:
     """Logical axes -> NamedSharding (divisibility-aware, uses the active
     rule set — mirrors sharding.rules.constrain)."""
@@ -47,9 +56,26 @@ def sharding_for(mesh: Mesh, shape: Tuple[int, ...], axes) -> NamedSharding:
     return NamedSharding(mesh, spec)
 
 
-def tree_shardings(mesh: Mesh, value_tree, axes_tree):
-    """Matching pytree of NamedShardings."""
+def tree_shardings(mesh: Mesh, value_tree, axes_tree, *,
+                   block_axis: int = 0):
+    """Matching pytree of NamedShardings.
+
+    ``axes_tree`` leaves are logical-axis tuples — or
+    :class:`~repro.core.poolspec.PoolSpec` descriptors, which resolve
+    through their ``sharding`` hint via :func:`pool_partition_spec`
+    (``block_axis`` positions the pool's block dimension): the hook that
+    lets a serving layout replicate a small staging ring while its KV
+    pools shard."""
+    from repro.core.poolspec import PoolSpec
+
+    def one(v, a):
+        if isinstance(a, PoolSpec):
+            return NamedSharding(
+                mesh, pool_partition_spec(mesh, a, block_axis=block_axis))
+        return sharding_for(mesh, v.shape, a)
+
     return jax.tree_util.tree_map(
-        lambda v, a: sharding_for(mesh, v.shape, a), value_tree, axes_tree,
-        is_leaf=lambda x: isinstance(x, tuple) and all(
-            isinstance(e, (str, type(None))) for e in x))
+        one, value_tree, axes_tree,
+        is_leaf=lambda x: isinstance(x, PoolSpec) or (
+            isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x)))

@@ -11,12 +11,25 @@ The serving loop is the paper's application showcase:
 * ``fork`` — parallel sampling / beam search shares every prompt page by
   refcount (zero bytes), CoW-splitting lazily on the first divergent append;
 * fresh pages are BuZ-lazy-zeroed (ZI metadata bit);
-* each decode round drains the queue ONCE — promotions + CoW splits + tail
-  inits ride one fused launch at the round's flush boundary — then runs
-  one jit'd ``model.decode_step`` over the shared pool with the cache's
-  device tables.  Under a mesh the batch shards over (pod, data) whenever
-  the cache can pin each sequence's blocks in its group's slabs
-  (``batch_shard_count``); the flush is one collective launch either way.
+* each decode round drains the engine's **serve CommandStream** ONCE —
+  promotions + CoW splits + tail inits are captured onto the stream
+  (``stream.capture()``) and ride one fused launch at ``stream.flush()``,
+  whose :class:`~repro.core.stream.FlushTicket` is kept in
+  ``last_ticket`` — then runs one jit'd ``model.decode_step`` over the
+  shared pool with the cache's device tables.  Under a mesh the batch
+  shards over (pod, data) whenever the cache can pin each sequence's
+  blocks in its group's slabs (``batch_shard_count``); the flush is one
+  collective launch either way.
+
+Staging sizing is policy-derived: ``max_admit_pages=None`` sizes the ring
+at ``admissions_per_round x max_blocks_per_seq`` (the most pages an
+in-policy round can park); ``double_buffer=True`` doubles the slots into
+a live + shadow half, so admission bursts past the ring's nominal
+capacity land in the shadow half while the live half's promotions are
+still queued (their slots carry pending READS — the command queues'
+source-hazard tracking) and the round still drains as ONE launch.
+``max_admit_pages=ServingEngine.FULL_TWIN`` keeps the seed's full-size
+staging twins.
 
 ``fused_staging=False`` restores the seed's ``_stage_legacy`` path (one
 ad-hoc gather/scatter dispatch per pool per admission, KV pools written
@@ -49,20 +62,39 @@ class ServingEngine:
     PagedCoWCache: admission (prefill + staged promotion), CoW fork, and
     greedy decode rounds whose bulk movement drains as one fused launch."""
 
+    #: ``max_admit_pages`` sentinel: keep full-size staging twins (every
+    #: KV block has a staging slot) instead of a recycled ring
+    FULL_TWIN = 0
+
     def __init__(self, cfg, params, mesh=None, max_seqs: int = 16,
                  max_blocks_per_seq: int = 64, num_slabs: int = 4,
                  rc: Optional[RowCloneConfig] = None, impl: str = "ref",
                  fused_staging: bool = True,
-                 max_admit_pages: Optional[int] = None):
+                 max_admit_pages: Optional[int] = None,
+                 admissions_per_round: int = 1,
+                 double_buffer: bool = False):
         """``max_admit_pages`` sizes the staging pools as a RING of that
-        many slots (rounded up to the mesh's pool shard count) instead of
-        a full-size twin of the KV pools — slots recycle at every round's
-        flush, so the ring only needs to hold the pages admitted between
-        two flushes (largest prompt's blocks x admissions per round).
-        ``None`` keeps the full twin.  A ring of a few blocks cuts the
-        engine's resident pool bytes by ~2x at unchanged round latency
-        and bitwise-identical decode (BENCH_dispatch.json serve_round,
-        schema v4)."""
+        many slots instead of a full-size twin of the KV pools — slots
+        recycle at every round's flush, so the ring only needs to hold
+        the pages admitted between two flushes.  ``None`` (default)
+        DERIVES the size from the admission policy:
+        ``admissions_per_round x max_blocks_per_seq`` (the most pages an
+        in-policy round can park); :data:`FULL_TWIN` (0) keeps the seed's
+        full twin.  A ring of a few blocks cuts the engine's resident
+        pool bytes by ~2x at unchanged round latency and bitwise-identical
+        decode (BENCH_dispatch.json serve_round).
+
+        ``double_buffer=True`` doubles the ring into live + shadow
+        halves: admissions bursting past the nominal ring capacity park
+        in the shadow half while the live half's promotions are still
+        queued on the serve stream (pending source reads guard those
+        slots), keeping burst rounds at 1.0 bulk-movement launches
+        instead of forcing an early drain.
+
+        Under a mesh a ring that does not divide the pool shard count is
+        REPLICATED (``PoolSpec.sharding == ()`` — held whole on every
+        device) rather than rounded up; sharded rings partition like
+        their KV twins."""
         self.cfg = cfg
         self.rc = rc or RowCloneConfig()
         self.mesh = mesh
@@ -70,6 +102,7 @@ class ServingEngine:
         self.model = build_model(cfg, self.rc)
         self.params = params
         self.fused_staging = fused_staging
+        self.double_buffer = double_buffer
         page = self.rc.page_size
         L = cfg.num_attn_layers
         nblk = max_seqs * max_blocks_per_seq
@@ -79,9 +112,18 @@ class ServingEngine:
         align = int(np.lcm(num_slabs, shards))
         nblk = -(-nblk // align) * align
         if max_admit_pages is None:
-            stage_nblk = nblk          # full twin (legacy sizing)
+            # admission-policy derivation: the ring must hold one round's
+            # worth of staged pages (kwarg stays as an explicit override)
+            max_admit_pages = admissions_per_round * max_blocks_per_seq
+        replicate_staging = False
+        if max_admit_pages == self.FULL_TWIN:
+            stage_nblk = nblk          # full twin (seed sizing)
+            self.ring_capacity = nblk
         else:
-            stage_nblk = -(-max_admit_pages // shards) * shards
+            self.ring_capacity = int(max_admit_pages)
+            stage_nblk = int(max_admit_pages) * (2 if double_buffer else 1)
+            if stage_nblk % shards:
+                replicate_staging = True   # whole ring on every device
         kv_dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
         alloc = SubarrayAllocator(nblk, num_slabs,
                                   reserved_zero_per_slab=self.rc
@@ -94,7 +136,16 @@ class ServingEngine:
         # launch at the round's flush boundary
         pools, group = make_serving_pools(
             L, nblk, page, cfg.num_kv_heads, cfg.head_dim, kv_dtype,
-            staging=fused_staging, stage_nblk=stage_nblk)
+            staging=fused_staging, stage_nblk=stage_nblk,
+            replicate_staging=replicate_staging)
+        if mesh is not None:
+            # honor each PoolSpec's sharding hint at placement time
+            # (replicated rings stay whole per device; KV pools shard)
+            from repro.launch.mesh import tree_shardings
+            shardings = tree_shardings(
+                mesh, pools, {n: group[n] for n in pools}, block_axis=1)
+            pools = {n: jax.device_put(a, shardings[n])
+                     for n, a in pools.items()}
         self.engine = RowCloneEngine(
             pools, alloc, mesh=mesh, enable_fpm=self.rc.enable_fpm,
             enable_psm=self.rc.enable_psm, enable_zi=self.rc.enable_zi,
@@ -117,10 +168,12 @@ class ServingEngine:
         # this costs matches the seed _stage_legacy path; re-enabling
         # donation needs promotion-aware failure recovery (ROADMAP).
         self._prefill_stage_jit = jax.jit(self._prefill_stage_fn)
-        if fused_staging:
-            # hold the queue open across admissions: promotions drain with
-            # the round's CoW splits + tail inits at decode_round's flush
-            self.engine.deferred = True
+        # the round's bulk movement lives on a dedicated CommandStream:
+        # admissions/forks CAPTURE their promotions and CoW work onto it,
+        # and decode_round's stream.flush() drains everything as one
+        # launch, returning the FlushTicket kept in ``last_ticket``
+        self.stream = self.engine.stream("serve")
+        self.last_ticket = None
 
     # ------------------------------------------------------------------
     def _prefill_batch(self, prompt: np.ndarray) -> Dict[str, jnp.ndarray]:
@@ -156,7 +209,13 @@ class ServingEngine:
         the stage→KV promotion (fused path), or scatter straight into the
         KV pools (seed ``fused_staging=False`` path)."""
         S = int(prompt.shape[0])
-        sid = self.cache.new_sequence(prompt_len=S)
+        if self.fused_staging:
+            # any block inits the admission needs (e.g. ZI disabled) ride
+            # the serve stream with the round's other bulk movement
+            with self.stream.capture():
+                sid = self.cache.new_sequence(prompt_len=S)
+        else:
+            sid = self.cache.new_sequence(prompt_len=S)
         batch = self._prefill_batch(prompt)
         blocks = self.cache.blocks_of(sid)
         if self.fused_staging:
@@ -174,8 +233,9 @@ class ServingEngine:
                 raise
             self.engine.pools["k_stage"] = k_stage
             self.engine.pools["v_stage"] = v_stage
-            # the promotion rides the round's fused flush (queue deferred)
-            self.engine.promote_staged(list(zip(stage_ids, blocks)))
+            # the promotion rides the round's serve stream (drained by
+            # decode_round's stream.flush — one launch for the round)
+            self.stream.promote_staged(list(zip(stage_ids, blocks)))
             st = extras
         else:
             logits, st = self.model.prefill(self.params, batch, self.mesh,
@@ -208,8 +268,14 @@ class ServingEngine:
 
     def fork(self, sid: int, n: int) -> List[int]:
         """CoW-fork ``sid`` into ``n`` children (parallel sampling / beam
-        search): prompt pages share by refcount — zero bytes move."""
-        kids = self.cache.fork(sid, n)
+        search): prompt pages share by refcount — zero bytes move.  Any
+        eager cross-group copies a sharded-batch fork needs are captured
+        onto the serve stream (they drain with the round)."""
+        if self.fused_staging:
+            with self.stream.capture():
+                kids = self.cache.fork(sid, n)
+        else:
+            kids = self.cache.fork(sid, n)
         for c in kids:
             self.last_logits[c] = self.last_logits[sid].copy()
             self.tokens[c] = list(self.tokens[sid])
@@ -250,9 +316,14 @@ class ServingEngine:
             next_tok[sid] = t
         # CoW/allocation happens BEFORE the jit step (host metadata); the
         # round's staged-prefill promotions + CoW splits + tail-block
-        # inits all drain as ONE fused launch at this flush boundary
-        self.cache.append_tokens(live)
-        self.engine.flush()
+        # inits all drain as ONE fused launch at this stream flush —
+        # the FlushTicket records the round's launch accounting
+        if self.fused_staging:
+            with self.stream.capture():
+                self.cache.append_tokens(live)
+        else:
+            self.cache.append_tokens(live)   # seed path: eager per-call
+        self.last_ticket = self.stream.flush()
         table, mask, base = self.cache.device_tables()
         lens = self.cache.seq_lens()
         B = self.cache.max_seqs
@@ -296,10 +367,15 @@ def main():
     ap.add_argument("--steps", type=int, default=16)
     ap.add_argument("--fork", type=int, default=0)
     ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--staging-ring", type=int, default=0,
+    ap.add_argument("--staging-ring", type=int, default=-1,
                     help="staging slots (max_admit_pages): size staging "
                          "as a recycled ring instead of full KV twins "
-                         "(~2x less resident pool memory); 0 = full twin")
+                         "(~2x less resident pool memory); 0 = full "
+                         "twin, -1 = derive from the admission policy")
+    ap.add_argument("--double-buffer", action="store_true",
+                    help="double-buffered staging ring: admission bursts "
+                         "past the ring capacity park in the shadow half "
+                         "at 1.0 launches/round")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -308,7 +384,9 @@ def main():
     model = build_model(cfg)
     params, _ = split_params(model.init_params(jax.random.key(0)))
     eng = ServingEngine(cfg, params, max_seqs=max(args.requests * 4, 8),
-                        max_admit_pages=args.staging_ring or None)
+                        max_admit_pages=(None if args.staging_ring < 0
+                                         else args.staging_ring),
+                        double_buffer=args.double_buffer)
     print(f"[serve] resident pool bytes: "
           f"{eng.engine.pool_bytes_resident() / 1e6:.1f} MB "
           f"(staging slots: {eng.engine.stage_capacity} of "

@@ -81,6 +81,26 @@ def pool_spec(mesh: Mesh) -> P:
     return P(axes if len(axes) > 1 else (axes[0] if axes else None))
 
 
+def pool_partition_spec(mesh: Mesh, spec=None, block_axis: int = 0) -> P:
+    """PartitionSpec for one pool honoring its ``PoolSpec.sharding`` hint.
+
+    ``spec`` may be a :class:`~repro.core.poolspec.PoolSpec`, a raw hint
+    tuple, or None.  Hint semantics: ``None`` (or no spec) = the default
+    joint pool axes (``pool_shard_axes``); ``()`` = **replicated** — the
+    pool's block axis is held whole on every device (what a small staging
+    ring wants: slots stay addressable without rounding the ring up to
+    the shard count); a non-empty tuple = exactly those mesh axes (absent
+    axes are dropped).  ``block_axis`` positions the sharded dimension
+    (serving pools are layer-stacked, block axis 1)."""
+    hint = getattr(spec, "sharding", spec)
+    if hint is None:
+        axes = pool_shard_axes(mesh)
+    else:
+        axes = tuple(a for a in hint if a in mesh.axis_names)
+    return P(*([None] * block_axis),
+             axes if len(axes) > 1 else (axes[0] if axes else None))
+
+
 def _maybe(axes: Tuple[str, ...]):
     if not axes:
         return None
@@ -96,7 +116,8 @@ def _maybe(axes: Tuple[str, ...]):
 def make_serving_pools(num_layers: int, nblk: int, page: int, kv_heads: int,
                        head_dim: int, dtype,
                        staging: bool = True,
-                       stage_nblk: Optional[int] = None):
+                       stage_nblk: Optional[int] = None,
+                       replicate_staging: bool = False):
     """Build the serving engine's pools: layer-stacked ``(L, nblk, page,
     KVH, D)`` K/V pools plus (by default) their staging pools.
 
@@ -110,8 +131,13 @@ def make_serving_pools(num_layers: int, nblk: int, page: int, kv_heads: int,
     slot), while a small value builds a staging *ring* — just enough slots
     to park the admissions between two flushes — which is what cuts the
     serving engine's resident pool bytes by ~2x (slots recycle every
-    round; see launch/serve.py ``max_admit_pages``).  Under a mesh it must
-    divide by the same ``pool_shard_count`` as ``nblk``.
+    round; see launch/serve.py ``max_admit_pages``).  Under a mesh it
+    either divides by the same ``pool_shard_count`` as ``nblk`` or sets
+    ``replicate_staging=True``: the staging specs get the ``()`` sharding
+    hint, the ring is held whole on every device
+    (:func:`pool_partition_spec`), and promotions out of it are always
+    slab-local in the collective drain — the placement override that
+    keeps an oddly-sized ring from rounding up to the shard count.
 
     Returns ``(pools, group)``: the name -> array dict plus the
     :class:`~repro.core.poolspec.PoolGroup` describing the engine's
@@ -129,12 +155,13 @@ def make_serving_pools(num_layers: int, nblk: int, page: int, kv_heads: int,
     specs = [PoolSpec("k", nblk, block_shape, dtype, sharding=hint),
              PoolSpec("v", nblk, block_shape, dtype, sharding=hint)]
     if staging:
+        shint = () if replicate_staging else hint
         pools["k_stage"] = jnp.zeros(sshape, dtype)
         pools["v_stage"] = jnp.zeros(sshape, dtype)
         specs += [PoolSpec("k_stage", stage_nblk, block_shape, dtype,
-                           role="staging", paired="k", sharding=hint),
+                           role="staging", paired="k", sharding=shint),
                   PoolSpec("v_stage", stage_nblk, block_shape, dtype,
-                           role="staging", paired="v", sharding=hint)]
+                           role="staging", paired="v", sharding=shint)]
     return pools, PoolGroup(specs)
 
 

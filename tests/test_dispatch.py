@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (BUCKETS, PagedCoWCache, RowCloneEngine,
+from repro.core import (BUCKETS, BlockRef, PagedCoWCache, RowCloneEngine,
                         SubarrayAllocator, bucket_size)
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
@@ -264,7 +264,7 @@ def test_memcopy_cross_keeps_zi_metadata_sound():
     eng = _mk_engine(seed=21)
     s, d, e = 5, 9, 13
     eng.alloc.mark_zero([s, d])
-    eng.memcopy_cross([(s, d)], "k", "v")
+    eng.memcopy_cross([(BlockRef("k", s), BlockRef("v", d))])
     # lazy-zero source -> dst receives zeros, not the stale pool bytes
     assert float(jnp.abs(eng.pools["v"][d]).max()) == 0.0
     assert not eng.alloc.is_zero[d]
@@ -280,7 +280,8 @@ def test_engine_cross_pool_copy_matches_seed_cross():
                               jnp.asarray([2, 7], jnp.int32),
                               jnp.asarray([11, 23], jnp.int32))
     with LaunchRecorder() as rec:
-        eng.memcopy_cross([(2, 11), (7, 23)], "k", "v")
+        eng.memcopy_cross([(BlockRef("k", 2), BlockRef("v", 11)),
+                           (BlockRef("k", 7), BlockRef("v", 23))])
     assert [e[2] for e in rec.events] == ["fused"]
     np.testing.assert_array_equal(np.asarray(eng.pools["v"]),
                                   np.asarray(ref))
@@ -370,9 +371,9 @@ def test_cross_pool_war_interleaved_directions(use_fused):
     eng.alloc.mark_written([1, 5, 7])
     old_v5 = np.asarray(eng.pools["v"][5])
     with eng.batch():
-        eng.memcopy_cross([(1, 2)], "k", "v")
-        eng.memcopy_cross([(5, 6)], "v", "k")
-        eng.memcopy_cross([(7, 5)], "k", "v")
+        eng.memcopy_cross([(BlockRef("k", 1), BlockRef("v", 2))])
+        eng.memcopy_cross([(BlockRef("v", 5), BlockRef("k", 6))])
+        eng.memcopy_cross([(BlockRef("k", 7), BlockRef("v", 5))])
     np.testing.assert_array_equal(np.asarray(eng.pools["k"][6]), old_v5)
     np.testing.assert_array_equal(np.asarray(eng.pools["v"][5]),
                                   np.asarray(eng.pools["k"][7]))
@@ -387,7 +388,8 @@ def test_legacy_cross_pool_axis1():
     eng = _mk_engine(block_axis=1, use_fused=False, seed=23)
     eng.alloc.mark_written([5])
     want = np.asarray(eng.pools["k"][:, 5])
-    eng.memcopy_cross([(5, 40)], "k", "v")     # 40 >= L: axis-0 gather
+    # 40 >= L: would hit the layer axis if misindexed (axis-0 gather)
+    eng.memcopy_cross([(BlockRef("k", 5), BlockRef("v", 40))])
     np.testing.assert_array_equal(np.asarray(eng.pools["v"][:, 40]), want)
 
 

@@ -4,9 +4,11 @@ with consistent launch accounting.
 
 Streams mix every opcode (FPM/PSM/baseline-adjacent copies, zero-init —
 materialized and lazy — and cross-pool copies), include duplicate
-destinations (exercising the hazard auto-flush), src==dst no-ops, lazy-zero
-sources (the ZI alias fast path), overflow past the top 512 bucket, and both
-``block_axis`` layouts.  Engines carry staging pools (k_stage/v_stage) of
+destinations (exercising the hazard auto-flush), **adjacent WAR-on-source
+patterns** (copy out of a block, then rewrite it in the same stream — the
+pattern the overlapped DMA drain's spacer rows must keep safe), src==dst
+no-ops, lazy-zero sources (the ZI alias fast path), overflow past the top
+512 bucket, and both ``block_axis`` layouts.  Engines carry staging pools (k_stage/v_stage) of
 INDEPENDENT size — full twins and staging rings smaller than the KV pools
 (the PoolGroup prefix-sum address space) — so streams also drive
 heterogeneous staging↔KV cross-pool traffic: promotions, demotions,
@@ -36,7 +38,7 @@ from repro.kernels import fused_dispatch as fd
 # replay — programs are plain JSON)
 # ---------------------------------------------------------------------------
 
-KINDS = ("copy", "copy", "zero", "lazy", "cross", "cross")
+KINDS = ("copy", "copy", "zero", "lazy", "cross", "cross", "war")
 
 #: cross-pool pool pairs: primary↔primary plus every staging flavour —
 #: promotion (stage→primary), demotion (primary→stage), stage→stage
@@ -71,6 +73,17 @@ def gen_program(rng: random.Random, nblk: int, n_instr: int,
         elif kind == "lazy":
             ids = [rng.randrange(nblk) for _ in range(rng.randint(1, 4))]
             prog.append(["lazy", ids])
+        elif kind == "war":
+            # WAR-on-source, ADJACENT by construction: copy out of block
+            # a, then immediately rewrite a (plain copy or zero) in the
+            # same batch — admitted without a hazard flush, and the
+            # overlapped fused drain must space the pair (all three
+            # dispatch paths stay bitwise-identical)
+            a, b, c = (rng.randrange(nblk) for _ in range(3))
+            if rng.random() < 0.5:
+                prog.append(["war", [[a, b], [c, a]], None])
+            else:
+                prog.append(["war", [[a, b]], a])
         else:
             n = rng.randint(1, 4)
             sp, dp = rng.choice(CROSS_POOL_PAIRS)
@@ -95,6 +108,11 @@ def run_program(eng: RowCloneEngine, prog):
                     eng.materialize_zeros(instr[1])
                 elif instr[0] == "lazy":
                     eng.meminit(instr[1], lazy=True)
+                elif instr[0] == "war":
+                    # copy out of a block, then rewrite it right away
+                    eng.memcopy([tuple(p) for p in instr[1]])
+                    if instr[2] is not None:
+                        eng.materialize_zeros([instr[2]])
                 else:
                     sp, dp = instr[2], instr[3]
                     eng.memcopy_cross([(BlockRef(sp, s), BlockRef(dp, d))
@@ -158,8 +176,11 @@ def test_property_fused_matches_seed_fanout(seed, block_axis, n_instr,
     assert all(e[2] == "fused" for e in ev_f), ev_f
     assert len(ev_f) == fused.stats.launches
     assert fused.queue.stats.launches == fused.stats.launches
-    # hazard auto-flush boundaries are path-independent (queue-level)
+    # hazard auto-flush boundaries are path-independent (queue-level), and
+    # so are the WAR-on-source admissions (tracked, never flushed)
     assert fused.queue.stats.hazard_flushes == legacy.queue.stats.hazard_flushes
+    assert fused.queue.stats.war_hazards == legacy.queue.stats.war_hazards
+    assert fused.queue.stats.spacer_rows == legacy.queue.stats.spacer_rows
     if ev_l:
         assert len(ev_f) <= len(ev_l)
     # identical ZI metadata: the alias fast path took the same decisions
@@ -218,8 +239,14 @@ for case in spec["cases"]:
         ev_mesh, ev_single)
     assert sharded.queue.stats.hazard_flushes == \
         single.queue.stats.hazard_flushes
+    # WAR admissions are queue-level and path-independent; spacer counts
+    # legitimately differ (global adjacency vs per-slab adjacency) but
+    # must be credited on the mesh path whenever a slab pair was spaced
+    assert sharded.queue.stats.war_hazards == \
+        single.queue.stats.war_hazards
     results.append({"launches": len(ev_mesh),
-                    "seed_launches": len(ev_seed)})
+                    "seed_launches": len(ev_seed),
+                    "mesh_spacers": sharded.queue.stats.spacer_rows})
 
 # the sharded drain's Pallas branch (kernel body in interpret mode inside
 # shard_map) on the first stream — the TPU code path must not only exist

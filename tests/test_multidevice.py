@@ -100,7 +100,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.core import RowCloneEngine, SubarrayAllocator
+from repro.core import BlockRef, RowCloneEngine, SubarrayAllocator
 from repro.kernels import fused_dispatch as fd
 
 results = {}
@@ -126,7 +126,8 @@ eng.alloc.mark_written([2, 5, 17, 33, 12])
 with eng.batch():
     eng.memcopy([(2, 3), (5, 60), (17, 26)])
     eng.materialize_zeros([40])
-    eng.memcopy_cross([(12, 13), (33, 58)], "k", "v")
+    eng.memcopy_cross([(BlockRef("k", 12), BlockRef("v", 13)),
+                       (BlockRef("k", 33), BlockRef("v", 58))])
 results["mixed_launches"] = len(events)
 results["mixed_mechs"] = sorted(set(e[2] for e in events))
 ref = {n: want[n].copy() for n in want}
@@ -183,9 +184,9 @@ results["nop_launches"] = (flush_launches
                            + eng3._dispatch_table(nop, 0) + len(events))
 
 # 5) serving engine picks the mesh up (layer-stacked block_axis=1 pools):
-#    an eager CoW fork's block clones ride the round's flush boundary and
-#    drain as one collective launch (the serving queue stays deferred
-#    between rounds so staged promotions fuse with the decode round)
+#    an eager CoW fork's block clones are CAPTURED onto the serve stream
+#    and drain as one collective launch at the stream's flush (the round
+#    boundary), whose FlushTicket carries the accounting
 from repro.configs import get_config
 from repro.launch.serve import ServingEngine
 cfg = get_config("llama3.2-3b").reduced()
@@ -197,26 +198,30 @@ results["serve_batch_groups"] = srv.cache.batch_groups
 sid = srv.cache.new_sequence(prompt_len=2 * srv.rc.page_size)
 srv.engine.alloc.mark_written(srv.cache.blocks_of(sid))
 events.clear()
-srv.cache.fork(sid, 1, eager_copy=True)
-results["serve_fork_prelaunches"] = len(events)   # deferred: nothing yet
-srv.engine.flush()                                # the round flush boundary
+with srv.stream.capture():
+    srv.cache.fork(sid, 1, eager_copy=True)
+results["serve_fork_prelaunches"] = len(events)   # captured: nothing yet
+ticket = srv.stream.flush()                       # the round flush boundary
 results["serve_fork_launches"] = len(events)
 results["serve_fork_mechs"] = sorted(set(e[2] for e in events))
+results["serve_ticket_launches"] = ticket.launches
 
 # 6) staged admission promotions fuse into the SAME collective launch as
 #    the round's other bulk movement: enqueue a promotion plus an eager
 #    fork of the OLDER sequence (forking the just-admitted one would read
 #    a pending promotion destination and correctly hazard-flush), then
-#    flush once.  The promotion itself crosses shards (staging slots live
-#    on shard 0, the new sequence's group-1 blocks on shards 4-7), so the
-#    cross-pool rows ride the ppermute send/recv plan.
+#    flush the stream once.  The promotion itself crosses shards (staging
+#    slots live on shard 0, the new sequence's group-1 blocks on shards
+#    4-7), so the cross-pool rows ride the ppermute send/recv plan.
 events.clear()
 stage_ids = srv.engine.stage_blocks(2)
 sid2 = srv.cache.new_sequence(prompt_len=2 * srv.rc.page_size)
-srv.engine.promote_staged(list(zip(stage_ids, srv.cache.blocks_of(sid2))))
-srv.cache.fork(sid, 1, eager_copy=True)
+with srv.stream.capture():
+    srv.engine.promote_staged(list(zip(stage_ids,
+                                       srv.cache.blocks_of(sid2))))
+    srv.cache.fork(sid, 1, eager_copy=True)
 results["stage_prelaunches"] = len(events)
-srv.engine.flush()
+srv.stream.flush()
 results["stage_round_launches"] = len(events)
 results["stage_round_mechs"] = sorted(set(e[2] for e in events))
 results["stage_reclaimed"] = bool(
@@ -248,6 +253,7 @@ def test_mesh_fused_dispatch_one_launch_per_flush(tmp_path):
     assert res["serve_batch_groups"] == 2, res      # (2, 4) mesh: data dp=2
     assert res["serve_fork_prelaunches"] == 0, res  # deferred until flush
     assert res["serve_fork_launches"] == 1, res
+    assert res["serve_ticket_launches"] == 1, res   # the FlushTicket agrees
     assert res["serve_fork_mechs"] == ["fused_mesh"], res
     assert res["stage_prelaunches"] == 0, res
     assert res["stage_round_launches"] == 1, res    # promotions + fork fuse

@@ -298,7 +298,8 @@ def test_staging_ring_halves_memory_bitwise_tokens(served):
     resident pool bytes."""
     from repro.launch.serve import ServingEngine
     cfg, params = served
-    twin = ServingEngine(cfg, params, max_seqs=8, max_blocks_per_seq=16)
+    twin = ServingEngine(cfg, params, max_seqs=8, max_blocks_per_seq=16,
+                         max_admit_pages=ServingEngine.FULL_TWIN)
     ring = ServingEngine(cfg, params, max_seqs=8, max_blocks_per_seq=16,
                          max_admit_pages=8)
     assert ring.engine.stage_capacity == 8
@@ -317,6 +318,82 @@ def test_staging_ring_halves_memory_bitwise_tokens(served):
     reduction = (twin.engine.pool_bytes_resident()
                  / ring.engine.pool_bytes_resident())
     assert reduction >= 1.8, reduction
+
+
+def _burst_rounds(eng, cfg, n_rounds=2, admits_per_round=3,
+                  prompt_len=24):
+    """Admit ``admits_per_round`` prompts then decode, per round.  Returns
+    the per-round bulk-movement mechanism lists (launch hook)."""
+    prng = np.random.default_rng(11)
+    rounds = []
+    for _ in range(n_rounds):
+        with fd_hook() as ev:
+            for _ in range(admits_per_round):
+                eng.add_request(prng.integers(
+                    2, cfg.vocab_size, size=prompt_len).astype(np.int32))
+            eng.decode_round()
+        rounds.append([m for _, _, m in ev])
+    return rounds
+
+
+@pytest.mark.slow
+def test_burst_admissions_double_buffered_one_launch(served):
+    """The tentpole serving invariant: admissions bursting past the
+    ring's nominal capacity (3 staged pages/round vs a 2-slot ring) land
+    in the shadow half of a double-buffered ring and the round still
+    drains as ONE fused launch — while the single-buffered ring pays an
+    early-flush launch — with greedy tokens bitwise-identical across
+    double-buffered, single-buffered, and seed staging."""
+    from repro.launch.serve import ServingEngine
+    cfg, params = served
+    double = ServingEngine(cfg, params, max_seqs=8, max_blocks_per_seq=16,
+                           max_admit_pages=2, double_buffer=True)
+    single = ServingEngine(cfg, params, max_seqs=8, max_blocks_per_seq=16,
+                           max_admit_pages=2)
+    seed = ServingEngine(cfg, params, max_seqs=8, max_blocks_per_seq=16,
+                         fused_staging=False)
+    assert double.ring_capacity == 2
+    assert double.engine.stage_capacity == 4    # live + shadow halves
+    assert single.engine.stage_capacity == 2
+    r_double = _burst_rounds(double, cfg)
+    r_single = _burst_rounds(single, cfg)
+    _burst_rounds(seed, cfg)
+    assert double.tokens == single.tokens == seed.tokens
+    for name in ("k", "v"):
+        np.testing.assert_array_equal(
+            np.asarray(double.engine.pools[name]),
+            np.asarray(single.engine.pools[name]), err_msg=f"pool {name}")
+    for rnd, mechs in enumerate(r_double):
+        assert mechs == ["fused"], (rnd, mechs)     # 1.0 launches/round
+    # the single-buffered ring pays the early flush under the same burst
+    assert any(len(mechs) > 1 for mechs in r_single), r_single
+    # the round's FlushTicket carries the launch accounting
+    t = double.last_ticket
+    assert t is not None and t.stream == "serve" and t.launches == 1
+
+
+def test_burst_ticket_and_slot_lifetime(served):
+    """Source-hazard slot lifetime, end to end: while a burst round's
+    promotions are queued on the serve stream, their staging slots hold
+    pending READS and stay out of the free list; the round flush (one
+    launch) retires the reads and recycles every slot."""
+    from repro.launch.serve import ServingEngine
+    cfg, params = served
+    eng = ServingEngine(cfg, params, max_seqs=8, max_blocks_per_seq=16,
+                        max_admit_pages=2, double_buffer=True)
+    prng = np.random.default_rng(5)
+    sidx = [eng.engine.group.index(n) for n in eng.engine.staging]
+    for i in range(3):
+        eng.add_request(prng.integers(2, cfg.vocab_size, size=24)
+                        .astype(np.int32))
+        inflight = list(eng.engine._stage_inflight)
+        assert len(inflight) == i + 1
+        assert all(eng.stream.queue.has_pending_read((p, s))
+                   for s in inflight for p in sidx)
+    eng.decode_round()
+    assert eng.engine._stage_inflight == []
+    assert len(eng.engine._stage_free) == eng.engine.stage_capacity
+    assert eng.last_ticket.launches == 1
 
 
 def test_ring_exhaustion_flushes_and_recycles(served):
@@ -393,7 +470,8 @@ results["placement_ok"] = bool(all(
 # launch per round, >= 1.8x lower resident pool bytes
 from repro.kernels import fused_dispatch as fd
 twin = ServingEngine(cfg, params, mesh=mesh, max_seqs=8,
-                     max_blocks_per_seq=16, num_slabs=4)
+                     max_blocks_per_seq=16, num_slabs=4,
+                     max_admit_pages=ServingEngine.FULL_TWIN)
 ring = ServingEngine(cfg, params, mesh=mesh, max_seqs=8,
                      max_blocks_per_seq=16, num_slabs=4, max_admit_pages=8)
 rng2 = np.random.default_rng(7)
@@ -424,6 +502,63 @@ results["ring_mechs_fused"] = bool(all(
     m == "fused_mesh" for m in ring_mechs))
 results["ring_reduction"] = float(
     twin.engine.pool_bytes_resident() / ring.engine.pool_bytes_resident())
+
+# burst-admission acceptance, mesh leg: 3 staged pages/round vs a 2-slot
+# double-buffered ring — every round must stay ONE collective launch with
+# tokens identical to a single-device double-buffered engine
+burst_cpu = ServingEngine(cfg, params, max_seqs=8, max_blocks_per_seq=16,
+                          max_admit_pages=2, double_buffer=True)
+burst = ServingEngine(cfg, params, mesh=mesh, max_seqs=8,
+                      max_blocks_per_seq=16, num_slabs=4,
+                      max_admit_pages=2, double_buffer=True)
+rng3 = np.random.default_rng(11)
+burst_rounds = []
+for _ in range(2):
+    prompts = [rng3.integers(2, cfg.vocab_size, size=24).astype(np.int32)
+               for _ in range(3)]
+    for p in prompts:
+        burst_cpu.add_request(p.copy())
+    burst_cpu.decode_round()
+    mechs = []
+    hook2 = lambda n, p, m: mechs.append(m)
+    fd.add_launch_hook(hook2)
+    for p in prompts:
+        burst.add_request(p.copy())
+    burst.decode_round()
+    fd.remove_launch_hook(hook2)
+    burst_rounds.append(mechs)
+results["burst_mesh_rounds"] = burst_rounds
+results["burst_one_launch"] = bool(all(
+    r == ["fused_mesh"] for r in burst_rounds))
+results["burst_tokens_match"] = bool(
+    burst.tokens == burst_cpu.tokens)
+
+# replicated staging ring: 3 slots don't divide the 8 device shards, so
+# the ring is held whole on every device (PoolSpec.sharding == ()) and
+# promotions drain collectively without rounding the ring up
+repl_cpu = ServingEngine(cfg, params, max_seqs=8, max_blocks_per_seq=16,
+                         max_admit_pages=3)
+repl = ServingEngine(cfg, params, mesh=mesh, max_seqs=8,
+                     max_blocks_per_seq=16, num_slabs=4, max_admit_pages=3)
+results["repl_capacity"] = repl.engine.stage_capacity
+results["repl_sharding_hint"] = list(
+    repl.engine.group["k_stage"].sharding or [])
+repl_mechs = []
+hook3 = lambda n, p, m: repl_mechs.append(m)
+rng4 = np.random.default_rng(13)
+for _ in range(3):
+    p = rng4.integers(2, cfg.vocab_size, size=24).astype(np.int32)
+    repl_cpu.add_request(p.copy())
+    repl_cpu.decode_round()
+    n0 = len(repl_mechs)
+    fd.add_launch_hook(hook3)
+    repl.add_request(p.copy())
+    repl.decode_round()
+    fd.remove_launch_hook(hook3)
+    assert len(repl_mechs) - n0 <= 1, repl_mechs
+results["repl_tokens_match"] = bool(repl.tokens == repl_cpu.tokens)
+results["repl_mechs_fused"] = bool(all(
+    m == "fused_mesh" for m in repl_mechs))
 print("RESULTS:" + json.dumps(results))
 """
 
@@ -447,3 +582,14 @@ def test_sharded_batch_serving_decodes_like_single_device(tmp_path):
     assert res["ring_tokens_match"], res
     assert res["ring_mechs_fused"], res
     assert res["ring_reduction"] >= 1.8, res
+    # burst-admission acceptance on the mesh: 3 staged pages/round into a
+    # 2-slot double-buffered ring, still ONE collective launch per round,
+    # tokens identical to the single-device double-buffered engine
+    assert res["burst_one_launch"], res
+    assert res["burst_tokens_match"], res
+    # replicated staging ring (3 slots, 8 shards): sharding hint (),
+    # one collective launch per round, tokens match single-device
+    assert res["repl_capacity"] == 3, res
+    assert res["repl_sharding_hint"] == [], res
+    assert res["repl_tokens_match"], res
+    assert res["repl_mechs_fused"], res

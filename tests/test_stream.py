@@ -1,0 +1,315 @@
+"""CommandStream / FlushTicket unit suite.
+
+The API-redesign contract: ``engine.stream()`` mints ordered streams whose
+commands drain only at ``stream.flush()`` (returning a FlushTicket with
+launch accounting and on-demand post-drain block state); the seed surface
+(``memcopy`` flush-on-return, ``batch()``, ``flush()``) is a thin wrapper
+over the engine's default stream; streams serialize against each other
+only when they touch the same ``(pool, block)``; and the queue's
+source-hazard tracking (WAR admitted + spaced, not flushed) keeps the
+overlapped fused drain bitwise-equal to the seed fan-out.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (BlockRef, CommandStream, FlushTicket, RowCloneEngine,
+                        SubarrayAllocator)
+from repro.core.cmdqueue import (ALL_PRIMARY, OP_FPM_COPY, OP_NOP,
+                                 OP_ZERO_INIT, space_war_rows)
+from repro.kernels import fused_dispatch as fd
+
+
+def mk_engine(use_fused=True, seed=0, nblk=32, snblk=8):
+    alloc = SubarrayAllocator(nblk, 4, reserved_zero_per_slab=1)
+    pools = {
+        "k": jax.random.normal(jax.random.key(seed), (nblk, 4, 8)),
+        "v": jax.random.normal(jax.random.key(seed + 1), (nblk, 4, 8)),
+        "k_stage": jax.random.normal(jax.random.key(seed + 2), (snblk, 4, 8)),
+        "v_stage": jax.random.normal(jax.random.key(seed + 3), (snblk, 4, 8)),
+    }
+    return RowCloneEngine(pools, alloc, max_requests=64, use_fused=use_fused,
+                          staging={"k_stage": "k", "v_stage": "v"})
+
+
+class Hook:
+    def __enter__(self):
+        self.mechs = []
+        self._fn = lambda n, p, m: self.mechs.append(m)
+        fd.add_launch_hook(self._fn)
+        return self.mechs
+
+    def __exit__(self, *exc):
+        fd.remove_launch_hook(self._fn)
+
+
+# ---------------------------------------------------------------------------
+# stream lifecycle + tickets
+# ---------------------------------------------------------------------------
+
+def test_stream_defers_until_flush_and_tickets_account():
+    """Commands on a minted stream never hit the device until flush();
+    the ticket reports drained commands, launches, and sequences."""
+    eng = mk_engine()
+    eng.alloc.mark_written([1, 2])
+    s = eng.stream("work")
+    with Hook() as mechs:
+        s.memcopy([(1, 5)])
+        s.materialize_zeros([9])
+        s.memcopy_cross([(BlockRef("k_stage", 2), BlockRef("k", 11))])
+        assert mechs == []              # nothing launched yet
+        assert len(s) == 3
+        t = s.flush()
+    assert mechs == ["fused"]
+    assert isinstance(t, FlushTicket)
+    assert (t.stream, t.seq, t.commands, t.launches) == ("work", 0, 3, 1)
+    assert t.moved
+    t2 = s.flush()                       # empty flush: a real ticket, no work
+    assert t2.seq == 1 and t2.commands == 0 and not t2.moved
+
+
+def test_ticket_block_state_on_demand():
+    """block_state fetches post-drain bytes: a BlockRef returns one pool's
+    block, a bare int returns the block across every primary pool."""
+    eng = mk_engine(seed=4)
+    eng.alloc.mark_written([3])
+    want_k = np.asarray(eng.pools["k"][3])
+    want_v = np.asarray(eng.pools["v"][3])
+    s = eng.stream()
+    s.memcopy([(3, 7)])
+    t = s.flush().wait()
+    np.testing.assert_array_equal(t.block_state(BlockRef("k", 7)), want_k)
+    d = t.block_state(7)
+    assert set(d) == {"k", "v"}
+    np.testing.assert_array_equal(d["v"], want_v)
+
+
+def test_ticket_expires_when_later_flush_donates():
+    """The dispatch paths donate pool buffers, so a ticket's block state
+    is readable until the NEXT flush — after that, expired turns True
+    and reads raise a descriptive error (metadata survives)."""
+    eng = mk_engine(seed=5)
+    eng.alloc.mark_written([1, 2])
+    s = eng.stream()
+    s.memcopy([(1, 5)])
+    t1 = s.flush()
+    assert not t1.expired
+    t1.block_state(BlockRef("k", 5))     # readable before the next flush
+    s.memcopy([(2, 6)])
+    s.flush()
+    assert t1.expired
+    with pytest.raises(RuntimeError, match="expired"):
+        t1.block_state(BlockRef("k", 5))
+    with pytest.raises(RuntimeError, match="expired"):
+        t1.wait()
+    assert t1.launches == 1 and t1.commands == 1
+
+
+def test_engine_flush_inside_capture_targets_default_queue():
+    """engine.flush() is the seed-compat barrier on the DEFAULT stream:
+    calling it inside a capture must not split the capturing stream's
+    launch."""
+    eng = mk_engine(seed=7)
+    eng.alloc.mark_written([1])
+    s = eng.stream("round")
+    with s.capture():
+        eng.memcopy([(1, 5)])
+        assert eng.flush() == 0          # captured commands stay queued
+        assert len(s) == 1
+    assert s.flush().launches == 1
+
+
+def test_engine_surface_wraps_default_stream():
+    """Seed semantics survive: engine.memcopy flushes on return through
+    the default stream; batch() defers to one launch; engine.flush()
+    drains the default queue and returns the launch count."""
+    eng = mk_engine(seed=2)
+    eng.alloc.mark_written([1, 2])
+    with Hook() as mechs:
+        eng.memcopy([(1, 5)])           # eager: one launch on return
+    assert mechs == ["fused"]
+    assert eng.queue is eng.default_stream.queue
+    with Hook() as mechs, eng.batch():
+        eng.memcopy([(2, 6)])
+        eng.materialize_zeros([8])
+        assert mechs == []
+    assert mechs == ["fused"]
+    assert eng.flush() == 0             # drained at batch exit
+
+
+def test_streams_flush_independently():
+    """Two streams on disjoint blocks drain on their own schedules — no
+    global barrier."""
+    eng = mk_engine(seed=6)
+    eng.alloc.mark_written([1, 2])
+    a, b = eng.stream("a"), eng.stream("b")
+    a.memcopy([(1, 5)])
+    b.memcopy([(2, 9)])
+    ta = a.flush()
+    assert ta.launches == 1 and len(b) == 1   # b untouched by a's flush
+    tb = b.flush()
+    assert tb.launches == 1
+    assert eng.stats.cross_stream_flushes == 0
+
+
+# ---------------------------------------------------------------------------
+# cross-stream hazards
+# ---------------------------------------------------------------------------
+
+def test_cross_stream_conflict_serializes_writer_first():
+    """Reading a block another stream will write drains that stream
+    first, so the read observes the earlier stream's bytes."""
+    eng = mk_engine(seed=8)
+    eng.alloc.mark_written([3])
+    w, r = eng.stream("writer"), eng.stream("reader")
+    w.memcopy([(3, 8)])
+    r.memcopy([(8, 10)])                 # reads writer's pending dst 8
+    assert eng.stats.cross_stream_flushes == 1
+    assert len(w) == 0 and len(r) == 1   # writer drained, reader pending
+    r.flush()
+    np.testing.assert_array_equal(np.asarray(eng.pools["k"][10]),
+                                  np.asarray(eng.pools["k"][3]))
+
+
+def test_cross_stream_war_serializes_reader_first():
+    """Writing a block another stream will READ drains the reader first
+    (its gather must see the old bytes)."""
+    eng = mk_engine(seed=10)
+    eng.alloc.mark_written([4, 6])
+    old4 = np.asarray(eng.pools["k"][4])
+    rd, wr = eng.stream("rd"), eng.stream("wr")
+    rd.memcopy([(4, 12)])
+    wr.memcopy([(6, 4)])                 # overwrites rd's pending source
+    assert eng.stats.cross_stream_flushes == 1
+    assert len(rd) == 0                  # reader drained before the write
+    wr.flush()
+    np.testing.assert_array_equal(np.asarray(eng.pools["k"][12]), old4)
+
+
+def test_cross_stream_raf_does_not_serialize():
+    """Two streams READING one block (RAR) stay independent."""
+    eng = mk_engine(seed=12)
+    eng.alloc.mark_written([5])
+    a, b = eng.stream(), eng.stream()
+    a.memcopy([(5, 11)])
+    b.memcopy([(5, 13)])
+    assert eng.stats.cross_stream_flushes == 0
+    assert len(a) == 1 and len(b) == 1
+    a.flush(), b.flush()
+
+
+# ---------------------------------------------------------------------------
+# source-hazard tracking + overlap spacing
+# ---------------------------------------------------------------------------
+
+def test_war_on_source_admitted_and_spaced():
+    """A WAR pair shares one flush (no hazard flush), is counted, and the
+    flushed table carries a spacer row for the overlapped drain —
+    bitwise-identical to the seed fan-out."""
+    fused, legacy = mk_engine(seed=14), mk_engine(seed=14, use_fused=False)
+    for eng in (fused, legacy):
+        eng.alloc.mark_written([2, 7])
+        with Hook() as mechs, eng.batch():
+            eng.memcopy([(2, 5), (7, 2)])    # (7, 2) rewrites source 2
+        assert eng.queue.stats.hazard_flushes == 0
+        assert eng.queue.stats.war_hazards == 1
+        assert eng.queue.stats.spacer_rows == 1
+        if eng.use_fused:
+            assert mechs == ["fused"]    # the pair shares ONE launch
+    for n in fused.pools:
+        np.testing.assert_array_equal(np.asarray(fused.pools[n]),
+                                      np.asarray(legacy.pools[n]),
+                                      err_msg=n)
+
+
+def test_pending_read_write_introspection():
+    """has_pending_read/has_pending_write expose the tracked hazard keys,
+    including cross-pool staging reads."""
+    eng = mk_engine(seed=16)
+    eng.alloc.mark_written([1])
+    q = eng.queue
+    with eng.batch():
+        eng.memcopy([(1, 5)])
+        eng.memcopy_cross([(BlockRef("k_stage", 3), BlockRef("k", 9))])
+        ks = eng.group.index("k_stage")
+        assert q.has_pending_read((ALL_PRIMARY, 1))
+        assert q.has_pending_write((ALL_PRIMARY, 5))
+        assert q.has_pending_read((ks, 3))
+        assert not q.has_pending_read((ks, 2))
+        assert not q.has_pending_write((ALL_PRIMARY, 1))
+    assert not q.has_pending_read((ALL_PRIMARY, 1))   # cleared by flush
+
+
+def test_space_war_rows_unit():
+    """The spacer pass inserts exactly one NOP between an adjacent WAR
+    pair and leaves independent neighbours alone."""
+    locate = lambda gid: (0, gid)      # single-pool decode
+    primary = (True,)
+    rows = [(OP_FPM_COPY, 2, 5), (OP_FPM_COPY, 7, 2),   # WAR: adjacent
+            (OP_FPM_COPY, 9, 11),                        # independent
+            (OP_ZERO_INIT, -1, 9)]                       # WAR on 9: spaced
+    spaced = space_war_rows(rows, locate, primary)
+    assert spaced == [(OP_FPM_COPY, 2, 5), (OP_NOP, -1, -1),
+                      (OP_FPM_COPY, 7, 2), (OP_FPM_COPY, 9, 11),
+                      (OP_NOP, -1, -1), (OP_ZERO_INIT, -1, 9)]
+    # already-spaced input is a fixed point
+    assert space_war_rows(spaced, locate, primary) == spaced
+
+
+def test_stage_slots_guarded_by_pending_reads():
+    """A staging slot whose promotion is queued on one stream stays out
+    of the free list while OTHER streams flush; it recycles only when
+    its own stream drains the pending read."""
+    eng = mk_engine(seed=18)
+    serve, other = eng.stream("serve"), eng.stream("other")
+    eng.alloc.mark_written([1])
+    slots = eng.stage_blocks(2)
+    serve.promote_staged([(slots[0], 4), (slots[1], 6)])
+    other.memcopy([(1, 9)])
+    other.flush()                        # unrelated flush: slots still held
+    assert all(s not in eng._stage_free for s in slots)
+    serve.flush()
+    assert all(s in eng._stage_free for s in slots)
+
+
+def test_minting_streams_is_free():
+    """The engine tracks only queues with PENDING work: minting many
+    short-lived streams (a stream per request) leaves no registry
+    growth, so per-enqueue guard cost stays bounded."""
+    eng = mk_engine(seed=24)
+    eng.alloc.mark_written([1])
+    for i in range(50):
+        s = eng.stream()
+        s.memcopy([(1, 5)])
+        assert len(eng._live_queues) >= 1
+        s.flush()
+    assert eng._live_queues == {}        # every drained queue dropped
+    # a queue re-enters the live set on its next enqueue
+    eng.memcopy([(1, 6)])                # eager default stream: in + out
+    assert eng._live_queues == {}
+
+
+def test_memcopy_cross_int_shim_is_gone():
+    """The deprecated (pairs, src_pool, dst_pool) form no longer exists —
+    BlockRef pairs are the only calling convention."""
+    eng = mk_engine(seed=20)
+    with pytest.raises(TypeError):
+        eng.memcopy_cross([(1, 2)], "k", "v")
+    with pytest.raises(TypeError):
+        eng.memcopy_cross([(1, 2)])
+
+
+def test_stream_capture_routes_engine_calls():
+    """capture() redirects public engine calls onto the stream: the
+    serving engine's pattern (cache-driven CoW work riding the round
+    stream)."""
+    eng = mk_engine(seed=22)
+    eng.alloc.mark_written([2])
+    s = eng.stream("round")
+    with Hook() as mechs:
+        with s.capture():
+            eng.memcopy([(2, 6)])        # would flush eagerly outside
+            eng.materialize_zeros([11])
+        assert mechs == [] and len(s) == 2   # copy + zero land on stream
+        t = s.flush()
+    assert mechs == ["fused"] and t.commands == 2

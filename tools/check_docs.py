@@ -20,6 +20,16 @@ import sys
 PACKAGES = ("repro.core", "repro.kernels", "repro.models.paged",
             "repro.launch")
 
+#: load-bearing public symbols that must EXIST (and hence get linted):
+#: guards against the async-stream API surface silently disappearing or
+#: moving without a docs/tooling update
+REQUIRED_SYMBOLS = (
+    "repro.core.stream.CommandStream",
+    "repro.core.stream.FlushTicket",
+    "repro.core.cmdqueue.space_war_rows",
+    "repro.models.paged.pool_partition_spec",
+)
+
 #: dataclass-generated or inherited members that need no prose of their own
 SKIP_METHODS = {"__init__"}
 
@@ -47,6 +57,14 @@ def check_symbol(qualname, obj, missing):
 
 def main() -> int:
     missing = []
+    for qual in REQUIRED_SYMBOLS:
+        mod_name, _, sym = qual.rpartition(".")
+        try:
+            obj = getattr(importlib.import_module(mod_name), sym)
+        except (ImportError, AttributeError):
+            missing.append(f"{qual} (required symbol missing)")
+            continue
+        check_symbol(qual, obj, missing)
     for pkg in PACKAGES:
         for mod_name, mod in iter_modules(pkg):
             if not (mod.__doc__ and mod.__doc__.strip()):
