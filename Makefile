@@ -7,6 +7,9 @@
 #                       fork 8-host-device subprocesses themselves; the
 #                       exported XLA_FLAGS also covers any future
 #                       in-process mesh test)
+#   make test-fault   - failure-injection and recovery suite only
+#                       (ticket journal replay, checkpoint restore,
+#                       FaultPlan scenarios)
 #   make test-fast    - tier-1 minus tests marked `slow`
 #   make check-docs   - fail if a public core/ or kernels/ symbol lacks a
 #                       docstring (tools/check_docs.py)
@@ -14,21 +17,26 @@
 #   make bench-serve  - serve_round CI gate: fails if the fused serving
 #                       paths regress above 1.0 launch/round, if
 #                       double-buffered burst-admission rounds exceed
-#                       1.0 launch/round, or if ring/burst decode stops
-#                       matching the baseline greedy tokens
+#                       1.0 launch/round, if ring/burst decode stops
+#                       matching the baseline greedy tokens, or if the
+#                       fault_recovery leg stops restoring 1.0
+#                       launch/round + bitwise tokens within 2 rounds
 #   make bench        - full paper-figure benchmark sweep
 
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 PY := PYTHONPATH=$(PYTHONPATH) python
 MESH_FLAGS := XLA_FLAGS=--xla_force_host_platform_device_count=8
 
-.PHONY: test test-mesh test-fast check-docs bench-smoke bench-serve bench
+.PHONY: test test-mesh test-fault test-fast check-docs bench-smoke bench-serve bench
 
-test: check-docs test-mesh
-	$(PY) -m pytest -x -q -m "not mesh"
+test: check-docs test-mesh test-fault
+	$(PY) -m pytest -x -q -m "not mesh and not fault"
 
 test-mesh:
 	$(MESH_FLAGS) $(PY) -m pytest -x -q -m mesh
+
+test-fault:
+	$(PY) -m pytest -x -q -m fault
 
 test-fast:
 	$(PY) -m pytest -x -q -m "not slow"

@@ -20,12 +20,17 @@ full-twin path in ``summary.ring_tokens_match``).  Schema v5 adds the
 ``burst_admission`` serve_round leg: rounds admitting MORE staged pages
 than the ring's nominal capacity, single-buffered (early-flush launch)
 vs double-buffered (shadow half absorbs the burst at 1.0 launches/round,
-the CommandStream/source-hazard redesign headline).
+the CommandStream/source-hazard redesign headline).  Schema v6 adds the
+``fault_recovery`` leg: a reference serve run vs one with an injected
+launch failure + donated-admission error, auto-recovered from the ticket
+journal and the background checkpoint stream — greedy tokens must stay
+bitwise-identical (in admission order) and the serve flush must return
+to <= 1 launch/round within 2 rounds.
 
 Emits ``BENCH_dispatch.json``:
 
 {
-  "schema": "bench_dispatch/v5",
+  "schema": "bench_dispatch/v6",
   "backend": "cpu" | "tpu",
   "block": [page, KVH, D], "nblk": int, "pools": ["k", "v"],
   "rows": [{
@@ -73,6 +78,18 @@ Emits ``BENCH_dispatch.json``:
           }],
           "summary": {"launches_single": float, "launches_double": float,
                       "tokens_match": bool}  # double == single, bitwise
+      },
+      "fault_recovery": {      # injected failures + in-place recovery
+          "rounds": int, "fault_round": int, "readmit_round": int,
+          "ckpt_pages": int,   # spill blocks per pool (background ckpt)
+          "injections": ["launch_failure", "donation_error"],
+          "serve_launches_ref": [int],    # per-round serve-flush launches
+          "serve_launches_fault": [int],  # -1 = flush failed + recovered
+          "summary": {"tokens_match": bool,      # vs the reference run
+                      "rounds_to_recover": int,  # <= 2 gated by smoke
+                      "evicted": int,            # admissions re-admitted
+                      "max_launches_post_recovery": int,
+                      "ckpt_active": bool}  # ckpt stream kept ticking
       },
       "mesh": {"devices": 8, "mesh_shape": [2, 4],    # sharded-batch leg
                "rows": [...], "summary": {...}} | null
@@ -197,6 +214,15 @@ SERVE_PATHS = (("fused_staging", True, 0),
 BURST_RING_PAGES = 2
 BURST_ADMITS = 3
 BURST_ROUNDS = 4
+
+#: fault_recovery leg: a reference serve run vs one with an injected
+#: launch failure (FAULT_ROUND) and a donated-admission error
+#: (FAULT_READMIT_ROUND), auto-recovered in place with a background
+#: checkpoint stream of FAULT_CKPT_PAGES spill blocks per pool
+FAULT_ROUNDS = 6
+FAULT_ROUND = 1
+FAULT_READMIT_ROUND = 3
+FAULT_CKPT_PAGES = 8
 
 
 def _bench_serve_path(path: str, fused_staging: bool,
@@ -330,6 +356,93 @@ def _run_burst_section() -> Dict:
     }
 
 
+def _drive_fault_rounds(eng, prompts, plan=None):
+    """Drive FAULT_ROUNDS serving rounds, injecting the plan's failures
+    at FAULT_ROUND (launch failure on the round's next drain) and
+    FAULT_READMIT_ROUND (donation error on the third admission, then
+    re-admission of the evicted prompt).  Returns (tokens in admission
+    order, per-round serve-flush launches with -1 marking a round whose
+    flush failed and recovered)."""
+    from repro.runtime.fault import InjectedFault
+    order, serve_launches = [], []
+    for p in prompts[:2]:
+        order.append(eng.add_request(p))
+    for r in range(FAULT_ROUNDS):
+        if plan is not None and r == FAULT_ROUND:
+            plan.launch_failures += (eng.engine.next_flush_index,)
+        if r == FAULT_READMIT_ROUND:
+            if plan is not None:
+                plan.donation_errors += (eng._admission_ordinal,)
+                try:
+                    eng.add_request(prompts[2])
+                except InjectedFault:
+                    pass        # evicted; re-admitted below
+            order.append(eng.add_request(prompts[2]))
+        eng.decode_round()
+        t = eng.last_ticket     # None = the round's flush failed and
+        # recover() ran (recovery resets the ticket); its launches are
+        # the round's serve-stream accounting otherwise
+        serve_launches.append(int(t.launches) if t is not None else -1)
+    return ([eng.tokens[s] for s in order if s in eng.tokens],
+            serve_launches)
+
+
+def _run_fault_section() -> Dict:
+    """fault_recovery serve leg (CPU): greedy tokens under injected
+    failures + auto-recovery must match the failure-free run bitwise (in
+    admission order — the evicted admission re-admits under a new sid),
+    and the serve flush must return to <= 1 launch/round within
+    ``rounds_to_recover`` rounds of each fault.  Both engines run the
+    background checkpoint stream so the rows stay comparable."""
+    import tempfile
+
+    from repro.configs import get_config
+    from repro.launch.serve import ServingEngine
+    from repro.models import build_model, split_params
+    from repro.runtime.fault import FaultPlan
+    cfg = get_config(SERVE_ARCH).reduced()
+    model = build_model(cfg)
+    params, _ = split_params(model.init_params(jax.random.key(0)))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(2, cfg.vocab_size, size=24).astype(np.int32)
+               for _ in range(3)]
+
+    def mk(plan):
+        return ServingEngine(
+            cfg, params, max_seqs=8, max_blocks_per_seq=SERVE_MAX_BLOCKS,
+            fault_plan=plan, auto_recover=plan is not None,
+            ckpt_pages=FAULT_CKPT_PAGES,
+            ckpt_dir=tempfile.mkdtemp(prefix="bench_fault_ckpt_"))
+
+    ref_tokens, ref_launches = _drive_fault_rounds(mk(None), prompts)
+    plan = FaultPlan()
+    eng = mk(plan)
+    tokens, launches = _drive_fault_rounds(eng, prompts, plan)
+    # rounds after the fault round until the serve flush succeeds again
+    # at <= 1 launch (0 = the fault round itself still flushed cleanly)
+    rounds_to_recover = next(
+        (i for i, l in enumerate(launches[FAULT_ROUND:])
+         if 0 <= l <= 1), len(launches))
+    return {
+        "rounds": FAULT_ROUNDS,
+        "fault_round": FAULT_ROUND,
+        "readmit_round": FAULT_READMIT_ROUND,
+        "ckpt_pages": FAULT_CKPT_PAGES,
+        "injections": [k for k, _ in plan.fired],
+        "serve_launches_ref": ref_launches,
+        "serve_launches_fault": launches,
+        "summary": {
+            "tokens_match": tokens == ref_tokens,
+            "rounds_to_recover": int(rounds_to_recover),
+            "evicted": len(eng.evicted_sids),
+            "max_launches_post_recovery": int(
+                max(launches[FAULT_ROUND + 1:])),
+            "ckpt_active": bool(eng.pool_ckpt._cursor > 0
+                                or eng.pool_ckpt.passes > 0),
+        },
+    }
+
+
 def _serve_summary(rows: List[Dict]) -> Dict:
     """Cross-path summary; strips the private ``_tokens`` keys in place."""
     f = next(r for r in rows if r["path"] == "fused_staging")
@@ -368,6 +481,7 @@ def _run_serve_section(skip_mesh: bool) -> Optional[Dict]:
         "rows": rows,
         "summary": _serve_summary(rows),
         "burst_admission": _run_burst_section(),
+        "fault_recovery": _run_fault_section(),
         "mesh": None,
     }
     if skip_mesh:
@@ -459,7 +573,7 @@ def run(skip_mesh: bool = False, skip_serve: bool = False) -> Dict:
     speedup = (np.mean([r["us_per_flush"] for r in small_s]) /
                np.mean([r["us_per_flush"] for r in small_f]))
     return {
-        "schema": "bench_dispatch/v5",
+        "schema": "bench_dispatch/v6",
         "backend": jax.default_backend(),
         "block": list(BLOCK),
         "nblk": NBLK,
@@ -506,6 +620,15 @@ def _print_serve(section: Dict) -> None:
               f"{b['launches_double']:.2f} double vs "
               f"{b['launches_single']:.2f} single launches/round "
               f"(tokens match: {b['tokens_match']})")
+    fault = section.get("fault_recovery")
+    if fault:
+        fs = fault["summary"]
+        print(f"  fault recovery ({', '.join(fault['injections'])}): "
+              f"tokens match {fs['tokens_match']}, recovered in "
+              f"{fs['rounds_to_recover']} round(s), {fs['evicted']} "
+              f"evicted/re-admitted, post-recovery serve launches "
+              f"<= {fs['max_launches_post_recovery']}, ckpt stream "
+              f"active: {fs['ckpt_active']}")
 
 
 def serve_smoke() -> int:
@@ -540,6 +663,20 @@ def serve_smoke() -> int:
     if not burst["summary"]["tokens_match"]:
         print("FAIL: double-buffered burst greedy tokens diverged from "
               "single-buffered")
+        ok = False
+    fault = section["fault_recovery"]["summary"]
+    if not fault["tokens_match"]:
+        print("FAIL: fault-injected serve run's greedy tokens diverged "
+              "from the failure-free run")
+        ok = False
+    if fault["rounds_to_recover"] > 2:
+        print(f"FAIL: recovery took {fault['rounds_to_recover']} rounds "
+              "to restore a clean serve flush (> 2)")
+        ok = False
+    if fault["max_launches_post_recovery"] > 1:
+        print(f"FAIL: post-recovery serve rounds issue "
+              f"{fault['max_launches_post_recovery']} bulk-movement "
+              "launches (> 1.0/round)")
         ok = False
     if ok:
         print("bench-serve smoke OK: fused serve rounds still drain as "

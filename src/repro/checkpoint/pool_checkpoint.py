@@ -1,0 +1,179 @@
+"""Incremental KV-pool checkpoints riding a background command stream.
+
+RowClone §3.1 frames process checkpointing as a bulk-copy workload: the
+bytes to persist are copied *inside memory* first, so the running process
+never stops for the slow half (host I/O).  :class:`PoolCheckpoint` is
+that shape for the serving engine's KV pools:
+
+* Each :meth:`step` call copies the next **window** of primary-pool
+  blocks into a small ``spill`` pool (``PoolSpec(role="spill")`` — the
+  checkpoint destination, reachable only through cross-pool commands) as
+  ordinary ``OP_CROSS_POOL_COPY`` traffic on a dedicated ``"ckpt"``
+  :class:`~repro.core.stream.CommandStream`.  The copies ride the fused
+  dispatch path like any other bulk movement — one launch per window.
+* The window copied at step *N* is harvested to a host mirror at step
+  *N+1* (FlushTicket pipelining: the device copy overlaps the decode
+  rounds in between).  Tickets are **write-scoped** (``FlushTicket.wait``
+  blocks on the pools the flush touched — here, the spill pools only),
+  so harvesting never serializes against the decode path's donated
+  primary buffers.
+* When the cursor completes a full pass over the pool, the assembled
+  mirror persists through the :class:`~repro.checkpoint.manager.
+  CheckpointManager` (atomic tmp→rename, background thread) as one
+  restorable :class:`~repro.core.journal.PoolSnapshot`.
+
+Consistency: a pass assembled while decode keeps mutating the pools is a
+*fuzzy* snapshot — blocks were captured at different flush indices.  The
+serving recovery path (launch/serve.py) therefore uses these snapshots
+only to restore DEAD pools and reproduces in-flight sequences by
+eviction + re-admission; the bitwise snapshot+replay contract
+(core/journal.py) applies when the pass ran quiesced.  The snapshot's
+``index`` is stamped with the ckpt flush index of the pass's last
+window.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.journal import PoolSnapshot
+from repro.core.poolspec import BlockRef
+
+
+class PoolCheckpoint:
+    """Windowed, stream-backed checkpointing of an engine's primary pools.
+
+    ``engine`` must carry at least one ``spill``-role pool (its
+    ``paired`` primary is what gets checkpointed; serving builds them via
+    ``make_serving_pools(ckpt_nblk=...)``).  ``window`` bounds blocks
+    copied per step (default: the spill pool's capacity).  Drive it with
+    one :meth:`step` per decode round; call :meth:`latest` at recovery
+    time and :meth:`reset` after a recovery invalidated in-flight
+    state."""
+
+    def __init__(self, engine, manager: CheckpointManager,
+                 window: Optional[int] = None):
+        spill = {spec.paired: spec.name for spec in engine.group
+                 if spec.role == "spill"}
+        if not spill:
+            raise ValueError(
+                "PoolCheckpoint needs spill pools (PoolSpec(role='spill') "
+                "paired with the primaries to checkpoint); serving builds "
+                "them with make_serving_pools(ckpt_nblk=...)")
+        self.engine = engine
+        self.manager = manager
+        self.spill: Dict[str, str] = spill   # primary name -> spill name
+        self.nblk = engine.num_blocks
+        cap = min(engine.group[s].nblk for s in spill.values())
+        self.window = min(int(window), cap) if window else cap
+        #: the background checkpoint stream — its flushes are ordinary
+        #: engine drains (journaled, hazard-tracked, fused)
+        self.stream = engine.stream("ckpt")
+        self._cursor = 0
+        self._passes = 0          # completed full passes (= save steps)
+        self._inflight = None     # (ticket, start, count)
+        self._pass_index = -1     # last harvested ckpt flush index
+        self._mirror: Dict[str, np.ndarray] = {
+            name: np.zeros(*engine._pool_layouts[name][:2])
+            for name in spill}
+
+    # ------------------------------------------------------------------
+    @property
+    def passes(self) -> int:
+        """Completed full passes over the pools (one save each)."""
+        return self._passes
+
+    def _harvest(self) -> None:
+        """Pull the previous window's spill bytes into the host mirror."""
+        if self._inflight is None:
+            return
+        ticket, start, w = self._inflight
+        self._inflight = None
+        try:
+            # write-scoped wait: blocks on the SPILL pools only, so a
+            # decode step that donated the primaries in between does not
+            # expire this ticket
+            ticket.wait()
+        except RuntimeError:
+            # a later flush donated the spill buffers too (pool-churn
+            # rounds re-launch the fused drain over every pool); the
+            # bytes were carried forward — np.asarray below synchronizes
+            pass
+        ba = self.engine.block_axis
+        for pname, sname in self.spill.items():
+            spill_arr = np.asarray(self.engine.pools[sname])
+            got = spill_arr[:w] if ba == 0 else spill_arr[:, :w]
+            if ba == 0:
+                self._mirror[pname][start:start + w] = got
+            else:
+                self._mirror[pname][:, start:start + w] = got
+        self._pass_index = ticket.index
+
+    def _save_pass(self) -> None:
+        self.manager.save(self._passes, {
+            "index": np.asarray(self._pass_index, np.int64),
+            "pools": {k: v.copy() for k, v in self._mirror.items()}})
+        self._passes += 1
+        self._cursor = 0
+
+    def step(self) -> Optional[object]:
+        """One checkpoint tick: harvest the in-flight window, persist the
+        pass if it just completed, enqueue + flush the next window on the
+        ckpt stream.  Returns the window's
+        :class:`~repro.core.stream.FlushTicket` (None when the engine has
+        no blocks to copy this tick)."""
+        self._harvest()
+        if self._cursor >= self.nblk:
+            self._save_pass()
+        start = self._cursor
+        w = min(self.window, self.nblk - start)
+        if w <= 0:
+            return None
+        pairs = [(BlockRef(pname, start + j), BlockRef(sname, j))
+                 for pname, sname in self.spill.items()
+                 for j in range(w)]
+        self.stream.memcopy_cross(pairs)
+        ticket = self.stream.flush()
+        self._inflight = (ticket, start, w)
+        self._cursor = start + w
+        return ticket
+
+    def drain(self) -> None:
+        """Finish the current pass synchronously (harvest + copy the
+        remaining windows + persist) — the quiesced, exact-snapshot path
+        used by tests and orderly shutdown."""
+        while self._cursor < self.nblk:
+            self.step()
+        self._harvest()
+        self._save_pass()
+        self.manager.wait()
+
+    # ------------------------------------------------------------------
+    def latest(self) -> Optional[PoolSnapshot]:
+        """Most recent persisted pass as a
+        :class:`~repro.core.journal.PoolSnapshot` (None before the first
+        full pass).  Covers the checkpointed primaries only — recovery
+        resurrects staging/spill pools as zeros and re-admits."""
+        self.manager.wait()
+        step = self.manager.latest_step()
+        if step is None:
+            return None
+        example = {
+            "index": np.asarray(0, np.int64),
+            "pools": {name: np.zeros(*self.engine._pool_layouts[name][:2])
+                      for name in self.spill}}
+        tree, _ = self.manager.restore(example, step)
+        return PoolSnapshot(index=int(tree["index"]),
+                            arrays=dict(tree["pools"]))
+
+    def reset(self) -> None:
+        """Drop in-flight window state after a recovery (the spill pools
+        may have been resurrected; the interrupted pass restarts from
+        block 0).  Persisted passes are untouched."""
+        self._inflight = None
+        self._cursor = 0
+
+
+__all__ = ["PoolCheckpoint"]

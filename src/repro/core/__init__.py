@@ -8,6 +8,8 @@ from repro.core.cmdqueue import (BUCKETS, CommandQueue, QueueStats,
                                  ShardPlan, bucket_size, fold_shard_plan,
                                  partition_commands)
 from repro.core.cow_cache import PagedCoWCache, Sequence
+from repro.core.journal import (AbortedFlush, JournalRecord, PoolSnapshot,
+                                RecoveryError, RecoveryReport, TicketJournal)
 from repro.core.poolspec import BlockRef, PoolGroup, PoolSpec
 from repro.core.rowclone import EngineStats, RowCloneEngine
 from repro.core.stream import CommandStream, FlushTicket
@@ -32,4 +34,10 @@ __all__ = [
     "PoolGroup",
     "EngineStats",
     "RowCloneEngine",
+    "TicketJournal",
+    "JournalRecord",
+    "PoolSnapshot",
+    "AbortedFlush",
+    "RecoveryError",
+    "RecoveryReport",
 ]

@@ -382,6 +382,8 @@ class CommandQueue:
     def __init__(self, engine):
         self.engine = engine
         self.stats = QueueStats()
+        #: display name for journal records (CommandStream sets its own)
+        self.name = "anon"
         self._cmds: List[Tuple[int, int, int]] = []
         # pending destination writes / source reads: block id -> set of
         # pool indices (ALL_PRIMARY = the block in every primary pool)
@@ -482,9 +484,9 @@ class CommandQueue:
     def flush(self) -> int:
         """Drain every pending command.  Returns the number of device
         launches issued (0 when the queue was empty, 1 per bucket-padded
-        chunk otherwise).  The flushed rows are WAR-spaced
-        (:func:`space_war_rows`) before chunking, so the fused kernel's
-        overlapped drain never sees an adjacent write-after-read pair."""
+        chunk otherwise).  WAR-spacing, chunking, dispatch, and the
+        journal record live in the engine's ``_drain_rows`` — one drain
+        path shared with journal replay and aborted-flush re-drains."""
         if not self._cmds:
             return 0
         cmds, self._cmds = self._cmds, []
@@ -493,29 +495,28 @@ class CommandQueue:
         drained = getattr(self.engine, "_note_drained", None)
         if drained is not None:
             drained(self)   # empty again: leave the engine's live set
-        group = self.engine.group
-        if getattr(self.engine, "_flush_spacing", lambda: True)():
-            # single-slab drains consume the spacing directly; the
-            # mesh-partitioned path strips global NOPs and re-spaces per
-            # slab sub-table, so spacing here would only eat chunk budget
-            spaced = space_war_rows(cmds, group.locate, group.primary)
-            self.stats.spacer_rows += len(spaced) - len(cmds)
-        else:
-            spaced = cmds
-        launches = 0
-        top = BUCKETS[-1]
-        for lo in range(0, len(spaced), top):
-            chunk = spaced[lo:lo + top]
-            table = np.full((bucket_size(len(chunk)), 3), OP_NOP, np.int32)
-            table[:len(chunk)] = np.asarray(chunk, np.int32)
-            launches += self.engine._dispatch_table(table, len(chunk),
-                                                    queue=self)
+        launches = self.engine._drain_rows(cmds, queue=self)
         self.stats.flushes += 1
         self.stats.launches += launches
         after = getattr(self.engine, "_after_flush", None)
         if after is not None:
             after(self)
         return launches
+
+    def abort(self) -> List[Tuple[int, int, int]]:
+        """Discard every pending command WITHOUT dispatching — the
+        recovery path's eviction primitive (``RowCloneEngine.recover``
+        drops queued work whose inputs died, e.g. promotions out of a
+        poisoned staging ring).  Clears the hazard maps and leaves the
+        engine's live set; returns the dropped rows so the caller can
+        account for (or selectively re-enqueue) them."""
+        cmds, self._cmds = self._cmds, []
+        self._pending_dsts = {}
+        self._pending_srcs = {}
+        drained = getattr(self.engine, "_note_drained", None)
+        if drained is not None:
+            drained(self)
+        return cmds
 
 
 __all__ = [

@@ -1,0 +1,171 @@
+"""Ticket journal — the engine's replayable flush log.
+
+RowClone §1 names checkpointing and VM cloning as killer workloads for
+bulk in-DRAM movement: both are *restore* problems — the bytes must be
+reproducible after a failure, not just fast to move.  The engine's flush
+path is already deterministic (a drained command table maps pool state to
+pool state with no host randomness), so fault tolerance reduces to
+logging what was drained: every successful flush appends one
+:class:`JournalRecord` — the exact (WAR-spaced) rows the dispatch loop
+consumed, the flush's engine-wide index, its ShardPlan signature, and
+launch accounting — to a bounded :class:`TicketJournal` ring.
+
+Recovery composes two primitives:
+
+* :class:`PoolSnapshot` — host copies of the pool arrays, stamped with
+  the last flush index they include (``RowCloneEngine.snapshot()``, or
+  assembled incrementally by the background checkpoint stream —
+  checkpoint/pool_checkpoint.py).
+* :meth:`TicketJournal.replay` — re-drains every record after a
+  snapshot's index onto the restored pools.  Because records hold the
+  spaced rows verbatim (replay passes them through pre-spaced), the
+  replayed drains build bitwise-identical tables and hence
+  bitwise-identical block state.
+
+What the journal does NOT cover: out-of-band pool writes that bypass the
+command queue — the serving engine's decode-step jit and the prefill
+staging scatter assign ``engine.pools[...]`` directly.  Those bytes are
+reproduced by re-running their producers (recovery evicts and re-admits
+the affected sequences), never by replay; a snapshot taken at a quiesced
+flush boundary is exact.  See docs/ARCHITECTURE.md "Failure model and
+recovery".
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class JournalRecord:
+    """One drained flush, as the dispatch loop actually consumed it.
+
+    ``rows`` are the WAR-spaced ``(opcode, src, dst)`` rows (spacer
+    ``OP_NOP`` rows included) — replay feeds them back pre-spaced, so the
+    rebuilt tables are bitwise-identical to the original drain.  An
+    ``aborted`` record holds only the chunks that dispatched before a
+    mid-flush failure; the undispatched suffix is stashed on the engine
+    (``RowCloneEngine.recover`` re-drains it as a fresh record)."""
+
+    stream: str                       #: name of the draining stream/queue
+    index: int                        #: engine-wide flush index
+    rows: Tuple[Tuple[int, int, int], ...]  #: spaced rows, as dispatched
+    plan_sig: Optional[Tuple] = None  #: (n_shards, deltas, slot bucket) of
+    #: the sharded drain's ShardPlan; None for single-device flushes
+    launches: int = 0                 #: device launches the drain issued
+    war_hazards: int = 0              #: queue's cumulative WAR admissions
+    spacer_rows: int = 0              #: queue's cumulative spacer rows
+    aborted: bool = False             #: True = prefix of a failed flush
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolSnapshot:
+    """Host copies of pool arrays, consistent through flush ``index``.
+
+    ``arrays`` maps pool name -> np.ndarray; a snapshot need not cover
+    every pool (the checkpoint stream snapshots primary pools only —
+    staging bytes are reproduced by re-admission, not restore).  Replay
+    applies journal records with ``record.index > index``."""
+
+    index: int
+    arrays: Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class AbortedFlush:
+    """The undispatched remainder of a flush that failed mid-drain.
+
+    Stashed by the engine's drain loop (pool buffers are still valid —
+    the per-chunk drain guard fires *before* the donating dispatch);
+    ``RowCloneEngine.recover`` re-drains ``suffix`` (already WAR-spaced)
+    with retry/backoff."""
+
+    queue: str                        #: name of the flushing queue
+    index: int                        #: the failed flush's index
+    rows: Tuple[Tuple[int, int, int], ...]    #: full raw rows, pre-spacing
+    suffix: Tuple[Tuple[int, int, int], ...]  #: spaced rows not dispatched
+
+
+class RecoveryError(RuntimeError):
+    """Recovery exhausted its retries (or had nothing left to restore
+    from) — the engine could not be returned to a serviceable state."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryReport:
+    """What one ``RowCloneEngine.recover()`` pass did."""
+
+    evicted_rows: int         #: queued commands dropped from live streams
+    evicted_promotions: int   #: of those, staging→primary promotions
+    pools_restored: Tuple[str, ...]  #: pools restored from the snapshot
+    pools_lost: Tuple[str, ...]      #: dead pools resurrected as zeros
+    replayed_flushes: int     #: journal records re-drained
+    redrained_flushes: int    #: aborted-flush suffixes re-drained
+    retries: int              #: failed re-drain attempts before success
+    degraded: bool            #: True = staging ring in degraded capacity
+
+
+class TicketJournal:
+    """Bounded in-engine log of drained flushes.
+
+    A deque ring of :class:`JournalRecord`\\ s: every successful
+    ``_drain_rows`` appends one (aborted flushes append their dispatched
+    prefix), oldest records fall off past ``capacity``.  Restore-time
+    contract: a :class:`PoolSnapshot` is replayable only while every
+    record after its index is still in the ring — size the capacity to
+    cover at least one full checkpoint interval."""
+
+    def __init__(self, capacity: int = 256):
+        self.capacity = capacity
+        self._records: collections.deque = collections.deque(
+            maxlen=capacity)
+
+    def __len__(self) -> int:
+        return len(self._records)
+
+    def append(self, record: JournalRecord) -> None:
+        """Append one flush record (oldest falls off past capacity)."""
+        self._records.append(record)
+
+    @property
+    def records(self) -> Tuple[JournalRecord, ...]:
+        """The retained records, oldest first."""
+        return tuple(self._records)
+
+    @property
+    def head_index(self) -> int:
+        """Flush index of the oldest retained record (-1 when empty) —
+        a snapshot older than this is no longer replayable."""
+        return self._records[0].index if self._records else -1
+
+    @property
+    def last_index(self) -> int:
+        """Flush index of the newest retained record (-1 when empty)."""
+        return self._records[-1].index if self._records else -1
+
+    def since(self, index: int) -> List[JournalRecord]:
+        """Records with ``record.index > index``, oldest first."""
+        return [r for r in self._records if r.index > index]
+
+    def replay(self, engine, after: int = -1) -> int:
+        """Re-drain every record after flush ``after`` onto the engine's
+        (restored) pools, in order.  Records carry the spaced rows as
+        dispatched, so the rebuilt tables — and the resulting block
+        state — are bitwise-identical to the original drains.  Returns
+        the number of flushes replayed."""
+        todo = self.since(after)
+        for rec in todo:
+            engine._drain_rows(list(rec.rows), record=False,
+                               pre_spaced=True)
+        return len(todo)
+
+
+__all__ = [
+    "JournalRecord",
+    "PoolSnapshot",
+    "AbortedFlush",
+    "RecoveryError",
+    "RecoveryReport",
+    "TicketJournal",
+]

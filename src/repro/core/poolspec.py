@@ -43,10 +43,13 @@ class PoolSpec:
     halves serving memory).  ``block_shape``/``dtype`` describe one block
     (every axis except the block axis) and are metadata: the arrays
     themselves live in the engine's pool dict.  ``role`` is ``"primary"``
-    (plain opcodes move the named block here) or ``"staging"`` (reachable
-    only through cross-pool commands); a staging spec names its primary
-    twin in ``paired``.  ``sharding`` is an optional hint naming the mesh
-    axes the block axis shards over (the serving layout uses
+    (plain opcodes move the named block here), ``"staging"`` (reachable
+    only through cross-pool commands; prefill pages park here before
+    promotion), or ``"spill"`` (also cross-pool-only; the background
+    checkpoint stream's snapshot destination — see
+    checkpoint/pool_checkpoint.py).  Staging and spill specs name their
+    primary twin in ``paired``.  ``sharding`` is an optional hint naming
+    the mesh axes the block axis shards over (the serving layout uses
     ``("pod", "data", "model")``)."""
 
     name: str
@@ -60,12 +63,12 @@ class PoolSpec:
     def __post_init__(self):
         if self.nblk <= 0:
             raise ValueError(f"pool {self.name!r}: nblk={self.nblk} <= 0")
-        if self.role not in ("primary", "staging"):
+        if self.role not in ("primary", "staging", "spill"):
             raise ValueError(f"pool {self.name!r}: unknown role "
                              f"{self.role!r}")
-        if self.role == "staging" and not self.paired:
-            raise ValueError(f"staging pool {self.name!r} must name its "
-                             "primary twin in `paired`")
+        if self.role in ("staging", "spill") and not self.paired:
+            raise ValueError(f"{self.role} pool {self.name!r} must name "
+                             "its primary twin in `paired`")
 
 
 @dataclasses.dataclass(frozen=True, order=True)
@@ -97,11 +100,11 @@ class PoolGroup:
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate pool names: {names}")
         for s in specs:
-            if s.role == "staging":
+            if s.role in ("staging", "spill"):
                 twin = next((p for p in specs if p.name == s.paired), None)
                 if twin is None or twin.role != "primary":
                     raise ValueError(
-                        f"staging pool {s.name!r} pairs with "
+                        f"{s.role} pool {s.name!r} pairs with "
                         f"{s.paired!r}, which is not a primary pool")
         # plain opcodes carry ONE block id for every primary pool, so the
         # primary pools must share a single address space; enforcing it

@@ -54,6 +54,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import functools
+import time
 import warnings
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
@@ -63,13 +64,16 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.core.allocator import SubarrayAllocator
-from repro.core.cmdqueue import (CommandQueue, OP_BASELINE_COPY,
-                                 OP_CROSS_POOL_COPY, OP_FPM_COPY, OP_PSM_COPY,
-                                 OP_ZERO_INIT, partition_commands)
+from repro.core.cmdqueue import (BUCKETS, CommandQueue, OP_BASELINE_COPY,
+                                 OP_CROSS_POOL_COPY, OP_FPM_COPY, OP_NOP,
+                                 OP_PSM_COPY, OP_ZERO_INIT, bucket_size,
+                                 partition_commands, space_war_rows)
+from repro.core.journal import (AbortedFlush, JournalRecord, PoolSnapshot,
+                                RecoveryError, RecoveryReport, TicketJournal)
 from repro.core.poolspec import BlockRef, PoolGroup
 from repro.core.stream import CommandStream
 from repro.kernels import ops as kops
-from repro.kernels.fused_dispatch import notify_launch
+from repro.kernels.fused_dispatch import DrainInfo, check_drain, notify_launch
 from repro.models.paged import pool_shard_axes, pool_shard_count
 
 
@@ -196,11 +200,49 @@ class RowCloneEngine:
                 "staging pools must share one block count (the promotion " \
                 f"slot space): {stage_cap} != {cap}"
             stage_cap = cap
+        for spec in group:
+            if spec.role != "spill":
+                continue
+            s, p = self.pools[spec.name], self.pools[spec.paired]
+            s_blk = list(s.shape)
+            s_blk.pop(block_axis)
+            p_blk = list(p.shape)
+            p_blk.pop(block_axis)
+            assert s_blk == p_blk and s.dtype == p.dtype, \
+                f"spill pool {spec.name!r} must mirror {spec.paired!r}'s " \
+                "block shape and dtype"
         # staging slot free list + ids whose promotion is still queued
         # (reclaimed by _after_flush once no stream holds a pending READ
         # of the slot — the queues' source-hazard tracking)
         self._stage_free: List[int] = list(range(stage_cap - 1, -1, -1))
         self._stage_inflight: List[int] = []
+        #: replayable flush log — every drained flush appends one record
+        self.journal = TicketJournal()
+        self._flush_index = 0
+        self._last_plan_sig: Optional[Tuple] = None
+        self._aborted: List[AbortedFlush] = []
+        self._stage_limit: Optional[int] = None
+        # frozen per-pool layout (shape, dtype, sharding) so recover()
+        # can resurrect or restore buffers with the original placement;
+        # uncommitted single-device pools record no sharding — pinning
+        # them via device_put would commit the restored buffer and break
+        # the mesh drain's shard_map placement
+        self._pool_layouts = {
+            name: (tuple(p.shape), p.dtype, self._pool_placement(p))
+            for name, p in self.pools.items()}
+
+    @staticmethod
+    def _pool_placement(p):
+        """The sharding recover() should restore ``p`` under, or None.
+        Only committed multi-device placements are pinned: an uncommitted
+        (or single-device) array must be restored uncommitted so jit/
+        shard_map remains free to place it."""
+        sh = getattr(p, "sharding", None)
+        if sh is None or not getattr(p, "_committed", True):
+            return None
+        if len(getattr(sh, "device_set", ())) <= 1:
+            return None
+        return sh
 
     # ------------------------------------------------------------------
     # streams
@@ -376,6 +418,221 @@ class RowCloneEngine:
                 self._cur_queue.flush()
 
     # ------------------------------------------------------------------
+    # drain path + journal — every flushed table passes through here
+    # ------------------------------------------------------------------
+    @property
+    def next_flush_index(self) -> int:
+        """Engine-wide index the NEXT drained flush will carry (every
+        ``_drain_rows`` — flush, replay, or re-drain — takes one).  The
+        handle fault plans use to target a specific upcoming flush."""
+        return self._flush_index
+
+    def _drain_rows(self, rows: Sequence[Tuple[int, int, int]],
+                    queue: Optional[CommandQueue] = None,
+                    record: bool = True, pre_spaced: bool = False) -> int:
+        """Space, chunk, and dispatch one flush's rows; append the
+        :class:`JournalRecord` on success.  The single drain path shared
+        by ``CommandQueue.flush``, ``TicketJournal.replay``
+        (``record=False, pre_spaced=True`` — records hold spaced rows),
+        and ``recover()``'s aborted-suffix re-drains.
+
+        Every chunk runs the drain guards (fused_dispatch ``check_drain``)
+        BEFORE its donating dispatch, so a raising guard aborts the flush
+        with pool buffers intact: the dispatched prefix is journaled as an
+        ``aborted`` record and the undispatched suffix stashed for
+        ``recover()``."""
+        rows = [(int(op), int(s), int(d)) for op, s, d in rows]
+        idx = self._flush_index
+        self._flush_index += 1
+        if pre_spaced or not self._flush_spacing():
+            spaced = rows
+        else:
+            spaced = space_war_rows(rows, self.group.locate,
+                                    self.group.primary)
+            if queue is not None:
+                queue.stats.spacer_rows += len(spaced) - len(rows)
+        self._last_plan_sig = None
+        name = queue.name if queue is not None else "replay"
+        launches = 0
+        top = BUCKETS[-1]
+        for ci, lo in enumerate(range(0, len(spaced), top)):
+            chunk = spaced[lo:lo + top]
+            try:
+                check_drain(DrainInfo(
+                    flush=idx, chunk=ci,
+                    n_commands=sum(1 for r in chunk if r[0] >= 0),
+                    n_pools=len(self.pools), engine=self))
+                table = np.full((bucket_size(len(chunk)), 3), OP_NOP,
+                                np.int32)
+                table[:len(chunk)] = np.asarray(chunk, np.int32)
+                launches += self._dispatch_table(table, len(chunk),
+                                                 queue=queue)
+            except Exception:
+                if record:
+                    done = spaced[:lo]
+                    if any(op >= 0 for op, _, _ in done):
+                        # the chunks that DID dispatch mutated the pools:
+                        # journal them so replay reproduces the partial
+                        # state exactly (recover() re-drains the suffix
+                        # as its own record)
+                        self.journal.append(JournalRecord(
+                            stream=name, index=idx, rows=tuple(done),
+                            plan_sig=self._last_plan_sig,
+                            launches=launches, aborted=True))
+                    self._aborted.append(AbortedFlush(
+                        queue=name, index=idx, rows=tuple(rows),
+                        suffix=tuple(spaced[lo:])))
+                raise
+        if record:
+            self.journal.append(JournalRecord(
+                stream=name, index=idx, rows=tuple(spaced),
+                plan_sig=self._last_plan_sig, launches=launches,
+                war_hazards=(queue.stats.war_hazards if queue else 0),
+                spacer_rows=(queue.stats.spacer_rows if queue else 0)))
+        return launches
+
+    def _touched_pools(self, rows: Sequence[Tuple[int, int, int]]
+                       ) -> Tuple[str, ...]:
+        """Pool names a set of command rows WRITES — what a flush's
+        :class:`FlushTicket` must wait on (plain opcodes write every
+        primary pool; cross-pool rows write exactly their destination
+        pool), so e.g. a checkpoint-stream ticket never serializes
+        against decode's primary-pool traffic."""
+        hit = set()
+        for op, s, d in rows:
+            if op < 0:
+                continue
+            if op == OP_CROSS_POOL_COPY:
+                pd, _ = self.group.locate(int(d))
+                hit.add(self.group.names[pd])
+            else:
+                hit.update(self.primary_names)
+        return tuple(n for n in self.group.names if n in hit)
+
+    # ------------------------------------------------------------------
+    # snapshot + recovery
+    # ------------------------------------------------------------------
+    def snapshot(self) -> PoolSnapshot:
+        """Host copies of EVERY pool, consistent through the last drained
+        flush (quiesce in-flight streams first for an exact snapshot).
+        The incremental, non-blocking alternative rides the checkpoint
+        stream — checkpoint/pool_checkpoint.py."""
+        return PoolSnapshot(
+            index=self._flush_index - 1,
+            arrays={n: np.asarray(p) for n, p in self.pools.items()})
+
+    def _reads_lost(self, row: Tuple[int, int, int],
+                    lost_idx: frozenset) -> bool:
+        """Does a command row read (or write) a pool that died without a
+        snapshot?  Such rows are unrecoverable — recover() drops them."""
+        if not lost_idx:
+            return False
+        op, s, d = row
+        if op != OP_CROSS_POOL_COPY:
+            return False
+        ps, _ = self.group.locate(int(s))
+        pd, _ = self.group.locate(int(d))
+        return ps in lost_idx or pd in lost_idx
+
+    def recover(self, snapshot: Optional[PoolSnapshot] = None,
+                max_retries: int = 3, backoff: float = 0.05,
+                degraded_stage_capacity: Optional[int] = None
+                ) -> RecoveryReport:
+        """Return the engine to a serviceable state after a failed flush
+        or a donation error.  The recovery state machine:
+
+        1. **Evict** — every live stream's queued commands are dropped
+           (``CommandQueue.abort``); promotions out of the staging pools
+           are counted separately so a serving layer can evict the
+           affected admissions (their staged bytes never arrived).
+        2. **Restore** — pools whose buffers died (donated into a failed
+           call) come back from ``snapshot`` when it covers them, else as
+           zeros (reported in ``pools_lost``).  Live pools are never
+           touched: their bytes are ahead of any snapshot (decode writes
+           bypass the journal) and must not be rolled back.
+        3. **Reset staging** — all slots return to the free list (queued
+           reads are gone); ``degraded_stage_capacity`` caps the ring
+           (the degraded single-buffer mode when a shadow half is
+           poisoned).
+        4. **Replay** — when step 2 restored pools from the snapshot, the
+           journal re-drains every record after ``snapshot.index``
+           (bitwise-identical block state — core/journal.py).
+        5. **Re-drain** — aborted flushes' undispatched suffixes re-drain
+           with exponential backoff, up to ``max_retries`` attempts each;
+           exhaustion raises :class:`RecoveryError`.  Rows reading pools
+           lost without a snapshot are dropped (unrecoverable).
+        """
+        aborted, self._aborted = list(self._aborted), []
+        evicted = 0
+        evicted_promotions = 0
+        staging_idx = frozenset(self.group.index(n) for n in self.staging)
+        for q in list(self._live_queues.values()):
+            for op, s, d in q.abort():
+                if op < 0:
+                    continue
+                evicted += 1
+                if op == OP_CROSS_POOL_COPY and \
+                        self.group.locate(int(s))[0] in staging_idx:
+                    evicted_promotions += 1
+        restored: List[str] = []
+        lost: List[str] = []
+        for name in list(self.pools):
+            p = self.pools[name]
+            if not getattr(p, "is_deleted", lambda: False)():
+                continue
+            shape, dtype, sh = self._pool_layouts[name]
+            if snapshot is not None and name in snapshot.arrays:
+                arr = jnp.asarray(np.asarray(snapshot.arrays[name]),
+                                  dtype=dtype)
+                restored.append(name)
+            else:
+                arr = jnp.zeros(shape, dtype)
+                lost.append(name)
+            if sh is not None:
+                arr = jax.device_put(arr, sh)
+            self.pools[name] = arr
+        # staging: every reservation and queued promotion is void now
+        self._stage_inflight = []
+        cap = self.stage_capacity
+        if degraded_stage_capacity is not None:
+            cap = min(cap, int(degraded_stage_capacity))
+            self._stage_limit = cap
+        else:
+            self._stage_limit = None
+        self._stage_free = list(range(cap - 1, -1, -1))
+        replayed = 0
+        if restored and snapshot is not None:
+            replayed = self.journal.replay(self, after=snapshot.index)
+        retries = 0
+        lost_idx = frozenset(self.group.index(n) for n in lost)
+        redrained = 0
+        for ab in aborted:
+            rows = [r for r in ab.suffix
+                    if not self._reads_lost(r, lost_idx)]
+            if not any(op >= 0 for op, _, _ in rows):
+                continue
+            for attempt in range(max_retries):
+                try:
+                    self._drain_rows(rows, record=True, pre_spaced=True)
+                    redrained += 1
+                    break
+                except Exception as e:
+                    self._aborted = []  # failed retries don't re-stash
+                    retries += 1
+                    if attempt == max_retries - 1:
+                        raise RecoveryError(
+                            f"re-drain of flush {ab.index} (stream "
+                            f"{ab.queue!r}) still failing after "
+                            f"{max_retries} attempts") from e
+                    time.sleep(backoff * (2 ** attempt))
+        return RecoveryReport(
+            evicted_rows=evicted, evicted_promotions=evicted_promotions,
+            pools_restored=tuple(restored), pools_lost=tuple(lost),
+            replayed_flushes=replayed, redrained_flushes=redrained,
+            retries=retries,
+            degraded=degraded_stage_capacity is not None)
+
+    # ------------------------------------------------------------------
     # memcopy
     # ------------------------------------------------------------------
     def _primary_id(self, b) -> int:
@@ -460,11 +717,11 @@ class RowCloneEngine:
         pools, so one call may mix pool pairs.  (The pre-stream
         ``(pairs, src_pool, dst_pool)`` int form is gone.)
 
-        Staging pools sit outside the allocator's metadata: a staging
-        *source* always holds real bytes (the prefill wrote them), so the
-        lazy-zero materialization below is skipped; a staging *destination*
-        is an engine-managed slot, so no allocator block is marked
-        written."""
+        Staging and spill pools sit outside the allocator's metadata: a
+        staging *source* always holds real bytes (the prefill wrote
+        them), so the lazy-zero materialization below is skipped; a
+        staging or spill *destination* is an engine- (or checkpoint-)
+        managed slot, so no allocator block is marked written."""
         pairs = [(s if isinstance(s, BlockRef) else None,
                   d if isinstance(d, BlockRef) else None)
                  for s, d in pairs]
@@ -481,7 +738,7 @@ class RowCloneEngine:
         # before the pool-level copy (the hazard guard orders the zero
         # before the copy)
         lazy_srcs = [int(s.block) for s, _ in pairs
-                     if s.pool not in self.staging
+                     if s.pool in self.primary_names
                      and self.enable_zi and self.alloc.is_zero[s.block]]
         if lazy_srcs:
             self.materialize_zeros(lazy_srcs)
@@ -490,10 +747,12 @@ class RowCloneEngine:
                                     self.group.gid(d))
             self.stats.cross_pool_copies += 1
             self.stats.bytes_cross += self._pool_block_bytes(d.pool)
-            if d.pool not in self.staging:
+            if d.pool in self.primary_names:
                 # dst now holds real data in dst_pool; a block can only
                 # carry the lazy-zero bit when every primary pool's bytes
-                # are logically zero
+                # are logically zero.  Staging and spill destinations are
+                # outside the allocator's metadata — a checkpoint copy
+                # into a spill pool must NOT mark the primary block.
                 self.alloc.mark_written([int(d.block)])
         self._autoflush()
         return len(pairs)
@@ -698,6 +957,11 @@ class RowCloneEngine:
         rows = [(int(op), int(s), int(d)) for op, s, d in table if op >= 0]
         plan = partition_commands(rows, n_shards=n_shards, group=self.group,
                                   replicated=replicated)
+        # journal the plan shape (not the tables — rows reproduce those):
+        # a replayed drain rebuilding a different signature would compile
+        # a new collective, which the plan_sig makes observable
+        self._last_plan_sig = (plan.n_shards, plan.deltas,
+                               int(plan.send_rows.shape[2]))
         if queue is not None:
             queue.stats.spacer_rows += plan.n_spacers
         new = kops.fused_dispatch_sharded(

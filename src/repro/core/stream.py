@@ -70,6 +70,10 @@ class FlushTicket:
     launches: int               #: device launches the drain issued
     war_hazards: int            #: cumulative WAR commands admitted so far
     spacer_rows: int            #: cumulative overlap spacers inserted
+    index: int                  #: engine-wide flush index (-1: empty flush)
+    touched: Tuple[str, ...]    #: pools this flush WROTE — wait() blocks
+    #: on exactly these, so e.g. a checkpoint-stream ticket (spill-pool
+    #: writes only) never serializes against decode's primary traffic
     _engine: Any = dataclasses.field(repr=False)
     _pools: Dict[str, Any] = dataclasses.field(repr=False)
 
@@ -85,8 +89,11 @@ class FlushTicket:
         return any(getattr(p, "is_deleted", lambda: False)()
                    for p in self._pools.values())
 
-    def _check_live(self) -> None:
-        if self.expired:
+    def _check_live(self, names: Optional[Sequence[str]] = None) -> None:
+        pools = self._pools if names is None else \
+            {n: self._pools[n] for n in names}
+        if any(getattr(p, "is_deleted", lambda: False)()
+               for p in pools.values()):
             raise RuntimeError(
                 f"FlushTicket(stream={self.stream!r}, seq={self.seq}) "
                 "expired: a later flush donated the pool buffers it "
@@ -94,29 +101,34 @@ class FlushTicket:
                 "flush (ticket metadata never expires)")
 
     def wait(self) -> "FlushTicket":
-        """Block until every post-drain pool array is resident (the
+        """Block until the pools this flush WROTE are resident (the
         explicit synchronization point callers opt into — jax dispatch is
-        asynchronous underneath)."""
+        asynchronous underneath).  Per-ticket wait events are scoped to
+        ``touched``: waiting on a checkpoint-stream ticket synchronizes
+        the spill pools only, not the decode path's primary pools — and
+        stays valid even after decode donates the primaries."""
         import jax
-        self._check_live()
-        jax.block_until_ready(list(self._pools.values()))
+        self._check_live(self.touched)
+        jax.block_until_ready([self._pools[n] for n in self.touched])
         return self
 
     def block_state(self, ref: Union[BlockRef, int]
                     ) -> Union[np.ndarray, Dict[str, np.ndarray]]:
         """Post-drain contents of one block, fetched on demand (valid
         until a later flush donates the buffers — see the class
-        docstring).
+        docstring; only the pools actually READ here must still be
+        resident).
 
         A :class:`BlockRef` returns that pool's block; a bare int (a
         primary-address-space id) returns ``{pool name: block}`` over
         every primary pool — the shape a plain opcode moves."""
-        self._check_live()
         ba = self._engine.block_axis
         if isinstance(ref, BlockRef):
+            self._check_live([ref.pool])
             pool = self._pools[ref.pool]
             b = int(ref.block)
             return np.asarray(pool[b] if ba == 0 else pool[:, b])
+        self._check_live(self._engine.primary_names)
         b = int(ref)
         return {name: np.asarray(self._pools[name][b] if ba == 0
                                  else self._pools[name][:, b])
@@ -138,6 +150,7 @@ class CommandStream:
         self.engine = engine
         self.name = name
         self.queue = queue if queue is not None else CommandQueue(engine)
+        self.queue.name = name   # journal records carry the stream name
         self._seq = 0
 
     def __len__(self) -> int:
@@ -203,12 +216,15 @@ class CommandStream:
         """Drain the stream's pending commands and return the
         :class:`FlushTicket` receipt (commands drained, launches issued,
         post-drain block state on demand)."""
-        n = len(self.queue)
+        rows = self.queue.pending
+        n = len(rows)
+        index = self.engine.next_flush_index if n else -1
         launches = self.queue.flush()
         ticket = FlushTicket(
             stream=self.name, seq=self._seq, commands=n, launches=launches,
             war_hazards=self.queue.stats.war_hazards,
             spacer_rows=self.queue.stats.spacer_rows,
+            index=index, touched=self.engine._touched_pools(rows),
             _engine=self.engine, _pools=dict(self.engine.pools))
         self._seq += 1
         return ticket

@@ -57,6 +57,7 @@ the pools be aliased in-place with no snapshot copy).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Callable, List, Optional, Sequence, Tuple
 
@@ -120,6 +121,52 @@ def notify_launch(n_commands: int, n_pools: int, mechanism: str) -> None:
     _LAUNCH_COUNT += 1
     for fn in _LAUNCH_HOOKS:
         fn(n_commands, n_pools, mechanism)
+
+
+# ---------------------------------------------------------------------------
+# drain guards — the abort-safe pre-dispatch hook.  The engine's drain loop
+# calls check_drain() for every chunk BEFORE the donating dispatch, so a
+# guard that raises (fault injection, admission control, backpressure)
+# aborts the flush while every pool buffer is still valid — the engine
+# stashes the undispatched suffix and recover() can re-drain it.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DrainInfo:
+    """One chunk of a flush, about to dispatch.
+
+    ``flush`` is the engine-wide flush index (``engine.next_flush_index``
+    names the upcoming one), ``chunk`` the 0-based overflow-chunk ordinal
+    within that flush; ``engine`` identifies which engine is draining so
+    guards bound to one engine ignore the rest."""
+
+    flush: int        #: engine-wide flush index
+    chunk: int        #: overflow-chunk ordinal within the flush (0-based)
+    n_commands: int   #: live (non-NOP) rows in this chunk
+    n_pools: int      #: pools the dispatch will move
+    engine: object = dataclasses.field(default=None, repr=False)
+
+
+_DRAIN_GUARDS: List[Callable[[DrainInfo], None]] = []
+
+
+def add_drain_guard(fn: Callable[[DrainInfo], None]) -> None:
+    """Register ``fn(DrainInfo)`` to run before every chunk dispatch; a
+    guard that raises aborts the flush with pool buffers intact (the
+    fault-injection and admission-control hook — runtime/fault.py)."""
+    _DRAIN_GUARDS.append(fn)
+
+
+def remove_drain_guard(fn: Callable[[DrainInfo], None]) -> None:
+    """Unregister a guard added with :func:`add_drain_guard`."""
+    _DRAIN_GUARDS.remove(fn)
+
+
+def check_drain(info: DrainInfo) -> None:
+    """Run every registered drain guard against one pending chunk
+    (called by the engine's drain loop before the donating dispatch)."""
+    for fn in list(_DRAIN_GUARDS):
+        fn(info)
 
 
 # ---------------------------------------------------------------------------

@@ -49,8 +49,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import CheckpointManager, PoolCheckpoint
 from repro.configs import RowCloneConfig, get_config
 from repro.core import PagedCoWCache, RowCloneEngine, SubarrayAllocator
+from repro.core.journal import RecoveryReport
 from repro.kernels.fused_dispatch import notify_launch
 from repro.launch.mesh import pool_shard_count
 from repro.models import build_model, split_params
@@ -72,7 +74,10 @@ class ServingEngine:
                  fused_staging: bool = True,
                  max_admit_pages: Optional[int] = None,
                  admissions_per_round: int = 1,
-                 double_buffer: bool = False):
+                 double_buffer: bool = False,
+                 fault_plan=None, auto_recover: bool = False,
+                 ckpt_pages: int = 0, ckpt_dir: Optional[str] = None,
+                 ckpt_window: Optional[int] = None):
         """``max_admit_pages`` sizes the staging pools as a RING of that
         many slots instead of a full-size twin of the KV pools — slots
         recycle at every round's flush, so the ring only needs to hold
@@ -94,7 +99,17 @@ class ServingEngine:
         Under a mesh a ring that does not divide the pool shard count is
         REPLICATED (``PoolSpec.sharding == ()`` — held whole on every
         device) rather than rounded up; sharded rings partition like
-        their KV twins."""
+        their KV twins.
+
+        Fault tolerance: ``ckpt_pages > 0`` adds spill pools of that many
+        blocks and a background :class:`PoolCheckpoint` driven one window
+        per decode round (``ckpt_dir`` names the checkpoint directory);
+        ``fault_plan`` installs a
+        :class:`~repro.runtime.fault.FaultPlan`'s injections against this
+        engine; ``auto_recover=True`` catches a failed round flush (or
+        ckpt tick) and runs :meth:`recover` in place — the next round
+        serves normally.  Admissions evicted by a recovery land in
+        ``evicted_sids`` for the caller to re-admit."""
         self.cfg = cfg
         self.rc = rc or RowCloneConfig()
         self.mesh = mesh
@@ -134,10 +149,14 @@ class ServingEngine:
         # fused launch.  The engine sees the mesh: every decode round's
         # promotions + CoW splits + tail inits drain as ONE (collective)
         # launch at the round's flush boundary
+        self.ckpt_pages = int(ckpt_pages)
+        replicate_ckpt = bool(self.ckpt_pages % shards) if self.ckpt_pages \
+            else False
         pools, group = make_serving_pools(
             L, nblk, page, cfg.num_kv_heads, cfg.head_dim, kv_dtype,
             staging=fused_staging, stage_nblk=stage_nblk,
-            replicate_staging=replicate_staging)
+            replicate_staging=replicate_staging,
+            ckpt_nblk=self.ckpt_pages, replicate_ckpt=replicate_ckpt)
         if mesh is not None:
             # honor each PoolSpec's sharding hint at placement time
             # (replicated rings stay whole per device; KV pools shard)
@@ -161,19 +180,40 @@ class ServingEngine:
         self.last_logits: Dict[int, np.ndarray] = {}
         self.tokens: Dict[int, List[int]] = {}
         self._decode_jit = jax.jit(self._decode_fn, donate_argnums=(1, 2))
-        # NB: the staging pools are deliberately NOT donated — a runtime
-        # failure inside a donated call would invalidate buffers still
-        # holding earlier admissions' un-promoted pages (their promotions
-        # are queued for the round flush), bricking the engine.  The copy
-        # this costs matches the seed _stage_legacy path; re-enabling
-        # donation needs promotion-aware failure recovery (ROADMAP).
-        self._prefill_stage_jit = jax.jit(self._prefill_stage_fn)
+        # the staging pools ARE donated: a failure inside the donated call
+        # kills buffers still holding earlier admissions' un-promoted
+        # pages, and recover() handles exactly that — it resurrects the
+        # staging ring and evicts the affected admissions (evicted_sids)
+        # for re-admission.  Donation closes the seed-era extra copy the
+        # un-donated scatter paid per admission.
+        self._prefill_stage_jit = jax.jit(self._prefill_stage_fn,
+                                          donate_argnums=(2, 3))
         # the round's bulk movement lives on a dedicated CommandStream:
         # admissions/forks CAPTURE their promotions and CoW work onto it,
         # and decode_round's stream.flush() drains everything as one
         # launch, returning the FlushTicket kept in ``last_ticket``
         self.stream = self.engine.stream("serve")
         self.last_ticket = None
+        self.auto_recover = auto_recover
+        self.fault_plan = fault_plan
+        if fault_plan is not None:
+            fault_plan.install(self.engine)
+        #: admissions whose stage→KV promotions have not drained yet —
+        #: recovery evicts exactly these when the staged bytes are lost
+        self._staged_sids: List[int] = []
+        #: sequences a recovery evicted; the caller re-admits their
+        #: prompts (re-admission reproduces the KV bytes, so greedy
+        #: tokens match the failure-free run)
+        self.evicted_sids: List[int] = []
+        self._admission_ordinal = 0
+        self.last_recovery: Optional[RecoveryReport] = None
+        self.pool_ckpt: Optional[PoolCheckpoint] = None
+        if self.ckpt_pages:
+            if ckpt_dir is None:
+                raise ValueError("ckpt_pages > 0 needs ckpt_dir")
+            self.pool_ckpt = PoolCheckpoint(
+                self.engine, CheckpointManager(ckpt_dir),
+                window=ckpt_window)
 
     # ------------------------------------------------------------------
     def _prefill_batch(self, prompt: np.ndarray) -> Dict[str, jnp.ndarray]:
@@ -219,23 +259,42 @@ class ServingEngine:
         batch = self._prefill_batch(prompt)
         blocks = self.cache.blocks_of(sid)
         if self.fused_staging:
+            ordinal = self._admission_ordinal
+            self._admission_ordinal += 1
             stage_ids = self.engine.stage_blocks(len(blocks))
             try:
+                if self.fault_plan is not None:
+                    # injection point for donation errors: fires AFTER the
+                    # slots are reserved, simulating the prefill's donated
+                    # staging buffers dying mid-call
+                    self.fault_plan.check_admission(ordinal, self.engine)
                 logits, k_stage, v_stage, extras = self._prefill_stage_jit(
                     self.params, batch, self.engine.pools["k_stage"],
                     self.engine.pools["v_stage"],
                     jnp.asarray(np.asarray(stage_ids, np.int32)))
             except Exception:
-                # failed admission must not strand its staging slots; the
-                # un-donated staging pools are untouched on any failure,
-                # so the engine (and every queued promotion) stays usable
+                # failed admission must not strand its staging slots.  The
+                # staging pools are DONATED into the prefill call, so a
+                # failure may have consumed them — then this admission
+                # (and any earlier ones with queued promotions) lost its
+                # staged bytes: evict it, and recover in place when asked
                 self.engine.release_stage_blocks(stage_ids)
+                dead = any(
+                    getattr(self.engine.pools[n], "is_deleted",
+                            lambda: False)()
+                    for n in self.engine.staging)
+                if dead:
+                    self.free(sid)
+                    self.evicted_sids.append(sid)
+                    if self.auto_recover:
+                        self.recover()
                 raise
             self.engine.pools["k_stage"] = k_stage
             self.engine.pools["v_stage"] = v_stage
             # the promotion rides the round's serve stream (drained by
             # decode_round's stream.flush — one launch for the round)
             self.stream.promote_staged(list(zip(stage_ids, blocks)))
+            self._staged_sids.append(sid)
             st = extras
         else:
             logits, st = self.model.prefill(self.params, batch, self.mesh,
@@ -290,6 +349,47 @@ class ServingEngine:
         self.tokens.pop(sid, None)
 
     # ------------------------------------------------------------------
+    def recover(self) -> RecoveryReport:
+        """Return the serving engine to a clean state after a failed
+        flush, ckpt tick, or donated-admission error.
+
+        Wraps ``RowCloneEngine.recover`` with serving policy: the latest
+        pool checkpoint (when one exists) restores dead KV pools; a dead
+        double-buffered staging ring comes back at SINGLE-buffer capacity
+        (the degraded mode — bursts drain early instead of parking in the
+        poisoned shadow half); and admissions whose staged bytes were
+        lost (dead staging, or promotions evicted from the queues) are
+        freed into ``evicted_sids`` — re-admitting their prompts
+        reproduces the KV bytes, so greedy decode stays bitwise-identical
+        to a failure-free run.  Aborted flushes' suffixes re-drain inside
+        the engine call (retry/backoff), completing promotions that were
+        already dispatched rather than evicting them."""
+        eng = self.engine
+        staging_dead = any(
+            getattr(eng.pools[n], "is_deleted", lambda: False)()
+            for n in eng.staging)
+        degraded = None
+        if staging_dead and self.double_buffer:
+            degraded = self.ring_capacity
+        snap = self.pool_ckpt.latest() if self.pool_ckpt is not None \
+            else None
+        rep = eng.recover(snapshot=snap,
+                          degraded_stage_capacity=degraded)
+        if self.pool_ckpt is not None:
+            self.pool_ckpt.reset()
+        if staging_dead or rep.evicted_promotions:
+            # the staged bytes backing these admissions never reached the
+            # KV pools (and are unrecoverable): evict for re-admission
+            for sid in self._staged_sids:
+                if sid in self.cache.seqs:
+                    self.free(sid)
+                    self.evicted_sids.append(sid)
+        self._staged_sids = []
+        self.last_ticket = None
+        self.last_recovery = rep
+        return rep
+
+    # ------------------------------------------------------------------
     def _decode_fn(self, params, k_pools, v_pools, table, mask, base,
                    seq_lens, tokens, slot_index):
         state = {"k_pools": k_pools, "v_pools": v_pools,
@@ -323,7 +423,21 @@ class ServingEngine:
                 self.cache.append_tokens(live)
         else:
             self.cache.append_tokens(live)   # seed path: eager per-call
-        self.last_ticket = self.stream.flush()
+        try:
+            self.last_ticket = self.stream.flush()
+        except Exception:
+            if not self.auto_recover:
+                raise
+            # recover in place: the aborted flush's suffix re-drains
+            # inside recover() (same rows, same bytes), so this round's
+            # decode proceeds normally and tokens match the clean run
+            self.recover()
+            # a recovery may have evicted admissions; decode the rest
+            live = [s for s in live if s in self.cache.seqs]
+            next_tok = {s: next_tok[s] for s in live}
+            if not live:
+                return {}
+        self._staged_sids = []
         table, mask, base = self.cache.device_tables()
         lens = self.cache.seq_lens()
         B = self.cache.max_seqs
@@ -345,6 +459,17 @@ class ServingEngine:
             slot = self.cache.slot_of(sid)
             self.last_logits[sid] = logits[slot]
             self.tokens[sid].append(next_tok[sid])
+        if self.pool_ckpt is not None:
+            # one background checkpoint window per round: spill-pool
+            # cross-copies on the ckpt stream, harvested next round (the
+            # ticket's write-scoped wait never blocks on the KV pools
+            # this round's decode just donated)
+            try:
+                self.pool_ckpt.step()
+            except Exception:
+                if not self.auto_recover:
+                    raise
+                self.recover()
         return next_tok
 
 

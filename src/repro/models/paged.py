@@ -117,7 +117,9 @@ def make_serving_pools(num_layers: int, nblk: int, page: int, kv_heads: int,
                        head_dim: int, dtype,
                        staging: bool = True,
                        stage_nblk: Optional[int] = None,
-                       replicate_staging: bool = False):
+                       replicate_staging: bool = False,
+                       ckpt_nblk: int = 0,
+                       replicate_ckpt: bool = False):
     """Build the serving engine's pools: layer-stacked ``(L, nblk, page,
     KVH, D)`` K/V pools plus (by default) their staging pools.
 
@@ -138,6 +140,14 @@ def make_serving_pools(num_layers: int, nblk: int, page: int, kv_heads: int,
     (:func:`pool_partition_spec`), and promotions out of it are always
     slab-local in the collective drain — the placement override that
     keeps an oddly-sized ring from rounding up to the shard count.
+
+    ``ckpt_nblk > 0`` adds ``k_spill``/``v_spill`` pools of that many
+    blocks (``role="spill"``, paired with K/V): the background checkpoint
+    stream's copy window — primary blocks spill into them as cross-pool
+    traffic overlapping decode, then stream to disk
+    (checkpoint/pool_checkpoint.py).  ``replicate_ckpt`` is the same
+    placement override as ``replicate_staging``, for spill windows that
+    don't divide the shard count.
 
     Returns ``(pools, group)``: the name -> array dict plus the
     :class:`~repro.core.poolspec.PoolGroup` describing the engine's
@@ -162,6 +172,15 @@ def make_serving_pools(num_layers: int, nblk: int, page: int, kv_heads: int,
                            role="staging", paired="k", sharding=shint),
                   PoolSpec("v_stage", stage_nblk, block_shape, dtype,
                            role="staging", paired="v", sharding=shint)]
+    if ckpt_nblk > 0:
+        chint = () if replicate_ckpt else hint
+        cshape = (num_layers, ckpt_nblk, page, kv_heads, head_dim)
+        pools["k_spill"] = jnp.zeros(cshape, dtype)
+        pools["v_spill"] = jnp.zeros(cshape, dtype)
+        specs += [PoolSpec("k_spill", ckpt_nblk, block_shape, dtype,
+                           role="spill", paired="k", sharding=chint),
+                  PoolSpec("v_spill", ckpt_nblk, block_shape, dtype,
+                           role="spill", paired="v", sharding=chint)]
     return pools, PoolGroup(specs)
 
 

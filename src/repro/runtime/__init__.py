@@ -1,6 +1,6 @@
 from repro.runtime.fault import (
-    HeartbeatLedger, NodeFailure, RestartPolicy, StragglerReport,
-    run_with_restarts,
+    FaultPlan, HeartbeatLedger, InjectedFault, NodeFailure, RestartPolicy,
+    StragglerReport, run_with_restarts,
 )
 from repro.runtime.elastic import (
     ElasticDecision, build_mesh, elastic_restore, plan_remesh,

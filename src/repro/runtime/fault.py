@@ -1,4 +1,4 @@
-"""Fault tolerance: heartbeat ledger, straggler detection, restart driver.
+"""Fault tolerance: failure injection, heartbeat ledger, restart driver.
 
 At 1000+ nodes the failure model is: (a) hard node loss — detected by
 missed heartbeats / collective timeout, recovered by checkpoint restore
@@ -9,20 +9,140 @@ and (optionally) shrinking its microbatch share.
 The deterministic data pipeline (data/pipeline.py) is keyed by step, so a
 restarted run replays the exact token stream — restart is bitwise-replayable
 modulo hardware nondeterminism.
+
+**Serving-side failure injection** lives here too: :class:`FaultPlan`
+plugs into the engine's per-chunk drain guards
+(kernels/fused_dispatch.py ``add_drain_guard``) and raises
+:class:`InjectedFault` at chosen engine flush indices —
+
+* *launch failures* fire before a flush's FIRST chunk dispatches (the
+  whole flush aborts cleanly; nothing moved);
+* *mid-flush aborts* fire before a LATER chunk (the dispatched prefix is
+  journaled as an aborted record, the suffix stashed — the partial-flush
+  case ``RowCloneEngine.recover`` re-drains);
+* *donation errors* simulate a staging buffer dying mid-admission
+  (:meth:`FaultPlan.check_admission` deletes the staging pool arrays the
+  prefill jit was about to donate, then raises).
+
+A plan binds to ONE engine (``install(engine)``): the guard ignores other
+engines' drains, so an A/B benchmark's reference engine runs clean while
+the fault engine takes the injections.  Each injection fires at most
+once.  See docs/ARCHITECTURE.md "Failure model and recovery".
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, Iterator, List, Optional, Set, Tuple
 
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
+from repro.kernels.fused_dispatch import (DrainInfo, add_drain_guard,
+                                          remove_drain_guard)
 
 
 class NodeFailure(RuntimeError):
     """Raised (or injected in tests) when a node is lost mid-step."""
+
+
+class InjectedFault(RuntimeError):
+    """A :class:`FaultPlan` injection fired — the deliberate failure the
+    recovery path is being exercised against."""
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Deterministic failure injections against ONE engine's drain path.
+
+    ``launch_failures`` / ``midflush_aborts`` name engine flush indices
+    (``engine.next_flush_index`` before the targeted flush): a launch
+    failure raises before chunk 0 dispatches, a mid-flush abort raises
+    before the SECOND chunk (flushes with one chunk — under 512 spaced
+    rows — never see it).  ``donation_errors`` name admission ordinals
+    checked by :meth:`check_admission` between staging and the prefill
+    jit's donating call.  Every injection fires at most once; ``fired``
+    records what actually triggered.
+
+    Use :meth:`active` (or ``install``/``remove``) to scope the plan::
+
+        plan = FaultPlan(launch_failures=(eng.next_flush_index,))
+        with plan.active(eng):
+            ...   # the targeted flush raises InjectedFault
+        eng.recover()
+    """
+
+    launch_failures: Tuple[int, ...] = ()
+    midflush_aborts: Tuple[int, ...] = ()
+    donation_errors: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        self.fired: List[Tuple[str, int]] = []
+        self._engine: Optional[object] = None
+        self._seen: Set[Tuple[str, int]] = set()
+
+    def install(self, engine) -> "FaultPlan":
+        """Bind to ``engine`` and hook its drain path.  Only this
+        engine's flushes can trigger the plan."""
+        if self._engine is not None:
+            raise RuntimeError("FaultPlan already installed")
+        self._engine = engine
+        add_drain_guard(self._guard)
+        return self
+
+    def remove(self) -> None:
+        """Unhook from the drain path (idempotent)."""
+        if self._engine is None:
+            return
+        self._engine = None
+        remove_drain_guard(self._guard)
+
+    @contextlib.contextmanager
+    def active(self, engine) -> Iterator["FaultPlan"]:
+        """``install`` on entry, ``remove`` on exit — the scoped form."""
+        self.install(engine)
+        try:
+            yield self
+        finally:
+            self.remove()
+
+    def _fire(self, kind: str, index: int) -> None:
+        key = (kind, index)
+        if key in self._seen:
+            return
+        self._seen.add(key)
+        self.fired.append(key)
+        raise InjectedFault(f"injected {kind} at flush {index}")
+
+    def _guard(self, info: DrainInfo) -> None:
+        if info.engine is not self._engine:
+            return
+        if info.chunk == 0 and info.flush in self.launch_failures:
+            self._fire("launch_failure", info.flush)
+        if info.chunk >= 1 and info.flush in self.midflush_aborts:
+            self._fire("midflush_abort", info.flush)
+
+    def check_admission(self, ordinal: int, engine) -> None:
+        """Admission-path hook: when ``ordinal`` is scheduled for a
+        donation error, delete the engine's staging pool arrays (as a
+        failed donating prefill launch would have consumed them) and
+        raise :class:`InjectedFault`.  The serving layer's recovery must
+        then resurrect the staging ring and evict the admission."""
+        if ordinal not in self.donation_errors or \
+                engine is not self._engine:
+            return
+        key = ("donation_error", ordinal)
+        if key in self._seen:
+            return
+        self._seen.add(key)
+        self.fired.append(key)
+        for name in engine.staging:
+            p = engine.pools[name]
+            if hasattr(p, "delete"):
+                p.delete()
+        raise InjectedFault(f"injected donation_error at admission "
+                            f"{ordinal}")
 
 
 @dataclasses.dataclass
@@ -47,7 +167,13 @@ class HeartbeatLedger:
         self._t0 = time.monotonic()
 
     def step_end(self, step: int) -> Optional[StragglerReport]:
+        if self._t0 is None:
+            # step_end without a matching step_start (e.g. a monitor
+            # thread observing a step it didn't open): no timing to
+            # record, not an error
+            return None
         dt = time.monotonic() - self._t0
+        self._t0 = None
         self.times.append(dt)
         hist = self.times[-self.window:]
         med = float(np.median(hist))

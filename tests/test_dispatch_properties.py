@@ -203,6 +203,43 @@ def test_property_overflow_chunks_match():
 
 
 # ---------------------------------------------------------------------------
+# crash-replay determinism: kill the pools after a random cut point, then
+# snapshot-restore + journal-replay must rebuild them bitwise
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10**6), st.integers(0, 1), st.integers(1, 8))
+def test_property_crash_replay_bitwise(seed, block_axis, n_instr):
+    """Run a random stream, snapshot at a random flush boundary, keep
+    running, then simulate donation death of EVERY pool: recover() must
+    restore the snapshot and replay the journal suffix to pools that are
+    bitwise-identical to the pre-crash state (records hold the spaced
+    rows verbatim, so replay rebuilds the exact tables)."""
+    rng = random.Random(seed)
+    nblk = rng.choice([32, 64])
+    stage_nblk = nblk // 2
+    prog = gen_program(rng, nblk, n_instr, stage_nblk=stage_nblk)
+    eng = mk_engine(nblk, block_axis, use_fused=True,
+                    stage_nblk=stage_nblk)
+    cut = rng.randint(0, len(prog))
+    run_program(eng, prog[:cut])
+    snap = eng.snapshot()
+    run_program(eng, prog[cut:])
+    want = {n: np.asarray(p) for n, p in eng.pools.items()}
+    replayable = len(eng.journal.since(snap.index))
+    for p in eng.pools.values():
+        p.delete()                      # the crash: every buffer donated
+    rep = eng.recover(snapshot=snap)
+    assert set(rep.pools_restored) == set(eng.pools)
+    assert rep.pools_lost == ()
+    assert rep.replayed_flushes == replayable
+    for name in eng.pools:
+        np.testing.assert_array_equal(
+            np.asarray(eng.pools[name]), want[name],
+            err_msg=f"pool {name} after replay (seed={seed} cut={cut})")
+
+
+# ---------------------------------------------------------------------------
 # three-way parity incl. the sharded mesh path (8 host devices, subprocess)
 # ---------------------------------------------------------------------------
 
@@ -302,6 +339,56 @@ def test_property_mesh_fused_three_way_parity(tmp_path):
     assert len(results) == len(cases)
     # the overflow case drains in exactly two collective launches
     assert results[-1]["launches"] == 2, results[-1]
+
+
+JOURNAL_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import json, random, sys
+import jax, numpy as np
+from jax.sharding import Mesh
+
+sys.path.insert(0, __TEST_DIR__)
+from test_dispatch_properties import gen_program, mk_engine, run_program
+
+mesh = Mesh(np.asarray(jax.devices()).reshape(2, 4), ("data", "model"))
+rng = random.Random(0xFA117)
+results = []
+for i in range(3):
+    nblk, snblk = 64, 32               # both divisible by the 8 shards
+    ba = rng.randrange(2)
+    prog = gen_program(rng, nblk, rng.randint(2, 6), stage_nblk=snblk)
+    eng = mk_engine(nblk, ba, use_fused=True, mesh=mesh, stage_nblk=snblk)
+    cut = rng.randint(0, len(prog))
+    run_program(eng, prog[:cut])
+    snap = eng.snapshot()
+    run_program(eng, prog[cut:])
+    want = {n: np.asarray(p) for n, p in eng.pools.items()}
+    for p in eng.pools.values():
+        p.delete()
+    rep = eng.recover(snapshot=snap)
+    for name in eng.pools:
+        np.testing.assert_array_equal(
+            np.asarray(eng.pools[name]), want[name],
+            err_msg=f"pool {name} case={i} ba={ba} cut={cut}")
+    results.append({"replayed": rep.replayed_flushes,
+                    "restored": len(rep.pools_restored)})
+print("RESULTS:" + json.dumps(results))
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.mesh
+def test_property_crash_replay_bitwise_mesh(tmp_path):
+    """The crash-replay property under the 8-device collective drain:
+    replayed flushes re-partition into the same ShardPlans, so the
+    restored pools match bitwise on the mesh path too."""
+    child = JOURNAL_CHILD.replace(
+        "__TEST_DIR__", repr(os.path.dirname(os.path.abspath(__file__))))
+    results = run_device_subprocess(child, tmp_path=tmp_path)
+    assert len(results) == 3
+    assert all(r["restored"] == 4 for r in results), results
 
 
 # ---------------------------------------------------------------------------

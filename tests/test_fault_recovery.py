@@ -1,0 +1,369 @@
+"""Fault-tolerant serving: ticket journal, checkpoint streams, recovery.
+
+Covers the failure-injection matrix end to end:
+
+* journal record contents and the bounded-ring replay contract;
+* launch failures (flush aborts before chunk 0) and mid-flush aborts
+  (multi-chunk flushes failing between chunks) recovered by suffix
+  re-drain — final state bitwise-equal to the clean run;
+* retry/backoff on flaky re-drains and RecoveryError on exhaustion;
+* FaultPlan engine binding (a bound plan never fires on another engine);
+* write-scoped FlushTickets (a checkpoint ticket survives donation of
+  untouched pools);
+* PoolCheckpoint quiesced save → restore bitwise;
+* ServingEngine recovery: donated-admission errors evict + re-admit with
+  greedy tokens bitwise-identical to the failure-free run, and a dead
+  double-buffered ring degrades to single-buffer capacity.
+
+Run with ``make test-fault`` (marker ``fault``; wired into ``make test``).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager, PoolCheckpoint
+from repro.core import (BlockRef, PoolGroup, PoolSnapshot, PoolSpec,
+                        RecoveryError, RowCloneEngine, SubarrayAllocator,
+                        TicketJournal)
+from repro.runtime.fault import FaultPlan, InjectedFault
+
+pytestmark = pytest.mark.fault
+
+
+def mk_engine(nblk=32, spill_nblk=0, stage_nblk=0, nslabs=4):
+    """Flat (block_axis=0) k/v engine, optionally with staging and spill
+    pools, over deterministic non-zero pool contents.  ZI off so every
+    command physically moves bytes (the journal's replay target)."""
+    blk = (4, 8)
+    n = int(np.prod(blk))
+    pools = {
+        "k": jnp.arange(nblk * n, dtype=jnp.float32).reshape(
+            (nblk,) + blk),
+        "v": -jnp.arange(nblk * n, dtype=jnp.float32).reshape(
+            (nblk,) + blk),
+    }
+    specs = [PoolSpec("k", nblk, blk, jnp.float32),
+             PoolSpec("v", nblk, blk, jnp.float32)]
+    if stage_nblk:
+        for pn in ("k", "v"):
+            pools[f"{pn}_stage"] = jnp.full((stage_nblk,) + blk, 7.0,
+                                            jnp.float32)
+            specs.append(PoolSpec(f"{pn}_stage", stage_nblk, blk,
+                                  jnp.float32, role="staging", paired=pn))
+    if spill_nblk:
+        for pn in ("k", "v"):
+            pools[f"{pn}_spill"] = jnp.zeros((spill_nblk,) + blk,
+                                             jnp.float32)
+            specs.append(PoolSpec(f"{pn}_spill", spill_nblk, blk,
+                                  jnp.float32, role="spill", paired=pn))
+    alloc = SubarrayAllocator(nblk, nslabs)
+    return RowCloneEngine(pools, alloc, group=PoolGroup(specs),
+                          enable_zi=False)
+
+
+def pools_of(eng):
+    return {n: np.asarray(p) for n, p in eng.pools.items()}
+
+
+def assert_pools_equal(a, b):
+    assert sorted(a) == sorted(b)
+    for name in a:
+        np.testing.assert_array_equal(a[name], b[name], err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# journal contents
+# ---------------------------------------------------------------------------
+
+def test_journal_records_flushes():
+    eng = mk_engine()
+    eng.memcopy([(0, 1)])                       # flush 0 (default stream)
+    s = eng.stream("aux")
+    s.memcopy([(2, 3), (4, 5)])
+    t = s.flush()                               # flush 1
+    recs = eng.journal.records
+    assert [r.index for r in recs] == [0, 1]
+    assert recs[0].stream == "default" and recs[1].stream == "aux"
+    assert recs[1].rows == ((0, 2, 3), (0, 4, 5))   # OP_FPM_COPY rows
+    assert recs[1].launches == t.launches == 1
+    assert not any(r.aborted for r in recs)
+    assert eng.journal.head_index == 0
+    assert eng.journal.last_index == t.index == 1
+    assert [r.index for r in eng.journal.since(0)] == [1]
+
+
+def test_journal_ring_bounds_capacity():
+    eng = mk_engine()
+    eng.journal = TicketJournal(capacity=4)
+    for _ in range(8):
+        eng.memcopy([(0, 1)])
+    assert len(eng.journal) == 4
+    assert eng.journal.head_index == 4          # oldest fell off
+
+
+# ---------------------------------------------------------------------------
+# injected failures + recovery, engine level
+# ---------------------------------------------------------------------------
+
+def test_launch_failure_recovers_bitwise():
+    clean = mk_engine()
+    eng = mk_engine()
+    eng.memcopy([(0, 1)])
+    clean.memcopy([(0, 1)])
+    plan = FaultPlan(launch_failures=(eng.next_flush_index,))
+    with plan.active(eng):
+        with pytest.raises(InjectedFault):
+            eng.memcopy([(2, 3), (4, 5)])
+    assert plan.fired == [("launch_failure", 1)]
+    # nothing dispatched: the aborted flush stashes the WHOLE row set
+    assert len(eng._aborted) == 1
+    assert eng._aborted[0].suffix == ((0, 2, 3), (0, 4, 5))
+    rep = eng.recover()
+    assert rep.redrained_flushes == 1 and rep.retries == 0
+    clean.memcopy([(2, 3), (4, 5)])
+    assert_pools_equal(pools_of(eng), pools_of(clean))
+    # chunk 0 never dispatched, so no aborted prefix was journaled — the
+    # re-drain is an ordinary record and replay covers the full history
+    assert not any(r.aborted for r in eng.journal.records)
+
+
+def test_midflush_abort_journals_prefix_and_redrains():
+    # 600 rows in one flush -> two 512-row-bucket chunks; the abort
+    # fires between them, so a 512-row prefix has already dispatched
+    nblk = 2048
+    pairs = [(2 * i, 2 * i + 1) for i in range(600)]
+    clean = mk_engine(nblk=nblk)
+    eng = mk_engine(nblk=nblk)
+    init = pools_of(eng)                        # pre-history state
+    plan = FaultPlan(midflush_aborts=(eng.next_flush_index,))
+    with plan.active(eng):
+        with pytest.raises(InjectedFault):
+            eng.memcopy(pairs)
+    assert plan.fired == [("midflush_abort", 0)]
+    # the dispatched prefix is journaled as an aborted record; the
+    # undispatched suffix is stashed for recover()
+    assert eng.journal.records[-1].aborted
+    assert len(eng.journal.records[-1].rows) == 512
+    assert len(eng._aborted[0].suffix) == 600 - 512
+    rep = eng.recover()
+    assert rep.redrained_flushes == 1
+    clean.memcopy(pairs)
+    assert_pools_equal(pools_of(eng), pools_of(clean))
+    # snapshot+replay across the aborted history is still bitwise exact:
+    # the prefix record and the re-drain record replay in order
+    want = pools_of(eng)
+    for p in eng.pools.values():
+        p.delete()
+    rep2 = eng.recover(snapshot=PoolSnapshot(index=-1, arrays=init))
+    assert set(rep2.pools_restored) == set(init) and not rep2.pools_lost
+    assert rep2.replayed_flushes == len(eng.journal.records) == 2
+    assert_pools_equal(pools_of(eng), want)
+
+
+def test_redrain_retries_with_backoff_then_succeeds():
+    eng = mk_engine()
+    fails = {"n": 3}                 # initial abort + 2 failed retries
+
+    def flaky(info):
+        if info.engine is eng and fails["n"] > 0:
+            fails["n"] -= 1
+            raise InjectedFault("flaky")
+
+    from repro.kernels.fused_dispatch import (add_drain_guard,
+                                              remove_drain_guard)
+    add_drain_guard(flaky)
+    try:
+        with pytest.raises(InjectedFault):
+            eng.memcopy([(0, 1)])
+        rep = eng.recover(max_retries=3, backoff=0.001)
+    finally:
+        remove_drain_guard(flaky)
+    assert rep.retries == 2 and rep.redrained_flushes == 1
+    np.testing.assert_array_equal(np.asarray(eng.pools["k"][1]),
+                                  np.asarray(eng.pools["k"][0]))
+
+
+def test_redrain_exhaustion_raises_recovery_error():
+    eng = mk_engine()
+
+    def always(info):
+        if info.engine is eng:
+            raise InjectedFault("always")
+
+    from repro.kernels.fused_dispatch import (add_drain_guard,
+                                              remove_drain_guard)
+    add_drain_guard(always)
+    try:
+        with pytest.raises(InjectedFault):
+            eng.memcopy([(0, 1)])
+        with pytest.raises(RecoveryError):
+            eng.recover(max_retries=2, backoff=0.001)
+    finally:
+        remove_drain_guard(always)
+
+
+def test_fault_plan_binds_to_one_engine():
+    a, b = mk_engine(), mk_engine()
+    plan = FaultPlan(launch_failures=(0,))
+    with plan.active(a):
+        b.memcopy([(0, 1)])          # b's flush 0: must NOT fire
+        with pytest.raises(InjectedFault):
+            a.memcopy([(0, 1)])
+    assert plan.fired == [("launch_failure", 0)]
+    a.recover()
+    assert_pools_equal(pools_of(a), pools_of(b))
+
+
+def test_recover_evicts_queued_promotions_when_staging_dies():
+    eng = mk_engine(stage_nblk=4)
+    slots = eng.stage_blocks(2)
+    s = eng.stream("serve")
+    s.promote_staged(list(zip(slots, [0, 1])))
+    assert len(s.queue) == 4         # 2 slots x k/v pool pairs, queued
+    # donation death of the staging ring while promotions are queued
+    for name in eng.staging:
+        eng.pools[name].delete()
+    rep = eng.recover()
+    assert rep.evicted_promotions == 4
+    assert set(rep.pools_lost) == {"k_stage", "v_stage"}
+    assert len(s.queue) == 0
+    assert len(eng._stage_free) == eng.stage_capacity == 4
+
+
+# ---------------------------------------------------------------------------
+# write-scoped tickets + the checkpoint stream
+# ---------------------------------------------------------------------------
+
+def test_ticket_wait_scoped_to_touched_pools():
+    eng = mk_engine(spill_nblk=4)
+    ck = eng.stream("ckpt")
+    ck.memcopy_cross([(BlockRef("k", 0), BlockRef("k_spill", 0)),
+                      (BlockRef("v", 0), BlockRef("v_spill", 0))])
+    t = ck.flush()
+    assert t.touched == ("k_spill", "v_spill")
+    # a decode step donates the primaries; the ckpt ticket must survive
+    want = np.asarray(eng.pools["k"][0])
+    eng.pools["k"].delete()
+    eng.pools["v"].delete()
+    assert t.expired                     # conservatively: SOME pool died
+    t.wait()                             # ...but the touched set is live
+    np.testing.assert_array_equal(
+        t.block_state(BlockRef("k_spill", 0)), want)
+    with pytest.raises(RuntimeError, match="expired"):
+        t.block_state(BlockRef("k", 0))
+
+
+def test_pool_checkpoint_quiesced_roundtrip(tmp_path):
+    eng = mk_engine(nblk=16, spill_nblk=8)
+    pc = PoolCheckpoint(eng, CheckpointManager(str(tmp_path)), window=8)
+    eng.memcopy([(0, 3)])
+    want = {n: np.asarray(eng.pools[n]) for n in ("k", "v")}
+    pc.drain()
+    assert pc.passes == 1
+    snap = pc.latest()
+    assert snap is not None and sorted(snap.arrays) == ["k", "v"]
+    # the persisted bytes match the quiesce point exactly...
+    for n in ("k", "v"):
+        np.testing.assert_array_equal(snap.arrays[n], want[n])
+    # ...and the snapshot's index is the pass's last ckpt flush, so the
+    # snapshot+replay contract holds across post-snapshot movement
+    assert snap.index == eng.journal.last_index
+    eng.memcopy([(3, 5)])
+    want2 = {n: np.asarray(eng.pools[n]) for n in ("k", "v")}
+    eng.pools["k"].delete()
+    eng.pools["v"].delete()
+    rep = eng.recover(snapshot=snap)
+    assert set(rep.pools_restored) == {"k", "v"}
+    assert rep.replayed_flushes == 1     # just the post-snapshot flush
+    for n in ("k", "v"):
+        np.testing.assert_array_equal(np.asarray(eng.pools[n]), want2[n])
+
+
+def test_pool_checkpoint_requires_spill_pools(tmp_path):
+    eng = mk_engine()
+    with pytest.raises(ValueError, match="spill"):
+        PoolCheckpoint(eng, CheckpointManager(str(tmp_path)))
+
+
+# ---------------------------------------------------------------------------
+# serving-level recovery (prefill donation, eviction + re-admission)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def serving_setup():
+    from repro.configs import get_config
+    from repro.models import build_model, split_params
+    cfg = get_config("llama3.2-3b").reduced()
+    model = build_model(cfg)
+    params, _ = split_params(model.init_params(jax.random.key(0)))
+    return cfg, params
+
+
+def _serve(cfg, params, **kw):
+    from repro.launch.serve import ServingEngine
+    return ServingEngine(cfg, params, max_seqs=8, max_blocks_per_seq=8,
+                         **kw)
+
+
+def test_serving_faults_recover_token_identical(serving_setup, tmp_path):
+    """Launch failure mid-serve + donated-admission error: with
+    auto-recovery and re-admission, greedy tokens are bitwise-identical
+    to the failure-free run, and the background checkpoint stream keeps
+    ticking."""
+    cfg, params = serving_setup
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(2, cfg.vocab_size, size=16).astype(np.int32)
+               for _ in range(3)]
+
+    def drive(eng, plan=None):
+        order = []                      # sids in admission order
+        for p in prompts[:2]:
+            order.append(eng.add_request(p))
+        for r in range(5):
+            if r == 1 and plan is not None:
+                # target the round's next drain, whichever stream it is
+                plan.launch_failures += (eng.engine.next_flush_index,)
+            if r == 3:
+                if plan is not None:
+                    plan.donation_errors += (eng._admission_ordinal,)
+                    with pytest.raises(InjectedFault):
+                        eng.add_request(prompts[2])
+                    # the failed admission was evicted for re-admission
+                    assert len(eng.evicted_sids) == 1
+                order.append(eng.add_request(prompts[2]))
+            eng.decode_round()
+        return [eng.tokens[s] for s in order if s in eng.tokens]
+
+    ref = drive(_serve(cfg, params))
+    plan = FaultPlan()
+    eng = _serve(cfg, params, fault_plan=plan, auto_recover=True,
+                 ckpt_pages=8, ckpt_dir=str(tmp_path))
+    got = drive(eng, plan)
+    assert [k for k, _ in plan.fired] == ["launch_failure",
+                                          "donation_error"]
+    assert eng.last_recovery is not None
+    assert ref == got                   # bitwise greedy-token identity
+    # the ckpt stream kept running after both recoveries
+    assert eng.pool_ckpt._cursor > 0 or eng.pool_ckpt.passes > 0
+
+
+def test_serving_double_buffer_degrades_on_dead_ring(serving_setup):
+    """A donation error that kills a double-buffered staging ring brings
+    it back at SINGLE-buffer capacity (degraded mode), and the evicted
+    admission re-admits through the degraded ring."""
+    cfg, params = serving_setup
+    rng = np.random.default_rng(1)
+    plan = FaultPlan(donation_errors=(0,))
+    eng = _serve(cfg, params, double_buffer=True, max_admit_pages=8,
+                 fault_plan=plan, auto_recover=True)
+    assert eng.engine.stage_capacity == 16      # live + shadow halves
+    p = rng.integers(2, cfg.vocab_size, size=16).astype(np.int32)
+    with pytest.raises(InjectedFault):
+        eng.add_request(p)
+    assert eng.last_recovery is not None and eng.last_recovery.degraded
+    assert len(eng.engine._stage_free) == eng.ring_capacity == 8
+    sid = eng.add_request(p)
+    toks = eng.decode_round()
+    assert sid in toks

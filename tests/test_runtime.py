@@ -60,17 +60,36 @@ def test_run_with_restarts_gives_up():
         run_with_restarts(loop, {}, ckpt, RestartPolicy(max_restarts=2))
 
 
-def test_straggler_detection():
+def test_straggler_detection(monkeypatch):
+    # drive the ledger's clock explicitly: real sleeps made the warm-up
+    # steps flake under load (a 2x scheduler hiccup IS a straggler)
+    from repro.runtime import fault as fault_mod
+    clock = {"t": 0.0}
+    monkeypatch.setattr(fault_mod.time, "monotonic", lambda: clock["t"])
     ledger = HeartbeatLedger(window=20, threshold=2.0)
     for step in range(8):
         ledger.step_start()
-        time.sleep(0.01)
+        clock["t"] += 0.01
         assert ledger.step_end(step) is None
     ledger.step_start()
-    time.sleep(0.08)                # 8x median
+    clock["t"] += 0.08              # 8x median
     rep = ledger.step_end(99)
     assert rep is not None and rep.ratio > 2.0
     assert ledger.reports[-1].step == 99
+
+
+def test_step_end_without_step_start_returns_none():
+    # regression: step_end before any step_start used to TypeError on
+    # the None start time; it must be a clean no-op
+    ledger = HeartbeatLedger()
+    assert ledger.step_end(0) is None
+    assert ledger.times == []
+    # and a start consumed by one end doesn't leak into a second end
+    ledger.step_start()
+    ledger.step_end(1)
+    assert len(ledger.times) == 1
+    assert ledger.step_end(2) is None
+    assert len(ledger.times) == 1
 
 
 def test_elastic_remesh_preserves_tp_and_global_batch():

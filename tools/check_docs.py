@@ -28,6 +28,10 @@ REQUIRED_SYMBOLS = (
     "repro.core.stream.FlushTicket",
     "repro.core.cmdqueue.space_war_rows",
     "repro.models.paged.pool_partition_spec",
+    "repro.core.journal.TicketJournal",
+    "repro.checkpoint.pool_checkpoint.PoolCheckpoint",
+    "repro.runtime.fault.FaultPlan",
+    "repro.kernels.fused_dispatch.add_drain_guard",
 )
 
 #: dataclass-generated or inherited members that need no prose of their own
