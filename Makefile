@@ -20,14 +20,19 @@
 #                       1.0 launch/round, if ring/burst decode stops
 #                       matching the baseline greedy tokens, or if the
 #                       fault_recovery leg stops restoring 1.0
-#                       launch/round + bitwise tokens within 2 rounds
+#                       launch/round + bitwise tokens within 2 rounds;
+#                       runs bench-traffic first
+#   make bench-traffic- serve_traffic CI gate: scheduler churn + QoS
+#                       preemption must hold <= 1.0 launch/round, keep
+#                       bitwise resume parity, and not regress p99 token
+#                       latency > 1.5x vs committed BENCH_dispatch.json
 #   make bench        - full paper-figure benchmark sweep
 
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 PY := PYTHONPATH=$(PYTHONPATH) python
 MESH_FLAGS := XLA_FLAGS=--xla_force_host_platform_device_count=8
 
-.PHONY: test test-mesh test-fault test-fast check-docs bench-smoke bench-serve bench
+.PHONY: test test-mesh test-fault test-fast check-docs bench-smoke bench-serve bench-traffic bench
 
 test: check-docs test-mesh test-fault
 	$(PY) -m pytest -x -q -m "not mesh and not fault"
@@ -47,8 +52,11 @@ check-docs:
 bench-smoke:
 	$(PY) benchmarks/bench_dispatch.py
 
-bench-serve:
+bench-serve: bench-traffic
 	$(PY) benchmarks/bench_dispatch.py --serve-smoke
+
+bench-traffic:
+	$(PY) benchmarks/bench_dispatch.py --traffic-smoke
 
 bench:
 	$(PY) -m benchmarks.run

@@ -27,10 +27,18 @@ journal and the background checkpoint stream — greedy tokens must stay
 bitwise-identical (in admission order) and the serve flush must return
 to <= 1 launch/round within 2 rounds.
 
+Schema v7 adds the ``serve_traffic`` section: closed-loop traffic through
+the :class:`~repro.launch.scheduler.RequestScheduler` (continuous
+batching, per-tenant QoS lanes on dedicated command streams, preemption
+by demotion to the spill pools) under Poisson and bursty arrivals — the
+gate holds launches/round at <= 1.0 WITH churn and preemption active,
+and preempted-then-resumed sequences must produce bitwise-identical
+greedy tokens vs an unpreempted run (CPU and the 8-device mesh leg).
+
 Emits ``BENCH_dispatch.json``:
 
 {
-  "schema": "bench_dispatch/v6",
+  "schema": "bench_dispatch/v7",
   "backend": "cpu" | "tpu",
   "block": [page, KVH, D], "nblk": int, "pools": ["k", "v"],
   "rows": [{
@@ -93,11 +101,30 @@ Emits ``BENCH_dispatch.json``:
       },
       "mesh": {"devices": 8, "mesh_shape": [2, 4],    # sharded-batch leg
                "rows": [...], "summary": {...}} | null
+  },
+  "serve_traffic": {           # RequestScheduler under closed-loop load
+      "rounds": int, "tenants": {"gold": 2, "silver": 1, "free": 0},
+      "legs": {"poisson"|"bursty": {
+          "max_launches_per_round": float,  # gate: <= 1.0 under churn
+          "mean_launches_per_round": float,
+          "submitted": int, "completed": int,
+          "preempted_requests": int,        # demoted at least once
+          "per_tenant": {tenant: {"submitted", "completed",
+              "goodput_tok_s", "p50_token_latency_rounds",
+              "p99_token_latency_rounds", "p50_ttft_rounds",
+              "preemptions"}}}},
+      "preempt_parity": {      # demote -> resume vs unpreempted run
+          "tokens_match": bool,             # bitwise greedy parity
+          "preempted": int,                 # victims actually demoted
+          "max_launches_per_round": float},
+      "mesh": {"devices": 8, "mesh_shape": [2, 4],
+               "preempt_parity": {...}} | null
   }
 }
 
 CLI: PYTHONPATH=src python benchmarks/bench_dispatch.py [--out PATH]
                          [--skip-mesh] [--skip-serve] [--serve-smoke]
+                         [--traffic-smoke]
 """
 from __future__ import annotations
 
@@ -504,6 +531,216 @@ def _run_serve_section(skip_mesh: bool) -> Optional[Dict]:
 
 
 # ---------------------------------------------------------------------------
+# serve_traffic — RequestScheduler under closed-loop Poisson/bursty load
+# ---------------------------------------------------------------------------
+
+TRAFFIC_ROUNDS = 32
+TRAFFIC_PATTERNS = ("poisson", "bursty")
+TRAFFIC_PARITY_TOKENS = 8
+
+
+def _traffic_driver():
+    """Import the traffic driver from the sibling benchmark module."""
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    try:
+        import fig34_multitenant
+    finally:
+        sys.path.pop(0)
+    return fig34_multitenant
+
+
+def _traffic_parity(mesh=None) -> Dict:
+    """Preempt→demote→resume greedy-token parity vs an unpreempted run.
+
+    A deliberately tiny engine (2 batch slots) runs two free-tenant
+    requests; a gold request arrives mid-flight and must preempt one.
+    Every request's token stream must match, bitwise, the same prompts
+    decoded on a roomy engine that never preempts — the demoted bytes
+    parked in the spill slots ARE the KV pages.  Also reports the worst
+    round's launch count (preemption must not cost extra launches)."""
+    from repro.configs import get_config
+    from repro.launch.scheduler import RequestScheduler, TenantSpec
+    from repro.launch.serve import ServingEngine
+    from repro.models import build_model, split_params
+    cfg = get_config(SERVE_ARCH).reduced()
+    model = build_model(cfg)
+    params, _ = split_params(model.init_params(jax.random.key(0)))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(2, cfg.vocab_size, size=16).astype(np.int32)
+               for _ in range(3)]
+    tenants = [TenantSpec("gold", 2), TenantSpec("free", 0)]
+
+    def drive(eng):
+        sched = RequestScheduler(eng, tenants)
+        rids = [sched.submit("free", prompts[0],
+                             max_new_tokens=TRAFFIC_PARITY_TOKENS),
+                sched.submit("free", prompts[1],
+                             max_new_tokens=TRAFFIC_PARITY_TOKENS)]
+        sched.step()
+        sched.step()
+        rids.append(sched.submit("gold", prompts[2],
+                                 max_new_tokens=TRAFFIC_PARITY_TOKENS))
+        sched.drain(max_rounds=120)
+        return ([sched.requests[r].tokens_out for r in rids],
+                sum(q.preemptions for q in sched.requests.values()),
+                max(r.launches for r in sched.reports))
+
+    roomy = ServingEngine(cfg, params, mesh=mesh, max_seqs=8,
+                          max_blocks_per_seq=8, max_admit_pages=8,
+                          double_buffer=True)
+    ref_tokens, ref_preempted, _ = drive(roomy)
+    tight = ServingEngine(cfg, params, mesh=mesh, max_seqs=2,
+                          max_blocks_per_seq=8, num_slabs=2,
+                          max_admit_pages=8, double_buffer=True,
+                          spill_pages=8)
+    tokens, preempted, max_launches = drive(tight)
+    return {
+        "tokens_match": tokens == ref_tokens,
+        "preempted": int(preempted),
+        "ref_preempted": int(ref_preempted),   # must be 0 (roomy engine)
+        "max_launches_per_round": float(max_launches),
+    }
+
+
+def _traffic_mesh_child() -> None:
+    from jax.sharding import Mesh
+    mesh = Mesh(np.asarray(jax.devices()).reshape(MESH_SHAPE),
+                ("data", "model"))
+    print("TRAFFICPARITY:" + json.dumps(_traffic_parity(mesh=mesh)))
+
+
+def _run_traffic_section(skip_mesh: bool) -> Dict:
+    mt = _traffic_driver()
+    legs = {}
+    for pattern in TRAFFIC_PATTERNS:
+        res = mt.run_traffic(pattern, rounds=TRAFFIC_ROUNDS, seed=0)
+        legs[pattern] = {
+            "max_launches_per_round": res.max_launches_per_round(),
+            "mean_launches_per_round": float(np.mean(res.launches)),
+            "submitted": res.submitted,
+            "completed": res.completed,
+            "preempted_requests": len(res.preempted_rids),
+            "per_tenant": res.per_tenant,
+        }
+    section = {
+        "rounds": TRAFFIC_ROUNDS,
+        "tenants": {t.name: t.priority for t in mt.TENANTS},
+        "legs": legs,
+        "preempt_parity": _traffic_parity(),
+        "mesh": None,
+    }
+    if skip_mesh:
+        return section
+    out = _run_child("--traffic-mesh-child")
+    lines = [] if out is None or out.returncode != 0 else [
+        l for l in out.stdout.splitlines()
+        if l.startswith("TRAFFICPARITY:")]
+    if not lines:
+        err = "timeout" if out is None else out.stderr[-2000:]
+        print(f"[bench_dispatch] traffic mesh leg failed:\n{err}")
+        return section
+    section["mesh"] = {
+        "devices": int(np.prod(MESH_SHAPE)),
+        "mesh_shape": list(MESH_SHAPE),
+        "preempt_parity": json.loads(lines[0][len("TRAFFICPARITY:"):]),
+    }
+    return section
+
+
+def _print_traffic(section: Dict) -> None:
+    for pattern, leg in section["legs"].items():
+        print(f"  {pattern:>8}: {leg['submitted']} arrived, "
+              f"{leg['completed']} completed, "
+              f"{leg['preempted_requests']} preempted, max "
+              f"{leg['max_launches_per_round']:.1f} launches/round")
+        for t, m in leg["per_tenant"].items():
+            print(f"    {t:>6}: p50/p99 tok-lat "
+                  f"{m['p50_token_latency_rounds']:.1f}/"
+                  f"{m['p99_token_latency_rounds']:.1f} rounds  "
+                  f"goodput {m['goodput_tok_s']:.1f} tok/s  "
+                  f"preemptions {m['preemptions']}")
+    p = section["preempt_parity"]
+    print(f"  preempt parity: tokens match {p['tokens_match']} "
+          f"({p['preempted']} demotions, max "
+          f"{p['max_launches_per_round']:.1f} launches/round)")
+    if section.get("mesh"):
+        mp = section["mesh"]["preempt_parity"]
+        print(f"  preempt parity (mesh, {section['mesh']['devices']} "
+              f"devices): tokens match {mp['tokens_match']} "
+              f"({mp['preempted']} demotions)")
+
+
+def traffic_smoke(baseline_path: str = "BENCH_dispatch.json") -> int:
+    """CI gate (``make bench-traffic``): FAIL (exit 1) if
+
+    * any traffic leg's launches/round exceeds 1.0 under churn (the
+      continuous-batching + preemption traffic must still drain each
+      round as at most one fused launch),
+    * no preemption actually happened (the leg stopped exercising the
+      demotion path),
+    * preempted-then-resumed sequences' greedy tokens diverge from the
+      unpreempted run (CPU leg; the mesh leg runs under ``--skip-mesh``-
+      less full benchmarks), or
+    * a tenant's p99 token latency regresses > 1.5x against the
+      committed ``BENCH_dispatch.json`` baseline (arrivals and the
+      scheduler are deterministic at a fixed seed, so this is a real
+      regression, not noise; skipped when no baseline has the section).
+    """
+    section = _run_traffic_section(skip_mesh=True)
+    _print_traffic(section)
+    ok = True
+    for pattern, leg in section["legs"].items():
+        if leg["max_launches_per_round"] > 1.0:
+            print(f"FAIL: {pattern} leg hit "
+                  f"{leg['max_launches_per_round']:.2f} launches/round "
+                  "> 1.0 (churn or preemption now forces extra drains)")
+            ok = False
+        if leg["preempted_requests"] == 0:
+            print(f"FAIL: {pattern} leg preempted nothing — the traffic "
+                  "no longer exercises demotion")
+            ok = False
+    parity = section["preempt_parity"]
+    if not parity["tokens_match"]:
+        print("FAIL: preempted-then-resumed sequences' greedy tokens "
+              "diverged from the unpreempted run")
+        ok = False
+    if parity["preempted"] == 0:
+        print("FAIL: parity scenario demoted nothing")
+        ok = False
+    if parity["max_launches_per_round"] > 1.0:
+        print(f"FAIL: preemption cost extra launches "
+              f"({parity['max_launches_per_round']:.2f}/round > 1.0)")
+        ok = False
+    baseline = None
+    if os.path.exists(baseline_path):
+        try:
+            with open(baseline_path) as f:
+                baseline = json.load(f).get("serve_traffic")
+        except (OSError, ValueError):
+            baseline = None
+    if baseline:
+        for pattern, leg in section["legs"].items():
+            base_leg = baseline.get("legs", {}).get(pattern)
+            if not base_leg:
+                continue
+            for t, m in leg["per_tenant"].items():
+                bm = base_leg["per_tenant"].get(t)
+                if not bm:
+                    continue
+                base_p99 = bm["p99_token_latency_rounds"]
+                if base_p99 > 0 and \
+                        m["p99_token_latency_rounds"] > 1.5 * base_p99:
+                    print(f"FAIL: {pattern}/{t} p99 token latency "
+                          f"{m['p99_token_latency_rounds']:.1f} rounds "
+                          f"> 1.5x baseline {base_p99:.1f}")
+                    ok = False
+    if ok:
+        print("bench-traffic smoke OK: continuous batching + preemption "
+              "hold 1.0 launches/round with bitwise resume parity")
+    return 0 if ok else 1
+
+
+# ---------------------------------------------------------------------------
 # mesh A/B — runs in a subprocess with 8 forced host devices (jax locks the
 # device count at first init, so the parent process can't host it)
 # ---------------------------------------------------------------------------
@@ -573,7 +810,7 @@ def run(skip_mesh: bool = False, skip_serve: bool = False) -> Dict:
     speedup = (np.mean([r["us_per_flush"] for r in small_s]) /
                np.mean([r["us_per_flush"] for r in small_f]))
     return {
-        "schema": "bench_dispatch/v6",
+        "schema": "bench_dispatch/v7",
         "backend": jax.default_backend(),
         "block": list(BLOCK),
         "nblk": NBLK,
@@ -582,6 +819,8 @@ def run(skip_mesh: bool = False, skip_serve: bool = False) -> Dict:
         "summary": {"speedup_small_batch": float(speedup)},
         "mesh": None if skip_mesh else _run_mesh_section(),
         "serve_round": None if skip_serve else _run_serve_section(skip_mesh),
+        "serve_traffic": None if skip_serve
+        else _run_traffic_section(skip_mesh),
     }
 
 
@@ -695,9 +934,16 @@ def main() -> None:
     ap.add_argument("--serve-smoke", action="store_true",
                     help="CI gate: CPU serve_round legs only; exit 1 if "
                          "fused launches/round regress above 1.0")
+    ap.add_argument("--traffic-smoke", action="store_true",
+                    help="CI gate: serve_traffic legs only; exit 1 if "
+                         "churn/preemption rounds exceed 1.0 launches, "
+                         "resume parity breaks, or p99 regresses vs the "
+                         "committed baseline")
     ap.add_argument("--mesh-child", action="store_true",
                     help=argparse.SUPPRESS)
     ap.add_argument("--serve-mesh-child", action="store_true",
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--traffic-mesh-child", action="store_true",
                     help=argparse.SUPPRESS)
     args = ap.parse_args()
     if args.mesh_child:
@@ -706,8 +952,13 @@ def main() -> None:
     if args.serve_mesh_child:
         _serve_child()
         return
+    if args.traffic_mesh_child:
+        _traffic_mesh_child()
+        return
     if args.serve_smoke:
         sys.exit(serve_smoke())
+    if args.traffic_smoke:
+        sys.exit(traffic_smoke())
     result = run(skip_mesh=args.skip_mesh, skip_serve=args.skip_serve)
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
@@ -733,6 +984,11 @@ def main() -> None:
             print(f"serve_round mesh ({sr['mesh']['devices']} host "
                   f"devices):")
             _print_serve(sr["mesh"])
+    if result.get("serve_traffic"):
+        st = result["serve_traffic"]
+        print(f"\nserve_traffic ({st['rounds']} rounds, tenants "
+              f"{st['tenants']}):")
+        _print_traffic(st)
     print(f"-> {args.out}")
 
 

@@ -1,4 +1,4 @@
-"""Figure 3/4 analogue — multi-tenant interference.
+"""Figure 3/4 analogue — multi-tenant interference, and the traffic driver.
 
 Paper Figs. 3/4: multiprogrammed workloads (copy-intensive + memory-
 intensive) show RowClone(-ZI) lifting weighted speedup by freeing the
@@ -13,9 +13,25 @@ bandwidth; ON they ride the DMA path / metadata bits.
 
 Weighted speedup = mean over tenants of t_alone / t_shared (paper's metric),
 reported for 1..3 copy-intensive tenants out of 4.
+
+**Closed-loop traffic driver** (:func:`run_traffic`): the production-shaped
+leg.  Requests arrive per round from a Poisson or bursty process onto
+per-tenant QoS lanes (gold > silver > free) of a
+:class:`~repro.launch.scheduler.RequestScheduler` over a deliberately
+UNDERSIZED engine, so the round loop exercises continuous admission,
+priority preemption by demotion, and resumption.  Reported per tenant:
+p50/p99 token latency (rounds between consecutive tokens — preemption
+stalls show up here), time-to-first-token, goodput (completed requests'
+tokens/s), and preemption counts; plus the per-round launch series the
+``serve_traffic`` gate holds at <= 1.0.
+
+CLI:  PYTHONPATH=src python benchmarks/fig34_multitenant.py \
+          --traffic poisson --rounds 48
 """
 from __future__ import annotations
 
+import argparse
+import dataclasses
 import time
 from typing import Dict, List
 
@@ -23,6 +39,7 @@ import jax
 import numpy as np
 
 from repro.configs import RowCloneConfig, get_config
+from repro.launch.scheduler import RequestScheduler, TenantSpec
 from repro.launch.serve import ServingEngine
 from repro.models import build_model, split_params
 
@@ -48,15 +65,17 @@ def _run_mix(cfg, params, n_copy: int, n_plain: int, on: bool) -> float:
         for sid in copyers:
             kids.extend(eng.fork(sid, 1))
         if not on:
-            # baseline: forks must physically copy every block up front
+            # baseline: forks must physically copy every block up front.
+            # The remap goes through the cache's PUBLIC resettlement API
+            # (remap_blocks frees the stale blocks and rebuilds the
+            # device tables) — no reaching into private cache state
             for sid in kids:
-                blocks = eng.cache.blocks_of(sid)
-                for j, b in enumerate(blocks):
+                fresh = []
+                for b in eng.cache.blocks_of(sid):
                     nb = eng.engine.alloc.alloc_near(b)
                     eng.engine.memcopy([(b, nb)])
-                    eng.engine.alloc.free([b])
-                    eng.cache.seqs[sid].blocks[j] = nb
-                eng.cache._dirty = True
+                    fresh.append(nb)
+                eng.cache.remap_blocks(sid, fresh)
         eng.decode_round()
         for sid in kids:
             eng.free(sid)
@@ -83,3 +102,167 @@ def run() -> List[Dict]:
                          ws_baseline=res["off"], ws_rowclone=res["on"],
                          improvement=res["on"] / max(res["off"], 1e-9)))
     return rows
+
+
+# ---------------------------------------------------------------------------
+# closed-loop traffic driver (RequestScheduler under Poisson/bursty load)
+# ---------------------------------------------------------------------------
+
+#: tenant mix for the traffic legs: gold preempts silver preempts free
+TENANTS = (TenantSpec("gold", priority=2),
+           TenantSpec("silver", priority=1),
+           TenantSpec("free", priority=0))
+
+#: mean arrivals per round per tenant for the Poisson process
+POISSON_RATES = {"gold": 0.15, "silver": 0.3, "free": 0.6}
+
+
+def _arrivals(pattern: str, rng, round_index: int) -> Dict[str, int]:
+    """Arrivals per tenant for one round.
+
+    ``poisson``: independent Poisson counts at :data:`POISSON_RATES`.
+    ``bursty``: the free tenant slams 3 requests every 8th round (the
+    churn burst that over-commits the undersized pool), gold/silver
+    trickle Poisson — the pattern that forces preemption."""
+    if pattern == "poisson":
+        return {t: int(rng.poisson(POISSON_RATES[t])) for t in POISSON_RATES}
+    if pattern == "bursty":
+        out = {"gold": int(rng.poisson(0.15)),
+               "silver": int(rng.poisson(0.2)),
+               "free": 3 if round_index % 8 == 0 else 0}
+        return out
+    raise ValueError(f"unknown arrival pattern {pattern!r}")
+
+
+def _pct(xs: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs \
+        else 0.0
+
+
+@dataclasses.dataclass
+class TrafficResult:
+    """Aggregated output of one :func:`run_traffic` leg."""
+
+    pattern: str                   #: arrival pattern the leg ran
+    rounds: int                    #: rounds driven
+    launches: List[int]            #: per-round bulk-movement launches
+    per_tenant: Dict[str, Dict]    #: tenant -> latency/goodput metrics
+    preempted_rids: List[int]      #: requests that were demoted >= once
+    completed: int                 #: requests that finished
+    submitted: int                 #: requests that arrived
+
+    def max_launches_per_round(self) -> float:
+        """The serve_traffic gate metric: worst-round launch count."""
+        return float(max(self.launches)) if self.launches else 0.0
+
+
+def run_traffic(pattern: str = "poisson", rounds: int = 48, seed: int = 0,
+                arch: str = "llama3.2-3b", max_new_tokens: int = 8,
+                eng: ServingEngine = None) -> TrafficResult:
+    """Drive a RequestScheduler closed-loop under ``pattern`` arrivals.
+
+    The engine is deliberately undersized (4 batch slots over 2 slabs)
+    relative to the offered load, so bursts queue, gold arrivals preempt
+    free-tenant victims, and victims resume — while every round's bulk
+    movement (admission promotions, demote/resume cross-pool copies, CoW
+    splits, tail inits) must still drain as at most ONE fused launch.
+    Pass ``eng`` to reuse a prebuilt engine (the smoke gate does, to
+    keep its runtime down)."""
+    if eng is None:
+        cfg = get_config(arch).reduced()
+        model = build_model(cfg)
+        params, _ = split_params(model.init_params(jax.random.key(0)))
+        eng = ServingEngine(cfg, params, max_seqs=4, max_blocks_per_seq=8,
+                            num_slabs=2, max_admit_pages=8,
+                            double_buffer=True, spill_pages=8)
+    cfg = eng.cfg
+    sched = RequestScheduler(eng, list(TENANTS))
+    rng = np.random.default_rng(seed)
+    launches: List[int] = []
+    #: per-rid round index of the last emitted token (for inter-token
+    #: latency); starts at the submit round
+    last_emit: Dict[int, int] = {}
+    tok_lat: Dict[str, List[float]] = {t.name: [] for t in TENANTS}
+    ttft: Dict[str, List[float]] = {t.name: [] for t in TENANTS}
+    round_times: List[float] = []
+    prev_gen: Dict[int, int] = {}
+    for r in range(rounds):
+        for tenant, n in _arrivals(pattern, rng, r).items():
+            for _ in range(n):
+                plen = int(rng.integers(8, 17))
+                rid = sched.submit(
+                    tenant,
+                    rng.integers(2, cfg.vocab_size, size=plen)
+                    .astype(np.int32),
+                    max_new_tokens=max_new_tokens)
+                last_emit[rid] = r
+        t0 = time.perf_counter()
+        rep = sched.step()
+        round_times.append(time.perf_counter() - t0)
+        launches.append(rep.launches)
+        for rid, req in sched.requests.items():
+            new = req.generated - prev_gen.get(rid, 0)
+            if new <= 0:
+                continue
+            first = prev_gen.get(rid, 0) == 0
+            prev_gen[rid] = req.generated
+            # inter-token latency in rounds: stalls (queueing and
+            # preemption parking) stretch exactly this gap
+            tok_lat[req.tenant].append(float(max(r - last_emit[rid], 1)))
+            last_emit[rid] = r
+            if first:
+                ttft[req.tenant].append(
+                    float(r - req.submitted_round + 1))
+    # drain what's in flight so goodput counts whole requests
+    extra = 0
+    while not sched.idle and extra < 4 * rounds:
+        rep = sched.step()
+        launches.append(rep.launches)
+        extra += 1
+    wall = sum(round_times) if round_times else 1e-9
+    per_tenant = {}
+    for t in TENANTS:
+        done = [q for q in sched.requests.values()
+                if q.tenant == t.name and q.state == "done"]
+        per_tenant[t.name] = dict(
+            submitted=sum(1 for q in sched.requests.values()
+                          if q.tenant == t.name),
+            completed=len(done),
+            goodput_tok_s=sum(q.generated for q in done) / wall,
+            p50_token_latency_rounds=_pct(tok_lat[t.name], 50),
+            p99_token_latency_rounds=_pct(tok_lat[t.name], 99),
+            p50_ttft_rounds=_pct(ttft[t.name], 50),
+            preemptions=sum(q.preemptions for q in done))
+    return TrafficResult(
+        pattern=pattern, rounds=rounds, launches=launches,
+        per_tenant=per_tenant,
+        preempted_rids=[q.rid for q in sched.requests.values()
+                        if q.preemptions],
+        completed=sum(1 for q in sched.requests.values()
+                      if q.state == "done"),
+        submitted=len(sched.requests))
+
+
+def main():
+    """CLI for the traffic driver (the fig 3/4 sweep stays importable)."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--traffic", choices=("poisson", "bursty"),
+                    default="poisson")
+    ap.add_argument("--rounds", type=int, default=48)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    res = run_traffic(args.traffic, rounds=args.rounds, seed=args.seed)
+    print(f"[traffic:{res.pattern}] {res.submitted} arrived, "
+          f"{res.completed} completed, "
+          f"max launches/round {res.max_launches_per_round():.1f}, "
+          f"{len(res.preempted_rids)} requests preempted")
+    for t, m in res.per_tenant.items():
+        print(f"  {t:>6}: {m['completed']}/{m['submitted']} done  "
+              f"p50/p99 tok-lat {m['p50_token_latency_rounds']:.1f}/"
+              f"{m['p99_token_latency_rounds']:.1f} rounds  "
+              f"goodput {m['goodput_tok_s']:.1f} tok/s  "
+              f"preemptions {m['preemptions']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -361,6 +361,7 @@ class QueueStats:
     war_hazards: int = 0       # WAR-on-source commands admitted (no flush)
     spacer_rows: int = 0       # OP_NOP spacers inserted for the overlap
     launches: int = 0          # device dispatches issued for flushed tables
+    retired: int = 0           # pending rows cancelled pre-flush (retire)
     max_pending: int = 0
 
 
@@ -502,6 +503,49 @@ class CommandQueue:
         if after is not None:
             after(self)
         return launches
+
+    def retire(self, rows: Sequence[Tuple[int, int, int]]) -> int:
+        """Cancel specific pending rows WITHOUT dispatching them.
+
+        The sequence-lifecycle primitive: a serving layer freeing a
+        sequence *before* the round's flush must void the queued
+        ``OP_CROSS_POOL_COPY`` promotions that still target the freed
+        blocks — the allocator may re-issue those blocks immediately, and
+        a stale promotion draining later would overwrite the new owner's
+        bytes.  Each requested ``(opcode, src, dst)`` row is removed at
+        most once (duplicates retire one occurrence per request); rows
+        already drained are simply not found.  The hazard maps are
+        rebuilt from the surviving rows, so pending-read tracking (e.g.
+        staging-slot lifetime) immediately reflects the cancellation.
+        Returns the number of rows removed."""
+        want: Dict[Tuple[int, int, int], int] = {}
+        for r in rows:
+            r = (int(r[0]), int(r[1]), int(r[2]))
+            want[r] = want.get(r, 0) + 1
+        kept: List[Tuple[int, int, int]] = []
+        removed = 0
+        for row in self._cmds:
+            if want.get(row, 0) > 0:
+                want[row] -= 1
+                removed += 1
+            else:
+                kept.append(row)
+        if not removed:
+            return 0
+        self._cmds = kept
+        self._pending_dsts = {}
+        self._pending_srcs = {}
+        for op, s, d in kept:
+            skey, dkey = self._hazard_keys(op, s, d)
+            self._pending_dsts.setdefault(dkey[1], set()).add(dkey[0])
+            if skey is not None:
+                self._pending_srcs.setdefault(skey[1], set()).add(skey[0])
+        self.stats.retired += removed
+        if not kept:
+            drained = getattr(self.engine, "_note_drained", None)
+            if drained is not None:
+                drained(self)
+        return removed
 
     def abort(self) -> List[Tuple[int, int, int]]:
         """Discard every pending command WITHOUT dispatching — the

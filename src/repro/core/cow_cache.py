@@ -232,6 +232,40 @@ class PagedCoWCache:
         with self.engine.batch():
             return [self.append_token(sid) for sid in seq_ids]
 
+    def remap_blocks(self, seq_id: int, blocks: List[int]) -> None:
+        """Replace a sequence's block list with caller-allocated blocks.
+
+        The public surface for relocation workloads (benchmark baseline
+        paths, defragmenters): the caller allocates destinations and
+        copies bytes through the engine, then hands the new list over
+        here — the cache takes ownership of ``blocks`` (refcounts as
+        allocated), releases the OLD list refcount-aware, and rebuilds
+        the device tables.  Poking ``seqs[sid].blocks`` directly instead
+        would bypass the refcount/share-mask bookkeeping and corrupt CoW
+        state.  Positions where the new id equals the old are kept
+        without a free/retain cycle.  Length must match the current list
+        (relocation, not truncation), and under sharded batches every
+        new block must sit in the sequence's own group."""
+        seq = self.seqs[seq_id]
+        blocks = [int(b) for b in blocks]
+        if len(blocks) != len(seq.blocks):
+            raise ValueError(
+                f"remap_blocks: {len(blocks)} blocks for a sequence "
+                f"holding {len(seq.blocks)} (relocation must preserve "
+                "the block count)")
+        if self.batch_groups > 1:
+            for b in blocks:
+                if self.group_of_block(b) != seq.group:
+                    raise ValueError(
+                        f"remap_blocks: block {b} lives in group "
+                        f"{self.group_of_block(b)}, sequence {seq_id} "
+                        f"is pinned to group {seq.group}")
+        stale = [old for old, new in zip(seq.blocks, blocks) if old != new]
+        if stale:
+            self.alloc.free(stale)
+        seq.blocks = blocks
+        self._dirty = True
+
     def free_sequence(self, seq_id: int) -> None:
         """Release a sequence's blocks (refcount-aware) and its slot."""
         seq = self.seqs.pop(seq_id)

@@ -85,6 +85,9 @@ class EngineStats:
     baseline_copies: int = 0
     cross_pool_copies: int = 0
     stage_promotions: int = 0   # staged blocks promoted into primary pools
+    retired_promotions: int = 0  # queued promotions cancelled pre-flush
+    demotions: int = 0          # primary blocks parked in spill slots
+    spill_promotions: int = 0   # spill slots promoted back into primaries
     zero_lazy: int = 0
     zero_materialized: int = 0
     bytes_fpm: int = 0
@@ -216,6 +219,16 @@ class RowCloneEngine:
         # of the slot — the queues' source-hazard tracking)
         self._stage_free: List[int] = list(range(stage_cap - 1, -1, -1))
         self._stage_inflight: List[int] = []
+        # preemption demotion: primary pool name -> its spill twin, plus
+        # the engine-owned demotion slot space (a sub-range of the spill
+        # pools handed over by enable_demotion — the rest of the spill
+        # pools stays free for e.g. checkpoint windows)
+        self._spill_map: Dict[str, str] = {
+            spec.paired: spec.name for spec in group
+            if spec.role == "spill"}
+        self._spill_slots: Tuple[int, ...] = ()
+        self._spill_free: List[int] = []
+        self._spill_inflight: List[int] = []
         #: replayable flush log — every drained flush appends one record
         self.journal = TicketJournal()
         self._flush_index = 0
@@ -317,6 +330,25 @@ class RowCloneEngine:
         """Staging slot ids available per staging pool (0 = no staging)."""
         return self.group[next(iter(self.staging))].nblk if self.staging \
             else 0
+
+    @property
+    def stage_slots_free(self) -> int:
+        """Staging slots currently on the free list (slots whose queued
+        promotion has not drained are excluded — admission policy can
+        pre-check capacity without forcing an early flush)."""
+        return len(self._stage_free)
+
+    @property
+    def spill_capacity(self) -> int:
+        """Demotion slots the engine owns (``enable_demotion``), per
+        spill pool; 0 until demotion is enabled."""
+        return len(self._spill_slots)
+
+    @property
+    def spill_slots_free(self) -> int:
+        """Demotion slots not currently parking a demoted block and not
+        awaiting reclaim from a queued resume promotion."""
+        return len(self._spill_free)
 
     @property
     def n_primary(self) -> int:
@@ -593,6 +625,10 @@ class RowCloneEngine:
             self.pools[name] = arr
         # staging: every reservation and queued promotion is void now
         self._stage_inflight = []
+        # in-flight resume promotions were aborted with the queues; their
+        # slots revert to whoever demoted them (the serving layer either
+        # re-promotes or releases via its demoted-sequence registry)
+        self._spill_inflight = []
         cap = self.stage_capacity
         if degraded_stage_capacity is not None:
             cap = min(cap, int(degraded_stage_capacity))
@@ -811,26 +847,160 @@ class RowCloneEngine:
             self._stage_inflight.extend(s for s, _ in pairs)
         return len(pairs)
 
+    def retire_promotions(self, pairs: Sequence[Tuple[int, object]]) -> int:
+        """Cancel queued stage→primary promotions and recycle their slots.
+
+        ``pairs`` mirrors :meth:`promote_staged`: (staging_slot, dst).
+        The sequence-lifecycle primitive behind ``ServingEngine.free``: a
+        sequence freed *before* the round's flush returns its blocks to
+        the allocator while its promotions still sit on a stream — left
+        queued, they would drain later and overwrite whatever the
+        allocator re-issued those blocks for.  Every matching pending row
+        is removed from every live queue
+        (:meth:`~repro.core.cmdqueue.CommandQueue.retire`); promotions
+        that already drained are simply not found (their bytes landed
+        before the free — harmless, the blocks were still owned then).
+        Slots whose pending reads disappeared return to the free list.
+        Returns the number of command rows retired."""
+        if not self.staging:
+            return 0
+        pairs = [(int(s), self._primary_id(d)) for s, d in pairs]
+        rows = [(OP_CROSS_POOL_COPY,
+                 self.group.base(sname) + s, self.group.base(pname) + d)
+                for sname, pname in self.staging.items()
+                for s, d in pairs]
+        removed = 0
+        for q in list(self._live_queues.values()):
+            removed += q.retire(rows)
+        self.stats.retired_promotions += removed
+        # slots freed of their pending reads rejoin the ring now
+        self._after_flush()
+        return removed
+
+    # ------------------------------------------------------------------
+    # demotion — preemption parks primary blocks in spill slots (the
+    # reverse of promotion), resumption promotes them back
+    # ------------------------------------------------------------------
+    def enable_demotion(self, slots: Sequence[int]) -> None:
+        """Hand the engine a set of spill-pool slot ids for preemption.
+
+        ``slots`` index the spill pools' own address space and become the
+        engine-owned demotion slot space (:meth:`demote_to_spill` draws
+        from it; resumed or released slots return to it).  Callers that
+        also run windowed checkpoints over the same spill pools give the
+        two users disjoint ranges — the serving engine reserves
+        ``[ckpt_window, ckpt_window + spill_pages)`` for demotion."""
+        if not self._spill_map:
+            raise RuntimeError(
+                "engine has no spill pools (PoolSpec(role='spill')); "
+                "serving builds them via make_serving_pools")
+        cap = min(self.group[n].nblk for n in self._spill_map.values())
+        slots = [int(s) for s in slots]
+        for s in slots:
+            if not 0 <= s < cap:
+                raise ValueError(f"spill slot {s} out of range ({cap})")
+        self._spill_slots = tuple(slots)
+        self._spill_free = list(reversed(slots))
+        self._spill_inflight = []
+
+    def demote_to_spill(self, blocks: Sequence[object]) -> List[int]:
+        """Evict primary blocks into spill slots — preemption by demotion.
+
+        The reverse of :meth:`promote_staged`: each block cross-pool-
+        copies into one demotion slot per spill pool pair (k→k_spill and
+        v→v_spill travel together), riding the current queue like any
+        bulk movement — a whole preemption adds rows to the round's one
+        fused launch.  Returns the slot ids parking each block's bytes,
+        in block order; the caller owns them until
+        :meth:`promote_spilled` (resumption) or
+        :meth:`release_spill_slots` (the demoted sequence died).
+
+        The copy reads the blocks' CURRENT pool bytes.  Callers whose
+        pools are written out of band of the allocator's ZI metadata
+        (e.g. decode steps appending tokens in-jit) must
+        ``alloc.mark_written`` the blocks first, or a stale lazy-zero bit
+        would materialize zeros over the real bytes."""
+        if not self._spill_slots:
+            raise RuntimeError("demotion not enabled (enable_demotion)")
+        blocks = [self._primary_id(b) for b in blocks]
+        if len(self._spill_free) < len(blocks):
+            raise RuntimeError(
+                f"spill slots exhausted ({len(blocks)} requested, "
+                f"{len(self._spill_free)} free of {self.spill_capacity})")
+        slots = [self._spill_free.pop() for _ in blocks]
+        with self.batch():
+            for pname, sname in self._spill_map.items():
+                self.memcopy_cross(
+                    [(BlockRef(pname, b), BlockRef(sname, s))
+                     for b, s in zip(blocks, slots)])
+            self.stats.demotions += len(blocks)
+        return slots
+
+    def promote_spilled(self, pairs: Sequence[Tuple[int, object]]) -> int:
+        """Promote demoted bytes back into primary blocks — resumption.
+
+        ``pairs``: (spill_slot, dst primary block).  Mirrors
+        :meth:`promote_staged` with the spill pools as the source; the
+        slots join the in-flight list and return to the demotion free
+        list once no stream holds a pending read of them (the same
+        source-hazard lifetime as staging slots)."""
+        if not self._spill_slots:
+            raise RuntimeError("demotion not enabled (enable_demotion)")
+        pairs = [(int(s), self._primary_id(d)) for s, d in pairs]
+        with self.batch():
+            for pname, sname in self._spill_map.items():
+                self.memcopy_cross(
+                    [(BlockRef(sname, s), BlockRef(pname, d))
+                     for s, d in pairs])
+            self.stats.spill_promotions += len(pairs)
+            self._spill_inflight.extend(s for s, _ in pairs)
+        return len(pairs)
+
+    def release_spill_slots(self, ids: Sequence[int]) -> None:
+        """Return demotion slots whose parked bytes are no longer needed
+        (the demoted sequence finished, was cancelled, or was evicted by
+        a recovery) without promoting them back.  Idempotent: slots
+        already free (or still in flight — a resume promotion that
+        drained reclaims through ``_after_flush``) are skipped, so
+        recovery paths can release conservatively."""
+        for s in ids:
+            s = int(s)
+            if s not in self._spill_free and s not in self._spill_inflight:
+                self._spill_free.append(s)
+
     def _after_flush(self, queue: Optional[CommandQueue] = None) -> None:
-        """CommandQueue callback after any stream drains: a staging slot
-        is reusable exactly when NO stream still holds a pending read of
-        it (the source-hazard tracking) — promotions that drained free
-        their slots, promotions still queued on another stream keep
-        theirs."""
-        if not self._stage_inflight:
-            return
-        sidx = [self.group.index(name) for name in self.staging]
-        queues = list(self._live_queues.values())
-        still: List[int] = []
-        freed: List[int] = []
-        for slot in self._stage_inflight:
-            if any(q.has_pending_read((p, slot))
-                   for q in queues for p in sidx):
-                still.append(slot)
-            else:
-                freed.append(slot)
-        self._stage_free.extend(freed)
-        self._stage_inflight = still
+        """CommandQueue callback after any stream drains: a staging (or
+        in-flight demotion) slot is reusable exactly when NO stream still
+        holds a pending read of it (the source-hazard tracking) —
+        promotions that drained free their slots, promotions still queued
+        on another stream keep theirs."""
+        if self._stage_inflight:
+            sidx = [self.group.index(name) for name in self.staging]
+            queues = list(self._live_queues.values())
+            still: List[int] = []
+            freed: List[int] = []
+            for slot in self._stage_inflight:
+                if any(q.has_pending_read((p, slot))
+                       for q in queues for p in sidx):
+                    still.append(slot)
+                else:
+                    freed.append(slot)
+            self._stage_free.extend(freed)
+            self._stage_inflight = still
+        if self._spill_inflight:
+            pidx = [self.group.index(name)
+                    for name in self._spill_map.values()]
+            queues = list(self._live_queues.values())
+            still = []
+            freed = []
+            for slot in self._spill_inflight:
+                if any(q.has_pending_read((p, slot))
+                       for q in queues for p in pidx):
+                    still.append(slot)
+                else:
+                    freed.append(slot)
+            self._spill_free.extend(freed)
+            self._spill_inflight = still
 
     # ------------------------------------------------------------------
     # meminit

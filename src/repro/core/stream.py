@@ -211,6 +211,39 @@ class CommandStream:
         with self.capture():
             return self.engine.promote_staged(pairs)
 
+    def demote_to_spill(self, blocks: Sequence[object]):
+        """Enqueue primary→spill demotions (``demote_to_spill``
+        semantics — preemption parks the blocks' bytes in spill slots;
+        returns the slot ids)."""
+        with self.capture():
+            return self.engine.demote_to_spill(blocks)
+
+    def promote_spilled(self, pairs: Sequence[Tuple[int, object]]):
+        """Enqueue spill→primary resume promotions (``promote_spilled``
+        semantics)."""
+        with self.capture():
+            return self.engine.promote_spilled(pairs)
+
+    # ------------------------------------------------------------------
+    def adopt(self, other: "CommandStream") -> int:
+        """Transfer another stream's pending rows onto THIS stream.
+
+        The QoS *lane merge*: a scheduler keeps per-tenant lanes as
+        dedicated streams, then adopts them into the round's serve stream
+        in priority order — adoption order is enqueue order is DMA issue
+        order in the fused table, so one flush drains every lane's work
+        as ONE launch while higher-priority traffic still issues first.
+        Rows leave ``other`` atomically (its queue empties without
+        dispatching) and re-enqueue here one by one, re-running the full
+        hazard matrix — ordering guarantees survive the transfer.
+        Returns the number of rows adopted."""
+        if other is self:
+            return 0
+        rows = other.queue.abort()
+        for op, s, d in rows:
+            self.queue.enqueue(op, s, d)
+        return len(rows)
+
     # ------------------------------------------------------------------
     def flush(self) -> FlushTicket:
         """Drain the stream's pending commands and return the

@@ -42,8 +42,9 @@ CLI:  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b \
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -59,10 +60,31 @@ from repro.models import build_model, split_params
 from repro.models.paged import batch_shard_count, make_serving_pools
 
 
+@dataclasses.dataclass
+class DemotedSeq:
+    """Host-side parking record for a preempted sequence.
+
+    :meth:`ServingEngine.demote` moves a victim's KV blocks into spill
+    slots (``OP_CROSS_POOL_COPY`` — the reverse of admission promotion)
+    and keeps everything needed to resume bitwise-identically here:
+    length, the spill slots holding the bytes, slab affinity, the last
+    logits (next-token source), the token history, and any extra host
+    state (conv/ssm/cross-attention).  The KV pool blocks themselves are
+    returned to the allocator after the round's flush."""
+
+    length: int                  #: sequence length at demotion time
+    slots: List[int]             #: spill slots parking the KV bytes
+    slab_home: int               #: preferred slab for re-allocation
+    logits: np.ndarray           #: last logits (greedy argmax source)
+    tokens: List[int]            #: token history (prompt + generated)
+    extras: Optional[dict]       #: non-dense host state, if any
+
+
 class ServingEngine:
     """Continuous-batching serving facade over RowCloneEngine +
-    PagedCoWCache: admission (prefill + staged promotion), CoW fork, and
-    greedy decode rounds whose bulk movement drains as one fused launch."""
+    PagedCoWCache: admission (prefill + staged promotion), CoW fork,
+    preemption by demotion (:meth:`demote`/:meth:`resume`), and greedy
+    decode rounds whose bulk movement drains as one fused launch."""
 
     #: ``max_admit_pages`` sentinel: keep full-size staging twins (every
     #: KV block has a staging slot) instead of a recycled ring
@@ -77,7 +99,8 @@ class ServingEngine:
                  double_buffer: bool = False,
                  fault_plan=None, auto_recover: bool = False,
                  ckpt_pages: int = 0, ckpt_dir: Optional[str] = None,
-                 ckpt_window: Optional[int] = None):
+                 ckpt_window: Optional[int] = None,
+                 spill_pages: int = 0):
         """``max_admit_pages`` sizes the staging pools as a RING of that
         many slots instead of a full-size twin of the KV pools — slots
         recycle at every round's flush, so the ring only needs to hold
@@ -109,7 +132,16 @@ class ServingEngine:
         engine; ``auto_recover=True`` catches a failed round flush (or
         ckpt tick) and runs :meth:`recover` in place — the next round
         serves normally.  Admissions evicted by a recovery land in
-        ``evicted_sids`` for the caller to re-admit."""
+        ``evicted_sids`` for the caller to re-admit.
+
+        Preemption: ``spill_pages > 0`` reserves that many EXTRA spill
+        slots for :meth:`demote` / :meth:`resume` — the scheduler's
+        preemption-by-demotion path.  The spill pools are shared with the
+        checkpoint stream but partitioned by slot range: PoolCheckpoint
+        windows keep slots ``[0, ckpt_pages)``, demotion owns
+        ``[ckpt_pages, ckpt_pages + spill_pages)`` — the two never
+        collide, and both ride the same ``OP_CROSS_POOL_COPY`` fused
+        launches."""
         self.cfg = cfg
         self.rc = rc or RowCloneConfig()
         self.mesh = mesh
@@ -150,13 +182,17 @@ class ServingEngine:
         # promotions + CoW splits + tail inits drain as ONE (collective)
         # launch at the round's flush boundary
         self.ckpt_pages = int(ckpt_pages)
-        replicate_ckpt = bool(self.ckpt_pages % shards) if self.ckpt_pages \
-            else False
+        self.spill_pages = int(spill_pages)
+        # one spill pool per primary (PoolCheckpoint keys spill pools by
+        # their paired primary): checkpoint windows and demotion parking
+        # SHARE it, partitioned by slot range
+        total_spill = self.ckpt_pages + self.spill_pages
+        replicate_ckpt = bool(total_spill % shards) if total_spill else False
         pools, group = make_serving_pools(
             L, nblk, page, cfg.num_kv_heads, cfg.head_dim, kv_dtype,
             staging=fused_staging, stage_nblk=stage_nblk,
             replicate_staging=replicate_staging,
-            ckpt_nblk=self.ckpt_pages, replicate_ckpt=replicate_ckpt)
+            ckpt_nblk=total_spill, replicate_ckpt=replicate_ckpt)
         if mesh is not None:
             # honor each PoolSpec's sharding hint at placement time
             # (replicated rings stay whole per device; KV pools shard)
@@ -201,19 +237,45 @@ class ServingEngine:
         #: admissions whose stage→KV promotions have not drained yet —
         #: recovery evicts exactly these when the staged bytes are lost
         self._staged_sids: List[int] = []
+        #: per-admission stage→KV promotion pairs still queued — free()
+        #: retires exactly these rows so a freed-before-flush sequence's
+        #: promotion can never land in re-issued blocks
+        self._pending_promotions: Dict[int, List[Tuple[int, int]]] = {}
+        #: per-seq host state (conv/ssm/cross-attention) for non-dense
+        #: families, keyed by sid — free()/demote() MUST drop the entry
+        self._extras: Dict[int, dict] = {}
         #: sequences a recovery evicted; the caller re-admits their
         #: prompts (re-admission reproduces the KV bytes, so greedy
         #: tokens match the failure-free run)
         self.evicted_sids: List[int] = []
+        #: preempted sequences parked in spill slots, keyed by sid —
+        #: :meth:`resume` unparks (minting a NEW sid); :meth:`free`
+        #: releases the parking without resuming
+        self.demoted: Dict[int, DemotedSeq] = {}
+        #: resumes whose spill→KV promotions have not drained yet —
+        #: recovery evicts these the same way it evicts staged admissions
+        self._resumed: List[Tuple[int, List[int]]] = []
+        #: demoted blocks kept allocated until the round's flush drains
+        #: the demote reads — freeing them early would let a same-round
+        #: admission reuse the block and trip the cross-stream WAR guard
+        #: (an extra launch), breaking the 1.0 launches/round contract
+        self._free_after_flush: List[int] = []
         self._admission_ordinal = 0
         self.last_recovery: Optional[RecoveryReport] = None
         self.pool_ckpt: Optional[PoolCheckpoint] = None
         if self.ckpt_pages:
             if ckpt_dir is None:
                 raise ValueError("ckpt_pages > 0 needs ckpt_dir")
+            # cap the checkpoint window at ckpt_pages: with demotion the
+            # spill pools are oversized, and windows must stay out of the
+            # demotion slot range
             self.pool_ckpt = PoolCheckpoint(
                 self.engine, CheckpointManager(ckpt_dir),
-                window=ckpt_window)
+                window=(min(int(ckpt_window), self.ckpt_pages)
+                        if ckpt_window is not None else self.ckpt_pages))
+        if self.spill_pages:
+            self.engine.enable_demotion(
+                range(self.ckpt_pages, self.ckpt_pages + self.spill_pages))
 
     # ------------------------------------------------------------------
     def _prefill_batch(self, prompt: np.ndarray) -> Dict[str, jnp.ndarray]:
@@ -244,15 +306,23 @@ class ServingEngine:
                                      "cross_k", "cross_v") if k in st}
         return logits, k_stage, v_stage, extras
 
-    def add_request(self, prompt: np.ndarray) -> int:
+    def add_request(self, prompt: np.ndarray,
+                    stream=None) -> int:
         """prompt: (S,) int32.  Prefill into the staging pools and enqueue
         the stage→KV promotion (fused path), or scatter straight into the
-        KV pools (seed ``fused_staging=False`` path)."""
+        KV pools (seed ``fused_staging=False`` path).
+
+        ``stream`` routes the admission's bulk movement onto a caller
+        stream instead of the engine's serve stream — the scheduler's
+        per-tenant QoS lanes admit here and
+        :meth:`~repro.core.stream.CommandStream.adopt` their rows into
+        the round stream in priority order."""
+        stream = self.stream if stream is None else stream
         S = int(prompt.shape[0])
         if self.fused_staging:
             # any block inits the admission needs (e.g. ZI disabled) ride
             # the serve stream with the round's other bulk movement
-            with self.stream.capture():
+            with stream.capture():
                 sid = self.cache.new_sequence(prompt_len=S)
         else:
             sid = self.cache.new_sequence(prompt_len=S)
@@ -293,8 +363,10 @@ class ServingEngine:
             self.engine.pools["v_stage"] = v_stage
             # the promotion rides the round's serve stream (drained by
             # decode_round's stream.flush — one launch for the round)
-            self.stream.promote_staged(list(zip(stage_ids, blocks)))
+            pairs = list(zip(stage_ids, blocks))
+            stream.promote_staged(pairs)
             self._staged_sids.append(sid)
+            self._pending_promotions[sid] = pairs
             st = extras
         else:
             logits, st = self.model.prefill(self.params, batch, self.mesh,
@@ -321,8 +393,6 @@ class ServingEngine:
             if k in st:
                 extras[k] = st[k]
         if extras:
-            if not hasattr(self, "_extras"):
-                self._extras = {}
             self._extras[sid] = extras
 
     def fork(self, sid: int, n: int) -> List[int]:
@@ -338,15 +408,100 @@ class ServingEngine:
         for c in kids:
             self.last_logits[c] = self.last_logits[sid].copy()
             self.tokens[c] = list(self.tokens[sid])
-            if hasattr(self, "_extras") and sid in self._extras:
+            if sid in self._extras:
                 self._extras[c] = self._extras[sid]
         return kids
 
     def free(self, sid: int) -> None:
-        """Release a finished sequence's blocks, slot, and host state."""
+        """Release a finished sequence's blocks, slot, and host state —
+        including lifecycle state a mid-round free would otherwise leak:
+
+        * a still-queued stage→KV promotion is RETIRED (the rows leave
+          the command queues without dispatching and the staging slots
+          return to the ring) — otherwise the stale promotion lands in
+          blocks the allocator may have re-issued to a NEWER sequence,
+          silently corrupting its KV pages;
+        * the sid leaves ``_staged_sids`` so a later recovery does not
+          "evict" a sequence that no longer exists;
+        * the ``_extras`` entry (conv/ssm/cross-attention host state) is
+          dropped — previously it accumulated forever under churn;
+        * a DEMOTED sid releases its spill parking slots instead (no
+          cache sequence exists for it)."""
+        parked = self.demoted.pop(sid, None)
+        if parked is not None:
+            self.engine.release_spill_slots(parked.slots)
+            self._extras.pop(sid, None)
+            return
+        pending = self._pending_promotions.pop(sid, None)
+        if pending:
+            self.engine.retire_promotions(pending)
+        if sid in self._staged_sids:
+            self._staged_sids.remove(sid)
         self.cache.free_sequence(sid)
         self.last_logits.pop(sid, None)
         self.tokens.pop(sid, None)
+        self._extras.pop(sid, None)
+
+    # ------------------------------------------------------------------
+    def demote(self, sid: int, stream=None) -> None:
+        """Preempt ``sid``: park its KV bytes in spill slots
+        (``OP_CROSS_POOL_COPY``, the reverse of admission promotion) and
+        release its batch slot + blocks — :meth:`resume` brings it back
+        bitwise-identically.  Needs ``spill_pages`` capacity.
+
+        The victim's blocks stay allocated until the round's flush
+        drains the demote reads (``_free_after_flush``): freeing them
+        immediately would let a same-round admission reuse a block whose
+        demote read is still pending — the cross-stream WAR guard would
+        force an early drain (an extra launch) to stay correct.  CoW
+        forks are handled naturally: the parked copy is private, and
+        siblings keep their shared refcounts.
+
+        ``stream`` routes the demote copies onto a caller stream (a
+        scheduler lane); default is the serve stream."""
+        if sid in self._staged_sids:
+            raise RuntimeError(
+                f"cannot demote seq {sid}: its admission promotion has "
+                "not drained yet (preempt it next round)")
+        stream = self.stream if stream is None else stream
+        seq = self.cache.seqs[sid]
+        blocks = list(seq.blocks)
+        # decode writes pool bytes inside the jit, out of band of the
+        # allocator's ZI metadata — mark them written so the demote copy
+        # moves the real bytes instead of re-materializing zeros
+        self.engine.alloc.mark_written(blocks)
+        slots = stream.demote_to_spill(blocks)
+        self.demoted[sid] = DemotedSeq(
+            length=seq.length, slots=list(slots), slab_home=seq.slab_home,
+            logits=self.last_logits.pop(sid),
+            tokens=self.tokens.pop(sid, []),
+            extras=self._extras.pop(sid, None))
+        # keep the blocks alive past free_sequence (share +1 / free -1)
+        # and release the extra ref only after the flush
+        self.engine.alloc.share(blocks)
+        self.cache.free_sequence(sid)
+        self._free_after_flush.extend(blocks)
+
+    def resume(self, sid: int, stream=None) -> int:
+        """Un-park a demoted sequence: allocate fresh blocks (same slab
+        affinity), enqueue the spill→KV promotion, and restore the host
+        state under a NEW sid (returned — callers map request→sid).
+        Greedy decode from the resumed state is bitwise-identical to the
+        unpreempted run (the parked bytes ARE the KV pages)."""
+        d = self.demoted.pop(sid)
+        stream = self.stream if stream is None else stream
+        with stream.capture():
+            new_sid = self.cache.new_sequence(prompt_len=d.length,
+                                              prefer_slab=d.slab_home)
+        blocks = self.cache.blocks_of(new_sid)
+        assert len(blocks) == len(d.slots), (len(blocks), len(d.slots))
+        stream.promote_spilled(list(zip(d.slots, blocks)))
+        self.last_logits[new_sid] = d.logits
+        self.tokens[new_sid] = d.tokens
+        if d.extras is not None:
+            self._extras[new_sid] = d.extras
+        self._resumed.append((new_sid, list(d.slots)))
+        return new_sid
 
     # ------------------------------------------------------------------
     def recover(self) -> RecoveryReport:
@@ -368,6 +523,13 @@ class ServingEngine:
         staging_dead = any(
             getattr(eng.pools[n], "is_deleted", lambda: False)()
             for n in eng.staging)
+        # probe spill-pool death BEFORE the engine resurrects the pools:
+        # dead spill pools take every demoted sequence's parked bytes
+        # with them
+        spill_dead = any(
+            getattr(eng.pools[s.name], "is_deleted", lambda: False)()
+            for s in eng.group if s.role == "spill") if self.spill_pages \
+            else False
         degraded = None
         if staging_dead and self.double_buffer:
             degraded = self.ring_capacity
@@ -380,16 +542,50 @@ class ServingEngine:
         if staging_dead or rep.evicted_promotions:
             # the staged bytes backing these admissions never reached the
             # KV pools (and are unrecoverable): evict for re-admission
-            for sid in self._staged_sids:
+            for sid in list(self._staged_sids):
                 if sid in self.cache.seqs:
                     self.free(sid)
                     self.evicted_sids.append(sid)
+        # demoted victims' blocks: the aborted queues dropped the demote
+        # reads, so the deferred frees happen NOW (release the extra ref)
+        if self._free_after_flush:
+            eng.alloc.free(self._free_after_flush)
+            self._free_after_flush = []
+        # in-flight resumes: their spill→KV promotions may have been
+        # aborted with the queues — evict for re-admission (same contract
+        # as staged admissions); release_spill_slots is idempotent, so
+        # slots already reclaimed by an earlier drain are skipped
+        for sid, slots in self._resumed:
+            if sid in self.cache.seqs:
+                self.free(sid)
+                self.evicted_sids.append(sid)
+            eng.release_spill_slots(slots)
+        self._resumed = []
+        if spill_dead:
+            # the parked KV bytes died with the spill pools: evict every
+            # demoted sequence for re-admission
+            for sid in list(self.demoted):
+                self.free(sid)
+                self.evicted_sids.append(sid)
         self._staged_sids = []
+        self._pending_promotions.clear()
         self.last_ticket = None
         self.last_recovery = rep
         return rep
 
     # ------------------------------------------------------------------
+    def _post_flush(self) -> None:
+        """Round-boundary bookkeeping after the stream flush drained the
+        round's bulk movement: staged admissions and resumed sequences
+        are no longer in flight, and demoted victims' blocks (whose
+        demote reads just drained) go back to the allocator."""
+        self._staged_sids = []
+        self._pending_promotions.clear()
+        self._resumed = []
+        if self._free_after_flush:
+            self.engine.alloc.free(self._free_after_flush)
+            self._free_after_flush = []
+
     def _decode_fn(self, params, k_pools, v_pools, table, mask, base,
                    seq_lens, tokens, slot_index):
         state = {"k_pools": k_pools, "v_pools": v_pools,
@@ -407,6 +603,17 @@ class ServingEngine:
                 "families decode through model.decode_step directly")
         live = sorted(self.cache.seqs)
         if not live:
+            # still drain pending bulk movement (e.g. every sequence was
+            # demoted this round): the parked bytes must land and the
+            # deferred block frees must happen even with nothing to decode
+            if len(self.stream.queue):
+                try:
+                    self.last_ticket = self.stream.flush()
+                except Exception:
+                    if not self.auto_recover:
+                        raise
+                    self.recover()
+                self._post_flush()
             return {}
         # choose next token per sequence from last logits
         next_tok = {}
@@ -437,7 +644,7 @@ class ServingEngine:
             next_tok = {s: next_tok[s] for s in live}
             if not live:
                 return {}
-        self._staged_sids = []
+        self._post_flush()
         table, mask, base = self.cache.device_tables()
         lens = self.cache.seq_lens()
         B = self.cache.max_seqs

@@ -141,6 +141,75 @@ def test_stage_slot_exhaustion_flushes_then_raises():
         eng.stage_blocks(eng.num_blocks + 1)
 
 
+def test_retire_promotions_cancels_queued_rows():
+    """Sequence-lifecycle primitive behind ServingEngine.free: a queued
+    promotion retires (rows leave the queue WITHOUT dispatching, slots
+    rejoin the ring, no bytes move); one that already drained is simply
+    not found."""
+    eng = _mk_staged_engine(seed=11)
+    eng.deferred = True                 # serving-style open queue
+    want_k = np.asarray(eng.pools["k"])
+    slots = eng.stage_blocks(2)
+    pairs = list(zip(slots, [5, 6]))
+    eng.promote_staged(pairs)
+    assert len(eng.queue) == 4          # one k row + one v row per pair
+    assert eng.retire_promotions(pairs) == 4
+    assert len(eng.queue) == 0
+    assert all(s in eng._stage_free for s in slots)
+    assert eng.stats.retired_promotions == 4
+    with fd_hook() as events:
+        eng.flush()
+    assert events == []                 # nothing left to dispatch
+    np.testing.assert_array_equal(np.asarray(eng.pools["k"]), want_k)
+    # a promotion whose flush already landed retires as a no-op
+    (s2,) = eng.stage_blocks(1)
+    eng.promote_staged([(s2, 8)])
+    eng.flush()
+    assert eng.retire_promotions([(s2, 8)]) == 0
+
+
+def test_demote_resume_roundtrip_moves_bytes():
+    """Preemption primitives: demote_to_spill parks a block's CURRENT
+    bytes in one spill slot per pool pair (k→k_spill and v→v_spill travel
+    together); promote_spilled lands them back in a fresh primary block
+    bitwise, and the slots return to the demotion free list."""
+    from repro.models.paged import make_serving_pools
+    L, nblk, page = 2, 16, 2
+    pools, group = make_serving_pools(L, nblk, page, 2, 4, jnp.float32,
+                                      staging=True, stage_nblk=4,
+                                      ckpt_nblk=4)
+    alloc = SubarrayAllocator(nblk, 4, reserved_zero_per_slab=1)
+    eng = RowCloneEngine(pools, alloc, block_axis=1, group=group)
+    eng.enable_demotion(range(4))
+    blocks = alloc.alloc(2)
+    idx = np.asarray(blocks)
+    for i, n in enumerate(("k", "v")):
+        eng.pools[n] = eng.pools[n].at[:, idx].set(
+            jax.random.normal(jax.random.key(i), (L, 2, page, 2, 4)))
+    # the writes above are out of band of the allocator's ZI metadata —
+    # exactly the decode-jit situation demote callers must mark_written
+    alloc.mark_written(blocks)
+    want = {n: np.asarray(eng.pools[n][:, idx]) for n in ("k", "v")}
+    slots = eng.demote_to_spill(blocks)
+    sidx = np.asarray(slots)
+    assert eng.spill_slots_free == eng.spill_capacity - 2
+    for n in ("k", "v"):
+        np.testing.assert_array_equal(
+            np.asarray(eng.pools[n + "_spill"][:, sidx]), want[n])
+    alloc.free(blocks)                  # the victim's blocks re-issue
+    fresh = alloc.alloc(2)
+    eng.promote_spilled(list(zip(slots, fresh)))
+    for n in ("k", "v"):
+        np.testing.assert_array_equal(
+            np.asarray(eng.pools[n][:, np.asarray(fresh)]), want[n])
+    assert eng.stats.demotions == 2 and eng.stats.spill_promotions == 2
+    # drained resume promotions recycle their slots (source-hazard
+    # lifetime, same as staging); release is idempotent on top
+    assert eng.spill_slots_free == eng.spill_capacity
+    eng.release_spill_slots(slots)
+    assert eng.spill_slots_free == eng.spill_capacity
+
+
 def test_alloc_rollback_on_group_exhaustion():
     """A partial grab rolls back when the allowed slabs run out: group
     exhaustion is routine for sharded-batch serving, and leaked blocks

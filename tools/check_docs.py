@@ -32,6 +32,14 @@ REQUIRED_SYMBOLS = (
     "repro.checkpoint.pool_checkpoint.PoolCheckpoint",
     "repro.runtime.fault.FaultPlan",
     "repro.kernels.fused_dispatch.add_drain_guard",
+    # traffic layer: continuous batching + preemption-by-demotion surface
+    "repro.launch.scheduler.RequestScheduler",
+    "repro.launch.scheduler.TenantSpec",
+    "repro.launch.serve.DemotedSeq",
+    "repro.core.stream.CommandStream.adopt",
+    "repro.core.rowclone.RowCloneEngine.retire_promotions",
+    "repro.core.rowclone.RowCloneEngine.demote_to_spill",
+    "repro.core.cow_cache.PagedCoWCache.remap_blocks",
 )
 
 #: dataclass-generated or inherited members that need no prose of their own
@@ -59,15 +67,37 @@ def check_symbol(qualname, obj, missing):
         missing.append(qualname)
 
 
+def resolve(qual):
+    """Resolve a dotted REQUIRED_SYMBOLS path: import the longest module
+    prefix, then getattr the rest — so pins can name methods
+    (``module.Class.method``), not just module-level symbols.  Returns
+    None when any hop is missing."""
+    parts = qual.split(".")
+    for i in range(len(parts) - 1, 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:i]))
+        except ImportError:
+            continue
+        try:
+            for attr in parts[i:]:
+                obj = inspect.getattr_static(obj, attr)
+        except AttributeError:
+            return None
+        return obj
+    return None
+
+
 def main() -> int:
     missing = []
     for qual in REQUIRED_SYMBOLS:
-        mod_name, _, sym = qual.rpartition(".")
-        try:
-            obj = getattr(importlib.import_module(mod_name), sym)
-        except (ImportError, AttributeError):
+        obj = resolve(qual)
+        if obj is None:
             missing.append(f"{qual} (required symbol missing)")
             continue
+        if isinstance(obj, property):
+            obj = obj.fget
+        elif isinstance(obj, (staticmethod, classmethod)):
+            obj = obj.__func__
         check_symbol(qual, obj, missing)
     for pkg in PACKAGES:
         for mod_name, mod in iter_modules(pkg):
