@@ -35,10 +35,21 @@ gate holds launches/round at <= 1.0 WITH churn and preemption active,
 and preempted-then-resumed sequences must produce bitwise-identical
 greedy tokens vs an unpreempted run (CPU and the 8-device mesh leg).
 
+Schema v8 adds two legs for the in-memory bitwise opcodes
+(OP_AND/OP_OR/OP_NOT, the Ambit triple-row-activation analogue):
+``bitwise`` A/Bs mixed memand/memor/memnot flushes through the fused
+table vs the seed per-pool fan-out — the gate holds the fused path at
+1.0 launch/flush AND asserts the two paths' final pool bytes are
+bit-identical — and ``dedup_admit`` drives the duplicated-prompt
+serving leg (fig34_multitenant.run_dedup): fingerprint-matched prompt
+pages collapse into shared CoW blocks on admission, so peak resident KV
+bytes drop while greedy tokens stay bitwise-equal to a dedup-off twin
+at <= 1.0 launches/round.
+
 Emits ``BENCH_dispatch.json``:
 
 {
-  "schema": "bench_dispatch/v7",
+  "schema": "bench_dispatch/v8",
   "backend": "cpu" | "tpu",
   "block": [page, KVH, D], "nblk": int, "pools": ["k", "v"],
   "rows": [{
@@ -119,6 +130,27 @@ Emits ``BENCH_dispatch.json``:
           "max_launches_per_round": float},
       "mesh": {"devices": 8, "mesh_shape": [2, 4],
                "preempt_parity": {...}} | null
+  },
+  "bitwise": {                 # OP_AND/OP_OR/OP_NOT dispatch A/B
+      "rows": [{
+          "batch": int,            # bitwise rows per flush (AND+OR+NOT mix)
+          "path": "fused"|"seed",
+          "launches_per_flush": float,  # 1.0 fused vs per-opcode-chunk
+          "us_per_flush": float,
+          "bytes_bitwise": int     # dst bytes one flush computes
+      }],
+      "summary": {"speedup": float, "launches_fused": float,
+                  "launches_seed": float,
+                  "bitwise_match": bool}  # final pool bytes identical
+  },
+  "dedup_admit": {             # duplicated-prompt admission dedup leg
+      "tenants": int, "rounds": int,
+      "kv_bytes_live_on": int,   # peak resident KV bytes, dedup on
+      "kv_bytes_live_off": int,  # ... and the dedup-off twin
+      "resident_reduction": float,  # 1 - on/off (> 0 gated by smoke)
+      "dedup_hits": int, "pages_shared": int, "bytes_saved": int,
+      "tokens_match": bool,      # greedy tokens bitwise == dedup-off
+      "max_launches_per_round": float   # gate: <= 1.0
   }
 }
 
@@ -214,6 +246,104 @@ def _bench_path(use_fused: bool, batch: int, mesh=None,
         "us_per_flush": float(np.median(times) * 1e6),
         "bytes_moved": int(bytes_moved),
     }
+
+
+# ---------------------------------------------------------------------------
+# bitwise A/B — in-memory OP_AND/OP_OR/OP_NOT rows through the same flush
+# ---------------------------------------------------------------------------
+
+BITWISE_BATCHES = (8, 32)
+
+
+def _flush_bitwise(eng: RowCloneEngine, batch: int, round_i: int) -> None:
+    """One mixed bitwise flush: ~1/3 each AND/OR/NOT over disjoint id
+    ranges (no RAW/WAW, so the fused path drains as exactly one launch).
+    Ids rotate per round so jit caches stay warm but data differs."""
+    third = max(batch // 3, 1)
+    span = NBLK // 8
+    base = (round_i * batch) % span
+    a = [1 + (base + i) % span for i in range(third)]
+    b = [NBLK // 4 + (base + i) % span for i in range(third)]
+    d = [NBLK // 2 + (base + i) % span for i in range(third)]
+    eng.alloc.mark_written(a + b)
+    with eng.batch():
+        eng.memand(list(zip(a, b, d)))
+        eng.memor(list(zip(b, a, [x + span for x in d])))
+        eng.memnot(list(zip(a, [x + 2 * span for x in d])))
+
+
+def _bench_bitwise_path(use_fused: bool, batch: int, reps: int = REPS):
+    """Measure one bitwise path; returns (engine, row) so the caller can
+    compare final pool bytes across paths."""
+    eng = _mk_engine(use_fused)
+    events: List = []
+    hook = lambda n, p, mech: events.append((n, p, mech))
+    fd.add_launch_hook(hook)
+    try:
+        for r in range(3):
+            _flush_bitwise(eng, batch, r)
+        events.clear()
+        eng.stats = type(eng.stats)()
+        times = []
+        for r in range(reps):
+            t0 = time.perf_counter()
+            _flush_bitwise(eng, batch, 100 + r)
+            jax.block_until_ready(list(eng.pools.values()))
+            times.append(time.perf_counter() - t0)
+    finally:
+        fd.remove_launch_hook(hook)
+    return eng, {
+        "batch": batch,
+        "path": "fused" if use_fused else "seed",
+        "launches_per_flush": len(events) / reps,
+        "us_per_flush": float(np.median(times) * 1e6),
+        "bytes_bitwise": int(eng.stats.bytes_bitwise // reps),
+    }
+
+
+def _run_bitwise_section() -> Dict:
+    """A/B the bitwise opcodes fused vs seed and assert both paths left
+    bit-identical pool contents (compared through uint views — float
+    equality would miss NaN-pattern divergence)."""
+    rows = []
+    match = True
+    for batch in BITWISE_BATCHES:
+        engs = {}
+        for use_fused in (True, False):
+            eng, row = _bench_bitwise_path(use_fused, batch)
+            engs[row["path"]] = eng
+            rows.append(row)
+        for name in engs["fused"].pools:
+            fa = np.asarray(engs["fused"].pools[name]).view(np.uint32)
+            sa = np.asarray(engs["seed"].pools[name]).view(np.uint32)
+            if not np.array_equal(fa, sa):
+                match = False
+    f = [r for r in rows if r["path"] == "fused"]
+    s = [r for r in rows if r["path"] == "seed"]
+    return {
+        "rows": rows,
+        "summary": {
+            "speedup": float(np.mean([r["us_per_flush"] for r in s]) /
+                             np.mean([r["us_per_flush"] for r in f])),
+            "launches_fused": float(np.mean(
+                [r["launches_per_flush"] for r in f])),
+            "launches_seed": float(np.mean(
+                [r["launches_per_flush"] for r in s])),
+            "bitwise_match": match,
+        },
+    }
+
+
+def _print_bitwise(section: Dict) -> None:
+    for r in section["rows"]:
+        print(f"  bitwise {r['batch']:>4} {r['path']:>6} "
+              f"{r['launches_per_flush']:>6.2f} launches/flush "
+              f"{r['us_per_flush']:>10.1f} us/flush "
+              f"{r['bytes_bitwise'] / 1e6:>6.1f} MB computed")
+    s = section["summary"]
+    print(f"  bitwise flush speedup {s['speedup']:.2f}x  (launches "
+          f"{s['launches_fused']:.2f} fused vs {s['launches_seed']:.2f} "
+          f"seed, pools bit-identical: {s['bitwise_match']})")
 
 
 # ---------------------------------------------------------------------------
@@ -549,6 +679,28 @@ def _traffic_driver():
     return fig34_multitenant
 
 
+DEDUP_ROUNDS = 4
+DEDUP_TENANTS = 4
+
+
+def _run_dedup_section() -> Dict:
+    """Duplicated-prompt admission leg — fig34_multitenant.run_dedup
+    (dedup-on vs dedup-off twin at the same seed)."""
+    mt = _traffic_driver()
+    return mt.run_dedup(rounds=DEDUP_ROUNDS, seed=0, arch=SERVE_ARCH,
+                        tenants=DEDUP_TENANTS)
+
+
+def _print_dedup(row: Dict) -> None:
+    print(f"  dedup_admit ({row['tenants']} tenants, {row['rounds']} "
+          f"rounds): resident KV {row['kv_bytes_live_on'] / 1e6:.1f} vs "
+          f"{row['kv_bytes_live_off'] / 1e6:.1f} MB "
+          f"({row['resident_reduction']:.0%} saved), "
+          f"{row['pages_shared']} pages shared / {row['dedup_hits']} "
+          f"admission hits, tokens match: {row['tokens_match']}, max "
+          f"{row['max_launches_per_round']:.1f} launches/round")
+
+
 def _traffic_parity(mesh=None) -> Dict:
     """Preempt→demote→resume greedy-token parity vs an unpreempted run.
 
@@ -799,8 +951,9 @@ def _run_mesh_section() -> Optional[Dict]:
 
 
 def run(skip_mesh: bool = False, skip_serve: bool = False) -> Dict:
-    """Full benchmark: single-device dispatch A/B, the mesh leg, and the
-    serve_round section.  Returns the schema-v4 result dict."""
+    """Full benchmark: single-device dispatch A/B, the mesh leg, the
+    serve_round/serve_traffic sections, and the v8 bitwise/dedup legs.
+    Returns the schema-v8 result dict."""
     rows = []
     for batch in BATCHES:
         for use_fused in (True, False):
@@ -810,7 +963,7 @@ def run(skip_mesh: bool = False, skip_serve: bool = False) -> Dict:
     speedup = (np.mean([r["us_per_flush"] for r in small_s]) /
                np.mean([r["us_per_flush"] for r in small_f]))
     return {
-        "schema": "bench_dispatch/v7",
+        "schema": "bench_dispatch/v8",
         "backend": jax.default_backend(),
         "block": list(BLOCK),
         "nblk": NBLK,
@@ -821,6 +974,8 @@ def run(skip_mesh: bool = False, skip_serve: bool = False) -> Dict:
         "serve_round": None if skip_serve else _run_serve_section(skip_mesh),
         "serve_traffic": None if skip_serve
         else _run_traffic_section(skip_mesh),
+        "bitwise": _run_bitwise_section(),
+        "dedup_admit": None if skip_serve else _run_dedup_section(),
     }
 
 
@@ -875,7 +1030,11 @@ def serve_smoke() -> int:
     FAIL (exit 1) if the fused paths regress above 1.0 bulk-movement
     launch per round — the one-launch-per-flush invariant this repo is
     built around — or if ring staging stops matching the full twin's
-    greedy tokens.  Returns the process exit code."""
+    greedy tokens.  Since schema v8 it also gates the bitwise-opcode leg
+    (fused must stay at 1.0 launch/flush with bit-identical pools vs the
+    seed fan-out) and the dedup_admit leg (resident KV must shrink while
+    greedy tokens stay bitwise-equal to the dedup-off twin at <= 1.0
+    launches/round).  Returns the process exit code."""
     section = _run_serve_section(skip_mesh=True)
     _print_serve(section)
     ok = True
@@ -916,6 +1075,33 @@ def serve_smoke() -> int:
         print(f"FAIL: post-recovery serve rounds issue "
               f"{fault['max_launches_post_recovery']} bulk-movement "
               "launches (> 1.0/round)")
+        ok = False
+    bitwise = _run_bitwise_section()
+    _print_bitwise(bitwise)
+    bw = bitwise["summary"]
+    if bw["launches_fused"] > 1.0:
+        print(f"FAIL: fused bitwise flushes = {bw['launches_fused']:.2f} "
+              "launches/flush > 1.0 (AND/OR/NOT rows no longer ride the "
+              "fused table)")
+        ok = False
+    if not bw["bitwise_match"]:
+        print("FAIL: fused bitwise pool bytes diverged from the seed "
+              "fan-out path")
+        ok = False
+    dedup = _run_dedup_section()
+    _print_dedup(dedup)
+    if not dedup["tokens_match"]:
+        print("FAIL: dedup-on-admit greedy tokens diverged from the "
+              "dedup-off twin")
+        ok = False
+    if dedup["resident_reduction"] <= 0:
+        print(f"FAIL: dedup_admit saved no resident KV bytes "
+              f"(reduction = {dedup['resident_reduction']:.2%})")
+        ok = False
+    if dedup["max_launches_per_round"] > 1.0:
+        print(f"FAIL: dedup serving rounds hit "
+              f"{dedup['max_launches_per_round']:.2f} launches/round "
+              "> 1.0")
         ok = False
     if ok:
         print("bench-serve smoke OK: fused serve rounds still drain as "
@@ -989,6 +1175,12 @@ def main() -> None:
         print(f"\nserve_traffic ({st['rounds']} rounds, tenants "
               f"{st['tenants']}):")
         _print_traffic(st)
+    if result.get("bitwise"):
+        print("\nbitwise opcodes (AND/OR/NOT):")
+        _print_bitwise(result["bitwise"])
+    if result.get("dedup_admit"):
+        print("\ndedup_admit:")
+        _print_dedup(result["dedup_admit"])
     print(f"-> {args.out}")
 
 

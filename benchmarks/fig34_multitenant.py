@@ -25,6 +25,14 @@ stalls show up here), time-to-first-token, goodput (completed requests'
 tokens/s), and preemption counts; plus the per-round launch series the
 ``serve_traffic`` gate holds at <= 1.0.
 
+**Dedup traffic leg** (:func:`run_dedup`): multi-tenant duplicated-prompt
+traffic — several tenants admit the same canonical prompts, and the leg
+drives one engine with ``dedup_admit=True`` against an identical
+dedup-off twin: resident KV bytes (``ServingEngine.kv_bytes_live``) drop
+by the shared pages while greedy tokens stay bitwise-identical and each
+round still drains <= 1 launch.  The ``BENCH_dispatch.json`` v8
+``dedup_admit`` leg records the reduction.
+
 CLI:  PYTHONPATH=src python benchmarks/fig34_multitenant.py \
           --traffic poisson --rounds 48
 """
@@ -243,14 +251,74 @@ def run_traffic(pattern: str = "poisson", rounds: int = 48, seed: int = 0,
         submitted=len(sched.requests))
 
 
+# ---------------------------------------------------------------------------
+# dedup-on-admit traffic leg (duplicated prompts across tenants)
+# ---------------------------------------------------------------------------
+
+def run_dedup(rounds: int = 4, seed: int = 0, arch: str = "llama3.2-3b",
+              tenants: int = 4, cfg=None, params=None) -> Dict:
+    """Duplicated-prompt traffic: ``tenants`` admissions drawn from TWO
+    canonical prompts (so most admissions are exact dupes of an earlier
+    tenant's), decoded for ``rounds`` greedy rounds with dedup-on-admit
+    ON and then on an identical dedup-off twin.  Returns the
+    ``BENCH_dispatch.json`` v8 ``dedup_admit`` leg row: peak resident KV
+    bytes for both runs, the reduction, launches/round, and whether every
+    tenant's greedy tokens matched bitwise."""
+    if cfg is None:
+        cfg = get_config(arch).reduced()
+        model = build_model(cfg)
+        params, _ = split_params(model.init_params(jax.random.key(0)))
+
+    def drive(dedup: bool):
+        eng = ServingEngine(cfg, params, max_seqs=max(tenants * 2, 8),
+                            dedup_admit=dedup)
+        rng = np.random.default_rng(seed)
+        page = eng.cache.page
+        canon = [rng.integers(2, cfg.vocab_size,
+                              size=2 * page + page // 2).astype(np.int32)
+                 for _ in range(2)]
+        sids = [eng.add_request(canon[t % len(canon)].copy())
+                for t in range(tenants)]
+        peak = eng.kv_bytes_live()
+        launches = []
+        for _ in range(rounds):
+            eng.decode_round()
+            launches.append(eng.last_ticket.launches
+                            if eng.last_ticket else 0)
+            peak = max(peak, eng.kv_bytes_live())
+        toks = [tuple(eng.tokens[s]) for s in sids]
+        return eng, toks, peak, launches
+
+    e_on, tok_on, peak_on, l_on = drive(True)
+    e_off, tok_off, peak_off, l_off = drive(False)
+    return dict(
+        tenants=tenants, rounds=rounds,
+        kv_bytes_live_on=int(peak_on), kv_bytes_live_off=int(peak_off),
+        resident_reduction=1.0 - peak_on / max(peak_off, 1),
+        dedup_hits=int(e_on.dedup_hits),
+        pages_shared=int(e_on.dedup_pages_shared),
+        bytes_saved=int(e_on.dedup_bytes_saved),
+        tokens_match=bool(tok_on == tok_off),
+        max_launches_per_round=float(max(l_on)) if l_on else 0.0)
+
+
 def main():
     """CLI for the traffic driver (the fig 3/4 sweep stays importable)."""
     ap = argparse.ArgumentParser()
-    ap.add_argument("--traffic", choices=("poisson", "bursty"),
+    ap.add_argument("--traffic", choices=("poisson", "bursty", "dedup"),
                     default="poisson")
     ap.add_argument("--rounds", type=int, default=48)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.traffic == "dedup":
+        row = run_dedup(rounds=min(args.rounds, 8), seed=args.seed)
+        print(f"[traffic:dedup] {row['tenants']} tenants: resident KV "
+              f"{row['kv_bytes_live_on']} vs {row['kv_bytes_live_off']} B "
+              f"({row['resident_reduction']:.0%} saved), "
+              f"{row['pages_shared']} pages shared, tokens_match="
+              f"{row['tokens_match']}, max launches/round "
+              f"{row['max_launches_per_round']:.1f}")
+        return
     res = run_traffic(args.traffic, rounds=args.rounds, seed=args.seed)
     print(f"[traffic:{res.pattern}] {res.submitted} arrived, "
           f"{res.completed} completed, "

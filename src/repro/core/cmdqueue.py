@@ -39,6 +39,12 @@ matrix:
   inserts an ``OP_NOP`` spacer between the two rows at flush time — the
   spacer step's trailing wait retires the read before the write starts.
 
+Two-source bitwise rows (``OP_AND``/``OP_OR``/``OP_NOT`` — src packs BOTH
+global source ids as ``a * group.total_blocks + b``) apply the same matrix
+to EITHER source: RAW/WAW on srcA *or* srcB auto-flush, WAR on either
+source is admitted + counted + spaced, and ``retire``/journal replay
+rebuild both pending-source entries.
+
 Invariant for writers of new opcodes: every command must name its written
 block in ``dst`` (and its read block in ``src`` — global
 ``group.base(pool) + block`` ids for cross-pool ops, see
@@ -53,9 +59,12 @@ from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 import numpy as np
 
 from repro.core.poolspec import PoolGroup
-from repro.kernels.fused_dispatch import (OP_BASELINE_COPY, OP_CROSS_POOL_COPY,
-                                          OP_FPM_COPY, OP_NOP, OP_PSM_COPY,
-                                          OP_ZERO_INIT)
+from repro.kernels.fused_dispatch import (BITWISE_OPS, OP_AND,
+                                          OP_BASELINE_COPY,
+                                          OP_CROSS_POOL_COPY, OP_FPM_COPY,
+                                          OP_NOP, OP_NOT, OP_OR, OP_PSM_COPY,
+                                          OP_ZERO_INIT, pack_bitwise_src,
+                                          unpack_bitwise_src)
 
 #: padding buckets — the only command-table lengths ever jit-compiled
 BUCKETS: Tuple[int, ...] = (8, 32, 128, 512)
@@ -75,16 +84,28 @@ def bucket_size(n: int) -> int:
 ALL_PRIMARY = -1
 
 
-def _row_rw(op: int, s: int, d: int, locate):
+def _row_rw(op: int, s: int, d: int, locate, total: Optional[int] = None):
     """The ``(reads, writes)`` hazard keys of one table row, each a tuple
     of ``(pool, block)`` with :data:`ALL_PRIMARY` meaning every primary
     pool.  ``locate`` decodes cross-pool stacked ids for whatever address
     space the row lives in (the PoolGroup's global ids, or a ShardPlan
-    slab's local prefix-sum ids)."""
+    slab's local prefix-sum ids).
+
+    Two-source bitwise rows (``OP_AND``/``OP_OR``/``OP_NOT``) read BOTH
+    packed sources — ``total`` is the address-space size the packing used
+    (``group.total_blocks`` globally, the slab-local stacked total inside
+    a ShardPlan) and is required whenever such a row can appear."""
     if op == OP_CROSS_POOL_COPY:
         return (locate(s),), (locate(d),)
     if op == OP_ZERO_INIT:
         return (), ((ALL_PRIMARY, d),)
+    if op in BITWISE_OPS:
+        if total is None:
+            raise ValueError("bitwise row needs the packing total to "
+                             "decode its two sources")
+        a, b = unpack_bitwise_src(s, total)
+        reads = (locate(a),) if a == b else (locate(a), locate(b))
+        return reads, (locate(d),)
     return ((ALL_PRIMARY, s),), ((ALL_PRIMARY, d),)
 
 
@@ -107,7 +128,7 @@ def _keys_clash(a: Tuple[int, int], b: Tuple[int, int],
 
 
 def space_war_rows(rows: Sequence[Tuple[int, int, int]], locate,
-                   primary: Tuple[bool, ...]
+                   primary: Tuple[bool, ...], total: Optional[int] = None
                    ) -> List[Tuple[int, int, int]]:
     """Insert ``OP_NOP`` spacer rows so no row writes a ``(pool, block)``
     the IMMEDIATELY preceding row reads.
@@ -120,7 +141,10 @@ def space_war_rows(rows: Sequence[Tuple[int, int, int]], locate,
     the trailing wait still retires the in-flight read, so the write that
     follows can never race it.  Applied by :meth:`CommandQueue.flush` to
     the global table and by :func:`partition_commands` to every slab
-    sub-table (adjacency is per drained table, not per enqueue order)."""
+    sub-table (adjacency is per drained table, not per enqueue order).
+
+    ``total`` is the packed-src address-space size, forwarded to
+    :func:`_row_rw` so two-source bitwise rows space on EITHER source."""
     out: List[Tuple[int, int, int]] = []
     prev_reads: Tuple = ()
     for row in rows:
@@ -129,7 +153,7 @@ def space_war_rows(rows: Sequence[Tuple[int, int, int]], locate,
             out.append(row)
             prev_reads = ()
             continue
-        reads, writes = _row_rw(op, s, d, locate)
+        reads, writes = _row_rw(op, s, d, locate, total)
         if any(_keys_clash(r, w, primary)
                for r in prev_reads for w in writes):
             out.append((OP_NOP, -1, -1))
@@ -164,11 +188,18 @@ class ShardPlan:
       - ``send_rows`` (K, S, t): *pool-local* slab row each sender gathers
         (every pool is gathered at that row; the receiver picks the buffer
         that matters; -1 pads).
-      - ``recv_tables`` (K, S, t, 3): ``[buf_pool, dst_pool, dst_row]`` —
-        ``buf_pool``/``dst_pool`` are -1 for whole-block copies (each pool
-        scatters its own buffer slot); a cross-pool transfer names the
-        source-pool buffer and destination pool; ``dst_row`` is pool-local
-        in the destination slab; -1 pads.
+      - ``recv_tables`` (K, S, t, 4): ``[buf_pool, dst_pool, dst_row,
+        combine_op]`` — ``buf_pool``/``dst_pool`` are -1 for whole-block
+        copies (each pool scatters its own buffer slot); a cross-pool
+        transfer names the source-pool buffer and destination pool;
+        ``dst_row`` is pool-local in the destination slab; -1 pads.
+        ``combine_op`` orders two-source bitwise rows whose sources are
+        not resident on the destination shard: -1 is a plain overwrite
+        (phase 0 of the scatter), ``OP_NOT`` overwrites with the inverted
+        buffer (phase 0), and ``OP_AND``/``OP_OR`` fold the buffer into
+        the already-landed destination block (phase 1) — such a row ships
+        one entry per non-resident source (srcA as the overwrite, srcB as
+        the combine, hop distance 0 allowed when only one side travels).
     """
     n_shards: int
     shard_sizes: Tuple[int, ...]  # per-pool slab size (nblk_p / S)
@@ -178,7 +209,7 @@ class ShardPlan:
     local_tables: np.ndarray     # (S, m, 3) int32
     deltas: Tuple[int, ...]      # static ppermute hop distances, sorted
     send_rows: np.ndarray        # (K, S, t) int32
-    recv_tables: np.ndarray      # (K, S, t, 3) int32
+    recv_tables: np.ndarray      # (K, S, t, 4) int32
 
 
 def partition_commands(rows: Iterable[Tuple[int, int, int]], *,
@@ -234,16 +265,79 @@ def partition_commands(rows: Iterable[Tuple[int, int, int]], *,
         run += s_p
     p0 = group.primary.index(True)  # plain ops address the primary space
     ss0 = ss[p0]
+    lt = run                        # slab-local stacked total (bitwise pack)
     local: List[List[Tuple[int, int, int]]] = [[] for _ in range(n_shards)]
     # delta -> per-src-shard slot lists of (src_row, buf_pool, dst_pool,
-    # dst_row)
-    xfer: Dict[int, List[List[Tuple[int, int, int, int]]]] = {}
+    # dst_row, combine_op)
+    xfer: Dict[int, List[List[Tuple[int, int, int, int, int]]]] = {}
     n_transfer = 0
+
+    def _side(p: int, blk: int, sh_d: int) -> Tuple[int, int, int]:
+        """Resolve one source of a bitwise row against the dst shard:
+        ``(shard, slab_local_gid, slab_pool_row)`` — replicated pools are
+        resident everywhere, so they count as the dst shard."""
+        if replicated[p]:
+            return sh_d, local_base[p] + blk, blk
+        return blk // ss[p], local_base[p] + blk % ss[p], blk % ss[p]
+
+    def _xfer_entry(delta: int, sh_s: int, entry: Tuple[int, int, int,
+                                                        int, int]) -> None:
+        slots = xfer.setdefault(delta, [[] for _ in range(n_shards)])
+        slots[sh_s].append(entry)
+
     for op, s, d in rows:
         if op < 0:
             continue
         if op == OP_ZERO_INIT:
             local[d // ss0].append((op, -1, d % ss0))
+            continue
+        if op in BITWISE_OPS:
+            a, b = unpack_bitwise_src(s, group.total_blocks)
+            pa, ab = group.locate(a)
+            pb, bb = group.locate(b)
+            pd, bd = group.locate(d)
+            if replicated[pd]:
+                if not (replicated[pa] and replicated[pb]):
+                    raise ValueError(
+                        f"bitwise write into replicated pool "
+                        f"{group[pd].name!r} from a sharded source needs "
+                        "a broadcast hop (unsupported in the sharded "
+                        "drain)")
+                row = (op, pack_bitwise_src(local_base[pa] + ab,
+                                            local_base[pb] + bb, lt),
+                       local_base[pd] + bd)
+                for sh in range(n_shards):
+                    local[sh].append(row)
+                continue
+            sh_d = bd // ss[pd]
+            ld = bd % ss[pd]
+            sh_a, la, ra = _side(pa, ab, sh_d)
+            sh_b, lb, rb = _side(pb, bb, sh_d)
+            if sh_a == sh_d and sh_b == sh_d:
+                local[sh_d].append(
+                    (op, pack_bitwise_src(la, lb, lt), local_base[pd] + ld))
+                continue
+            # a two-source row with any non-resident source ships ONE
+            # transfer entry per travelling source: srcA lands first
+            # (overwrite / inverted overwrite), srcB folds in during the
+            # combine phase — a resident srcA instead becomes a local
+            # cross-pool copy (drained before any scatter), a resident
+            # srcB a hop-distance-0 combine entry
+            if op == OP_NOT:
+                _xfer_entry((sh_d - sh_a) % n_shards, sh_a,
+                            (ra, pa, pd, ld, OP_NOT))
+                n_transfer += 1
+                continue
+            if sh_a == sh_d:
+                local[sh_d].append((OP_CROSS_POOL_COPY, la,
+                                    local_base[pd] + ld))
+            else:
+                _xfer_entry((sh_d - sh_a) % n_shards, sh_a,
+                            (ra, pa, pd, ld, -1))
+                n_transfer += 1
+            _xfer_entry((sh_d - sh_b) % n_shards, sh_b,
+                        (rb, pb, pd, ld, op))
+            n_transfer += 1
             continue
         if op == OP_CROSS_POOL_COPY:
             ps, bs = group.locate(s)
@@ -273,16 +367,14 @@ def partition_commands(rows: Iterable[Tuple[int, int, int]], *,
                 local[sh_d].append((op, local_base[ps] + bs % ss[ps],
                                     local_base[pd] + bd % ss[pd]))
                 continue
-            entry = (bs % ss[ps], ps, pd, bd % ss[pd])
+            entry = (bs % ss[ps], ps, pd, bd % ss[pd], -1)
         else:
             sh_s, sh_d = s // ss0, d // ss0
             if sh_s == sh_d:
                 local[sh_d].append((op, s % ss0, d % ss0))
                 continue
-            entry = (s % ss0, -1, -1, d % ss0)
-        delta = (sh_d - sh_s) % n_shards
-        slots = xfer.setdefault(delta, [[] for _ in range(n_shards)])
-        slots[sh_s].append(entry)
+            entry = (s % ss0, -1, -1, d % ss0, -1)
+        _xfer_entry((sh_d - sh_s) % n_shards, sh_s, entry)
         n_transfer += 1
 
     n_local = sum(len(l) for l in local)
@@ -297,7 +389,7 @@ def partition_commands(rows: Iterable[Tuple[int, int, int]], *,
         raise AssertionError("unreachable")
 
     pre_spacing = sum(len(l) for l in local)
-    local = [space_war_rows(l, _local_locate, group.primary)
+    local = [space_war_rows(l, _local_locate, group.primary, lt)
              for l in local]
     n_spacers = sum(len(l) for l in local) - pre_spacing
     longest = max((len(l) for l in local), default=0) or 1
@@ -315,13 +407,13 @@ def partition_commands(rows: Iterable[Tuple[int, int, int]], *,
                          for slots in xfer.values() for per_src in slots),
                         default=0) or 1) if deltas else 0
     send_rows = np.full((len(deltas), n_shards, max(t, 1)), -1, np.int32)
-    recv_tables = np.full((len(deltas), n_shards, max(t, 1), 3), -1, np.int32)
+    recv_tables = np.full((len(deltas), n_shards, max(t, 1), 4), -1, np.int32)
     for k, delta in enumerate(deltas):
         for sh_s, entries in enumerate(xfer[delta]):
             sh_d = (sh_s + delta) % n_shards
-            for j, (src_row, ps, pd, dst_row) in enumerate(entries):
+            for j, (src_row, ps, pd, dst_row, comb) in enumerate(entries):
                 send_rows[k, sh_s, j] = src_row
-                recv_tables[k, sh_d, j] = (ps, pd, dst_row)
+                recv_tables[k, sh_d, j] = (ps, pd, dst_row, comb)
     return ShardPlan(n_shards=n_shards, shard_sizes=ss, n_local=n_local,
                      n_transfer=n_transfer, n_spacers=n_spacers,
                      local_tables=local_tables, deltas=deltas,
@@ -340,15 +432,18 @@ def fold_shard_plan(plan: ShardPlan) -> ShardPlan:
     stop compiling new collective bodies, at the cost of ``S-2`` extra
     (empty) ppermutes per folded flush."""
     S = plan.n_shards
-    full = tuple(range(1, S))
+    # hop distance 0 (a resident srcB folding into a travelled srcA) only
+    # exists when a flush used it — fold onto 1..S-1 plus 0 when present
+    full = tuple(sorted(set(range(1, S)) | set(plan.deltas)))
     if plan.deltas == full or not plan.deltas:
         return plan
+    idx = {delta: k for k, delta in enumerate(full)}
     t = plan.send_rows.shape[2]
     send = np.full((len(full), S, t), -1, np.int32)
-    recv = np.full((len(full), S, t, 3), -1, np.int32)
+    recv = np.full((len(full), S, t, 4), -1, np.int32)
     for k, delta in enumerate(plan.deltas):
-        send[delta - 1] = plan.send_rows[k]
-        recv[delta - 1] = plan.recv_tables[k]
+        send[idx[delta]] = plan.send_rows[k]
+        recv[idx[delta]] = plan.recv_tables[k]
     return dataclasses.replace(plan, deltas=full, send_rows=send,
                                recv_tables=recv)
 
@@ -401,20 +496,25 @@ class CommandQueue:
 
     # ------------------------------------------------------------------
     def _hazard_keys(self, opcode: int, src: int, dst: int) -> Tuple[
-            Optional[Tuple[int, int]], Tuple[int, int]]:
-        """``(pool, block)`` keys used for ordering hazards — the same
-        read/write mapping :func:`_row_rw` gives the WAR spacing pass
-        (one source of truth for what a row touches).
+            Tuple[Tuple[int, int], ...], Tuple[int, int]]:
+        """``(source_keys, dst_key)`` — the ``(pool, block)`` keys used for
+        ordering hazards, the same read/write mapping :func:`_row_rw`
+        gives the WAR spacing pass (one source of truth for what a row
+        touches).  ``source_keys`` is a tuple because two-source bitwise
+        rows (``OP_AND``/``OP_OR``) read two blocks: every hazard rule
+        applies to EITHER source.
 
         Plain opcodes (FPM/PSM/baseline copy, zero-init) read and write the
         block in EVERY primary pool → pool key :data:`ALL_PRIMARY`.
-        ``OP_CROSS_POOL_COPY`` carries global ``group.base(pool) + block``
-        ids resolved through the engine's PoolGroup, so its keys name the
-        exact (pool index, local block) touched — a staging→KV promotion
-        of block ``d`` does not serialize against an unrelated command on
-        the same numeric block id in another pool."""
-        reads, writes = _row_rw(opcode, src, dst, self.engine.group.locate)
-        return (reads[0] if reads else None), writes[0]
+        ``OP_CROSS_POOL_COPY`` and the bitwise opcodes carry global
+        ``group.base(pool) + block`` ids resolved through the engine's
+        PoolGroup, so their keys name the exact (pool index, local block)
+        touched — a staging→KV promotion of block ``d`` does not serialize
+        against an unrelated command on the same numeric block id in
+        another pool."""
+        reads, writes = _row_rw(opcode, src, dst, self.engine.group.locate,
+                                self.engine.group.total_blocks)
+        return reads, writes[0]
 
     def _overlaps(self, key: Tuple[int, int],
                   pending: Dict[int, Set[int]]) -> bool:
@@ -450,11 +550,11 @@ class CommandQueue:
         apart for the overlapped kernel.  Overlap with ANOTHER stream's
         pending commands serializes that stream first (the engine's
         cross-stream guard)."""
-        skey, dkey = self._hazard_keys(opcode, src, dst)
+        skeys, dkey = self._hazard_keys(opcode, src, dst)
         guard = getattr(self.engine, "_cross_stream_guard", None)
         if guard is not None:
-            guard(self, skey, dkey)
-        if (skey is not None and self.has_pending_write(skey)) \
+            guard(self, skeys, dkey)
+        if any(self.has_pending_write(k) for k in skeys) \
                 or self.has_pending_write(dkey):
             self.stats.hazard_flushes += 1
             self.flush()
@@ -462,7 +562,7 @@ class CommandQueue:
             self.stats.war_hazards += 1
         self._cmds.append((int(opcode), int(src), int(dst)))
         self._pending_dsts.setdefault(dkey[1], set()).add(dkey[0])
-        if skey is not None:
+        for skey in skeys:
             self._pending_srcs.setdefault(skey[1], set()).add(skey[0])
         note = getattr(self.engine, "_note_pending", None)
         if note is not None:
@@ -536,9 +636,9 @@ class CommandQueue:
         self._pending_dsts = {}
         self._pending_srcs = {}
         for op, s, d in kept:
-            skey, dkey = self._hazard_keys(op, s, d)
+            skeys, dkey = self._hazard_keys(op, s, d)
             self._pending_dsts.setdefault(dkey[1], set()).add(dkey[0])
-            if skey is not None:
+            for skey in skeys:
                 self._pending_srcs.setdefault(skey[1], set()).add(skey[0])
         self.stats.retired += removed
         if not kept:
@@ -578,5 +678,11 @@ __all__ = [
     "OP_BASELINE_COPY",
     "OP_ZERO_INIT",
     "OP_CROSS_POOL_COPY",
+    "OP_AND",
+    "OP_OR",
+    "OP_NOT",
     "OP_NOP",
+    "BITWISE_OPS",
+    "pack_bitwise_src",
+    "unpack_bitwise_src",
 ]

@@ -64,16 +64,19 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.core.allocator import SubarrayAllocator
-from repro.core.cmdqueue import (BUCKETS, CommandQueue, OP_BASELINE_COPY,
-                                 OP_CROSS_POOL_COPY, OP_FPM_COPY, OP_NOP,
+from repro.core.cmdqueue import (BITWISE_OPS, BUCKETS, CommandQueue, OP_AND,
+                                 OP_BASELINE_COPY, OP_CROSS_POOL_COPY,
+                                 OP_FPM_COPY, OP_NOP, OP_NOT, OP_OR,
                                  OP_PSM_COPY, OP_ZERO_INIT, bucket_size,
-                                 partition_commands, space_war_rows)
+                                 pack_bitwise_src, partition_commands,
+                                 space_war_rows, unpack_bitwise_src)
 from repro.core.journal import (AbortedFlush, JournalRecord, PoolSnapshot,
                                 RecoveryError, RecoveryReport, TicketJournal)
 from repro.core.poolspec import BlockRef, PoolGroup
 from repro.core.stream import CommandStream
 from repro.kernels import ops as kops
-from repro.kernels.fused_dispatch import DrainInfo, check_drain, notify_launch
+from repro.kernels.fused_dispatch import (DrainInfo, _bitcast_uint,
+                                          check_drain, notify_launch)
 from repro.models.paged import pool_shard_axes, pool_shard_count
 
 
@@ -97,6 +100,8 @@ class EngineStats:
     bytes_avoided: int = 0      # alias + lazy zero
     cross_stream_flushes: int = 0  # streams serialized by an overlap
     launches: int = 0           # device dispatches issued for bulk movement
+    bitwise_ops: int = 0        # AND/OR/NOT compute rows enqueued
+    bytes_bitwise: int = 0      # destination bytes written by bitwise rows
 
 
 class RowCloneEngine:
@@ -301,19 +306,21 @@ class RowCloneEngine:
         return self._default_stream
 
     def _cross_stream_guard(self, queue: CommandQueue,
-                            skey, dkey) -> None:
+                            skeys, dkey) -> None:
         """Serialize streams that touch the same blocks: a command about
         to land on ``queue`` that reads or writes another stream's pending
         WRITE, or writes another stream's pending READ, drains that other
         stream first.  (Reading another stream's pending read is harmless
-        — RAR.)  Flush order between unrelated streams stays undefined,
-        which is the asynchrony the API sells.  Only queues with pending
-        work are scanned (the live set)."""
+        — RAR.)  ``skeys`` is the tuple of read keys — two-source bitwise
+        rows contribute both decoded sources, so a conflict on EITHER
+        source drains the other stream.  Flush order between unrelated
+        streams stays undefined, which is the asynchrony the API sells.
+        Only queues with pending work are scanned (the live set)."""
         for q in list(self._live_queues.values()):
             if q is queue or not len(q):
                 continue
             clash = q.has_pending_write(dkey) or q.has_pending_read(dkey) \
-                or (skey is not None and q.has_pending_write(skey))
+                or any(q.has_pending_write(k) for k in skeys)
             if clash:
                 self.stats.cross_stream_flushes += 1
                 q.flush()
@@ -480,7 +487,8 @@ class RowCloneEngine:
             spaced = rows
         else:
             spaced = space_war_rows(rows, self.group.locate,
-                                    self.group.primary)
+                                    self.group.primary,
+                                    self.group.total_blocks)
             if queue is not None:
                 queue.stats.spacer_rows += len(spaced) - len(rows)
         self._last_plan_sig = None
@@ -534,7 +542,7 @@ class RowCloneEngine:
         for op, s, d in rows:
             if op < 0:
                 continue
-            if op == OP_CROSS_POOL_COPY:
+            if op == OP_CROSS_POOL_COPY or op in BITWISE_OPS:
                 pd, _ = self.group.locate(int(d))
                 hit.add(self.group.names[pd])
             else:
@@ -560,6 +568,12 @@ class RowCloneEngine:
         if not lost_idx:
             return False
         op, s, d = row
+        if op in BITWISE_OPS:
+            a, b = unpack_bitwise_src(int(s), self.group.total_blocks)
+            pa, _ = self.group.locate(a)
+            pb, _ = self.group.locate(b)
+            pd, _ = self.group.locate(int(d))
+            return pa in lost_idx or pb in lost_idx or pd in lost_idx
         if op != OP_CROSS_POOL_COPY:
             return False
         ps, _ = self.group.locate(int(s))
@@ -792,6 +806,93 @@ class RowCloneEngine:
                 self.alloc.mark_written([int(d.block)])
         self._autoflush()
         return len(pairs)
+
+    # ------------------------------------------------------------------
+    # bitwise compute rows — in-memory AND/OR/NOT (Ambit triple-row
+    # activation analogue) through the same queue and fused launch
+    # ------------------------------------------------------------------
+    def _bitwise_rows(self, triples, verb: str):
+        """Normalize ``(a, b, dst)`` operand triples to global-id rows.
+
+        Each triple is either all :class:`BlockRef`\\ s (any pool,
+        matching block shape/dtype assumed group-wide) or all bare ints
+        (primary-space ids — the op fans out to every primary pool, the
+        plain-opcode convention).  Lazily-zero PRIMARY sources hold stale
+        bytes, so they materialize first, exactly like ``memcopy_cross``
+        sources."""
+        rows = []
+        lazy = set()
+        for t in triples:
+            a, b, d = t
+            refs = [isinstance(x, BlockRef) for x in (a, b, d)]
+            if any(refs):
+                if not all(refs):
+                    raise TypeError(
+                        f"{verb}: each triple must be all BlockRefs or "
+                        f"all ints, got {t!r}")
+                for x in (a, b):
+                    if x.pool in self.primary_names and self.enable_zi \
+                            and self.alloc.is_zero[int(x.block)]:
+                        lazy.add(int(x.block))
+                rows.append((self.group.gid(a), self.group.gid(b),
+                             self.group.gid(d), d))
+            else:
+                ai = self._primary_id(a)
+                bi = self._primary_id(b)
+                di = self._primary_id(d)
+                for x in (ai, bi):
+                    if self.enable_zi and self.alloc.is_zero[x]:
+                        lazy.add(x)
+                for pname in self.primary_names:
+                    base = self.group.base(pname)
+                    rows.append((base + ai, base + bi, base + di,
+                                 BlockRef(pname, di)))
+        if lazy:
+            # the RAW guard orders the zero-init ahead of the compute row
+            self.materialize_zeros(sorted(lazy))
+        return rows
+
+    def _membitwise(self, op: int, rows) -> int:
+        total = self.group.total_blocks
+        if total * total - 1 > np.iinfo(np.int32).max:
+            raise ValueError(
+                f"bitwise srcB packing overflows int32: group has {total} "
+                f"blocks (> 46340) — shrink the pool group or split it")
+        for a, b, d, dref in rows:
+            self._cur_queue.enqueue(op, pack_bitwise_src(a, b, total), d)
+            self.stats.bitwise_ops += 1
+            self.stats.bytes_bitwise += self._pool_block_bytes(dref.pool)
+            if dref.pool in self.primary_names:
+                # dst now holds computed (generally non-zero) bytes
+                self.alloc.mark_written([int(dref.block)])
+        self._autoflush()
+        return len(rows)
+
+    def memand(self, triples) -> int:
+        """Bitwise AND: ``dst = a & b`` block-wise for each ``(a, b,
+        dst)`` triple, over the raw bit patterns (float pools combine via
+        a same-width unsigned bitcast).  Triples are all-BlockRef (any
+        pool mix, including staging) or all-int (primary space, fanned
+        out to every primary pool).  ``dst`` may equal either source.
+        Rides the current stream's queue like any copy — two-source
+        hazards (RAW/WAW on either source) auto-flush, WAR is spaced."""
+        return self._membitwise(OP_AND, self._bitwise_rows(triples,
+                                                           "memand"))
+
+    def memor(self, triples) -> int:
+        """Bitwise OR: ``dst = a | b`` block-wise for each ``(a, b,
+        dst)`` triple — same addressing, hazard, and bitcast semantics as
+        :meth:`memand`."""
+        return self._membitwise(OP_OR, self._bitwise_rows(triples,
+                                                          "memor"))
+
+    def memnot(self, pairs) -> int:
+        """Bitwise NOT: ``dst = ~src`` block-wise for each ``(src,
+        dst)`` pair (the packed second source repeats ``src``) — same
+        addressing, hazard, and bitcast semantics as :meth:`memand`."""
+        return self._membitwise(
+            OP_NOT, self._bitwise_rows([(s, s, d) for s, d in pairs],
+                                       "memnot"))
 
     # ------------------------------------------------------------------
     # staging — prefill pages park in a staging pool, then promote into
@@ -1106,6 +1207,15 @@ class RowCloneEngine:
         source?  (Replicated→replicated writes drain collectively — every
         shard applies them to its replica.)"""
         for op, s, d in table:
+            if int(op) in BITWISE_OPS:
+                a, b = unpack_bitwise_src(int(s), self.group.total_blocks)
+                pa, _ = self.group.locate(a)
+                pb, _ = self.group.locate(b)
+                pd, _ = self.group.locate(int(d))
+                if replicated[pd] and not (replicated[pa]
+                                           and replicated[pb]):
+                    return True
+                continue
             if int(op) != OP_CROSS_POOL_COPY:
                 continue
             ps, _ = self.group.locate(int(s))
@@ -1176,6 +1286,8 @@ class RowCloneEngine:
                 launches += self._legacy_zero([d for _, d in run])
             elif op == OP_CROSS_POOL_COPY:
                 launches += self._legacy_cross(run)
+            elif op in BITWISE_OPS:
+                launches += self._legacy_bitwise(op, run)
             i = j
         self.stats.launches += launches
         return launches
@@ -1295,6 +1407,44 @@ class RowCloneEngine:
             i = j
         return launches
 
+    def _legacy_bitwise(self, op: int,
+                        stacked_pairs: List[Tuple[int, int]]) -> int:
+        """Bitwise compute rows on the fan-out path: pool-triple sub-runs
+        execute in ENQUEUE order (same WAR-preserving discipline as
+        ``_legacy_cross``), each as one gather-both-sources /
+        bitcast-combine / scatter device call.  The packed ``srcB``
+        decodes with the group's ``total_blocks``."""
+        launches = 0
+        names = list(self.pools)
+        locate = self.group.locate
+        total = self.group.total_blocks
+        dec = []
+        for s, d in stacked_pairs:
+            a, b = unpack_bitwise_src(s, total)
+            dec.append((locate(a), locate(b), locate(d)))
+        i = 0
+        while i < len(stacked_pairs):
+            key = (dec[i][0][0], dec[i][1][0], dec[i][2][0])
+            run: List[Tuple[int, int, int]] = []
+            j = i
+            while j < len(stacked_pairs) and \
+                    (dec[j][0][0], dec[j][1][0], dec[j][2][0]) == key:
+                run.append((dec[j][0][1], dec[j][1][1], dec[j][2][1]))
+                j += 1
+            pa, pb, pd = key
+            m = self.max_requests
+            for chunk in _chunks(run, m):
+                arr = np.full((m, 3), -1, np.int32)
+                arr[:len(chunk)] = np.asarray(chunk, np.int32)
+                self.pools[names[pd]] = _bitwise_jit(
+                    self.pools[names[pd]], self.pools[names[pa]],
+                    self.pools[names[pb]], jnp.asarray(arr), op=int(op),
+                    block_axis=self.block_axis)
+                notify_launch(self.max_requests, 1, "legacy_bitwise")
+                launches += 1
+            i = j
+        return launches
+
 
 def _chunks(seq, n):
     for i in range(0, len(seq), n):
@@ -1332,6 +1482,34 @@ def _cross_axis1_jit(dst_pool, src_pool, ids):
     safe_dst = jnp.where(ids[:, 1] >= 0, ids[:, 1], dst_pool.shape[1])
     return dst_pool.at[:, safe_dst].set(rows.astype(dst_pool.dtype),
                                         mode="drop")
+
+
+# no donation: dst_pool may BE a_pool/b_pool (same-pool AND is common) and
+# donating an aliased input would invalidate the surviving reference
+@functools.partial(jax.jit, static_argnames=("op", "block_axis"))
+def _bitwise_jit(dst_pool, a_pool, b_pool, ids, *, op, block_axis):
+    """Legacy fan-out bitwise combine: gather both source rows, combine
+    through a same-width unsigned bitcast, scatter to dst (``ids``:
+    (m, 3) ``[a, b, dst]`` local rows, -1 disables a slot)."""
+    ba = block_axis
+
+    def gather(pool, idx):
+        cl = jnp.clip(idx, 0, pool.shape[ba] - 1)
+        return pool[cl] if ba == 0 else pool[:, cl]
+
+    au = _bitcast_uint(gather(a_pool, ids[:, 0]))
+    bu = _bitcast_uint(gather(b_pool, ids[:, 1]))
+    if op == OP_AND:
+        ru = au & bu
+    elif op == OP_OR:
+        ru = au | bu
+    else:
+        ru = ~au
+    rows = jax.lax.bitcast_convert_type(ru, dst_pool.dtype)
+    safe = jnp.where(ids[:, 2] >= 0, ids[:, 2], dst_pool.shape[ba])
+    if ba == 0:
+        return dst_pool.at[safe].set(rows, mode="drop")
+    return dst_pool.at[:, safe].set(rows, mode="drop")
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))

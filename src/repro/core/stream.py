@@ -201,6 +201,21 @@ class CommandStream:
         with self.capture():
             return self.engine.meminit(ids, lazy=lazy)
 
+    def memand(self, triples):
+        """Enqueue bitwise ANDs (``RowCloneEngine.memand`` semantics)."""
+        with self.capture():
+            return self.engine.memand(triples)
+
+    def memor(self, triples):
+        """Enqueue bitwise ORs (``RowCloneEngine.memor`` semantics)."""
+        with self.capture():
+            return self.engine.memor(triples)
+
+    def memnot(self, pairs):
+        """Enqueue bitwise NOTs (``RowCloneEngine.memnot`` semantics)."""
+        with self.capture():
+            return self.engine.memnot(pairs)
+
     def materialize_zeros(self, ids: Sequence[object]):
         """Enqueue BuZ zero-row broadcasts (``materialize_zeros``)."""
         with self.capture():

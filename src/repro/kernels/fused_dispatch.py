@@ -32,6 +32,12 @@ Opcodes (also the ``CommandQueue`` tags, core/cmdqueue.py):
                               PoolGroup address space, core/poolspec.py) —
                               pools may have DIFFERENT block counts but must
                               share block shape and dtype
+  ``OP_AND``               5  in-memory bulk bitwise AND (Ambit TRA analogue):
+                              ``src`` packs TWO global ids ``a * total + b``
+                              (``total`` = sum of pool block counts), ``dst``
+                              is a global id; ``dst = a & b`` bit-for-bit
+  ``OP_OR``                6  in-memory bulk bitwise OR, same two-source packing
+  ``OP_NOT``               7  in-memory bitwise NOT (``b`` packs equal to ``a``)
   ``OP_NOP``              -1  padding row (bucketed table), also ``dst == -1``
   ======================  ==  ==================================================
 
@@ -76,6 +82,9 @@ OP_PSM_COPY = 1
 OP_BASELINE_COPY = 2
 OP_ZERO_INIT = 3
 OP_CROSS_POOL_COPY = 4
+OP_AND = 5
+OP_OR = 6
+OP_NOT = 7
 
 OPCODE_NAMES = {
     OP_NOP: "nop",
@@ -84,7 +93,41 @@ OPCODE_NAMES = {
     OP_BASELINE_COPY: "baseline_copy",
     OP_ZERO_INIT: "zero_init",
     OP_CROSS_POOL_COPY: "cross_pool_copy",
+    OP_AND: "and",
+    OP_OR: "or",
+    OP_NOT: "not",
 }
+
+#: compute opcodes — two-source bitwise rows (Ambit triple-row activation).
+#: ``src`` packs BOTH sources over the global-id space: ``a * total + b``
+#: (``total`` = sum of pool block counts; ``OP_NOT`` packs ``b == a``),
+#: ``dst`` is a global id like ``OP_CROSS_POOL_COPY``'s.
+BITWISE_OPS = (OP_AND, OP_OR, OP_NOT)
+
+_UINTS = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32, 8: jnp.uint64}
+
+
+def _bitcast_uint(arr):
+    """Reinterpret ``arr`` as the same-itemsize unsigned-int dtype (a pure
+    bitcast): the bitwise opcodes AND/OR/NOT raw bit patterns, so float
+    pools combine bytes exactly like the DRAM rows they model."""
+    dt = np.dtype(arr.dtype)
+    if np.issubdtype(dt, np.unsignedinteger):
+        return arr
+    return jax.lax.bitcast_convert_type(arr, _UINTS[dt.itemsize])
+
+
+def pack_bitwise_src(a: int, b: int, total: int) -> int:
+    """Pack two global source ids into one int32 src field: ``a*total+b``.
+
+    ``total`` is the PoolGroup's total block count; ``total**2`` must fit
+    int32 (checked at engine construction — ``total <= 46340``)."""
+    return a * total + b
+
+
+def unpack_bitwise_src(src: int, total: int) -> Tuple[int, int]:
+    """Invert :func:`pack_bitwise_src` → ``(a, b)`` global ids."""
+    return src // total, src % total
 
 # ---------------------------------------------------------------------------
 # launch accounting — the hook tests and benchmarks use to assert "one
@@ -201,6 +244,7 @@ def _make_kernel(n_pools: int, block_axis: int, sizes: Tuple[int, ...],
     for n in sizes:
         bases.append(run)
         run += n
+    total = run
 
     def kernel(cmds_ref, *refs):
         zeros = refs[:n_pools]
@@ -211,6 +255,8 @@ def _make_kernel(n_pools: int, block_axis: int, sizes: Tuple[int, ...],
         # reads — and no snapshot copy of the pools is ever materialized.
         outs = refs[2 * n_pools:3 * n_pools]
         sem = refs[3 * n_pools]          # DMA semaphore pair, shape (2,)
+        va = refs[3 * n_pools + 1]       # VMEM compute scratch (source A)
+        vb = refs[3 * n_pools + 2]       # VMEM compute scratch (source B)
         reads = outs
 
         i = pl.program_id(0)
@@ -228,16 +274,61 @@ def _make_kernel(n_pools: int, block_axis: int, sizes: Tuple[int, ...],
         def blk(ref, b, lay):
             return ref.at[lay, b] if block_axis == 1 else ref.at[b]
 
-        def visit(ci, lay, slot, act):
+        def visit(ci, lay, slot, act, issue=True):
             """Apply ``act`` (start / wait / both) to every DMA descriptor
             of command ``ci`` at layer ``lay``, tracked by semaphore slot
             ``slot``.  Reconstructing the descriptors from the SMEM table
             makes the deferred wait possible: the waiting step rebuilds
-            the exact copies the issuing step started."""
+            the exact copies the issuing step started.
+
+            ``issue=False`` marks the deferred-WAIT phase: bitwise compute
+            rows (``OP_AND``/``OP_OR``/``OP_NOT``) run fully synchronously
+            at their own step — load both sources into VMEM, combine,
+            write back — so they leave NO in-flight descriptors for the
+            wait phase to reconstruct and are skipped there."""
             op = cmds_ref[ci, 0]
             s = cmds_ref[ci, 1]
             d = cmds_ref[ci, 2]
             sm = sem.at[slot]
+
+            if issue:
+                @pl.when(((op == OP_AND) | (op == OP_OR) | (op == OP_NOT))
+                         & (d >= 0))
+                def _():
+                    # two-source compute row: src packs a*total+b; dst is a
+                    # global id.  Synchronous DMA round-trip through VMEM —
+                    # the deferred-wait overlap skips these rows entirely.
+                    a = s // total
+                    b = s - a * total
+                    for ps in range(n_pools):
+                        @pl.when((a >= bases[ps])
+                                 & (a < bases[ps] + sizes[ps]))
+                        def _(ps=ps):
+                            cp = pltpu.make_async_copy(
+                                blk(reads[ps], a - bases[ps], lay), va, sm)
+                            cp.start()
+                            cp.wait()
+
+                        @pl.when((b >= bases[ps])
+                                 & (b < bases[ps] + sizes[ps]))
+                        def _(ps=ps):
+                            cp = pltpu.make_async_copy(
+                                blk(reads[ps], b - bases[ps], lay), vb, sm)
+                            cp.start()
+                            cp.wait()
+                    au = _bitcast_uint(va[...])
+                    bu = _bitcast_uint(vb[...])
+                    ru = jnp.where(op == OP_AND, au & bu,
+                                   jnp.where(op == OP_OR, au | bu, ~au))
+                    va[...] = jax.lax.bitcast_convert_type(ru, va.dtype)
+                    for pd in range(n_pools):
+                        @pl.when((d >= bases[pd])
+                                 & (d < bases[pd] + sizes[pd]))
+                        def _(pd=pd):
+                            cp = pltpu.make_async_copy(
+                                va, blk(outs[pd], d - bases[pd], lay), sm)
+                            cp.start()
+                            cp.wait()
 
             @pl.when((op >= 0) & (d >= 0))
             def _():
@@ -290,11 +381,12 @@ def _make_kernel(n_pools: int, block_axis: int, sizes: Tuple[int, ...],
 
         @pl.when(step > 0)
         def _():
-            visit(prev_i, prev_l, (step - 1) % 2, lambda cp: cp.wait())
+            visit(prev_i, prev_l, (step - 1) % 2, lambda cp: cp.wait(),
+                  issue=False)
 
         @pl.when(step == n_steps - 1)
         def _():
-            visit(i, l, step % 2, lambda cp: cp.wait())
+            visit(i, l, step % 2, lambda cp: cp.wait(), issue=False)
 
     return kernel
 
@@ -331,6 +423,9 @@ def _fused_dispatch_call(cmds, zero_blocks, pools, *, block_axis: int,
     primary = _as_primary(primary, n_pools)
     grid = ((cmds.shape[0],) if block_axis == 0
             else (cmds.shape[0], pools[0].shape[0]))
+    # one block's worth of VMEM ×2 for the bitwise compute rows (all pools
+    # share block shape + dtype — the cross-pool/global-id contract)
+    blk_shape = pools[0].shape[block_axis + 1:]
     return pl.pallas_call(
         _make_kernel(n_pools, block_axis, sizes, primary, overlap),
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -340,7 +435,9 @@ def _fused_dispatch_call(cmds, zero_blocks, pools, *, block_axis: int,
             out_specs=[pl.BlockSpec(memory_space=pl.ANY)] * n_pools,
             # one DMA semaphore per in-flight slot: the overlapped drain
             # alternates parity, the serial drain just alternates
-            scratch_shapes=[pltpu.SemaphoreType.DMA((2,))],
+            scratch_shapes=[pltpu.SemaphoreType.DMA((2,)),
+                            pltpu.VMEM(blk_shape, pools[0].dtype),
+                            pltpu.VMEM(blk_shape, pools[0].dtype)],
         ),
         out_shape=[jax.ShapeDtypeStruct(p.shape, p.dtype) for p in pools],
         # operand order: cmds, zeros (n), donated pools (n); pools are
@@ -444,7 +541,7 @@ def _sharded_runner(mesh, pool_axes: Tuple[str, ...], deltas: Tuple[int, ...],
                        for p in range(n_pools))
     lspec = P(axis, None, None)             # local tables   (S, m, 3)
     sspec = P(None, axis, None)             # send rows      (K, S, t)
-    rspec = P(None, axis, None, None)       # recv tables    (K, S, t, 3)
+    rspec = P(None, axis, None, None)       # recv tables    (K, S, t, 4)
 
     def body(local_tbl, send_rows, recv_tbl, zeros, pools):
         tbl = local_tbl[0]                  # this shard's (m, 3) sub-table
@@ -467,29 +564,64 @@ def _sharded_runner(mesh, pool_axes: Tuple[str, ...], deltas: Tuple[int, ...],
             slabs = list(kref.fused_dispatch(slabs, zeros, tbl,
                                              block_axis=block_axis,
                                              primary=primary))
-        # 3) hop the buffers and scatter on the destination shard
-        for k, delta in enumerate(deltas):
-            perm = [(i, (i + delta) % n_shards) for i in range(n_shards)]
-            recvd = jax.lax.ppermute(bufs[k], axis, perm)
-            rt = recv_tbl[k, 0]             # (t, 3)
-            buf_pool, dst_pool, dst_row = rt[:, 0], rt[:, 1], rt[:, 2]
-            t = rt.shape[0]
-            for pd in range(n_pools):
-                sel = jnp.where(buf_pool < 0, pd, buf_pool)
-                idx_shape = ((1, t) + (1,) * (recvd.ndim - 2)
-                             if block_axis == 0
-                             else (1, 1, t) + (1,) * (recvd.ndim - 3))
-                picked = jnp.take_along_axis(
-                    recvd, sel.reshape(idx_shape), axis=0)[0]
-                # whole-block rows (dst_pool < 0) came from plain opcodes:
-                # they land in every PRIMARY pool only — staging pools take
-                # cross-pool transfers that name them explicitly
-                valid = (dst_row >= 0) & (
-                    ((dst_pool < 0) | (dst_pool == pd)) if primary[pd]
-                    else (dst_pool == pd))
-                slabs[pd] = _scatter_rows(slabs[pd],
-                                          picked.astype(slabs[pd].dtype),
-                                          dst_row, valid, block_axis)
+        # 3) hop the buffers, then scatter in TWO phases: phase 0 lands
+        #    every overwrite entry (plain transfers, and OP_NOT entries
+        #    which invert the buffer in flight), phase 1 folds the
+        #    AND/OR combine entries into the phase-0 result.  A two-source
+        #    bitwise row whose sources live on different shards ships ONE
+        #    entry per source: srcA overwrites dst (phase 0), srcB combines
+        #    into it (phase 1) — the phase split orders them even when the
+        #    two sources arrive on different hop distances.
+        def expand(cond, data):
+            shape = [1] * data.ndim
+            shape[block_axis] = cond.shape[0]
+            return cond.reshape(shape)
+
+        recvs = [jax.lax.ppermute(
+                     bufs[k],
+                     axis, [(i, (i + delta) % n_shards)
+                            for i in range(n_shards)])
+                 for k, delta in enumerate(deltas)]
+        for phase in (0, 1):
+            for k in range(len(deltas)):
+                recvd = recvs[k]
+                rt = recv_tbl[k, 0]         # (t, 4)
+                buf_pool, dst_pool = rt[:, 0], rt[:, 1]
+                dst_row, comb = rt[:, 2], rt[:, 3]
+                t = rt.shape[0]
+                is_comb = (comb == OP_AND) | (comb == OP_OR)
+                phase_sel = is_comb if phase else ~is_comb
+                for pd in range(n_pools):
+                    sel = jnp.where(buf_pool < 0, pd, buf_pool)
+                    idx_shape = ((1, t) + (1,) * (recvd.ndim - 2)
+                                 if block_axis == 0
+                                 else (1, 1, t) + (1,) * (recvd.ndim - 3))
+                    picked = jnp.take_along_axis(
+                        recvd, sel.reshape(idx_shape), axis=0)[0]
+                    picked = picked.astype(slabs[pd].dtype)
+                    # whole-block rows (dst_pool < 0) came from plain
+                    # opcodes: they land in every PRIMARY pool only —
+                    # staging pools take transfers naming them explicitly
+                    valid = (dst_row >= 0) & phase_sel & (
+                        ((dst_pool < 0) | (dst_pool == pd)) if primary[pd]
+                        else (dst_pool == pd))
+                    if phase == 0:
+                        pu = _bitcast_uint(picked)
+                        inv = jax.lax.bitcast_convert_type(~pu,
+                                                           picked.dtype)
+                        data = jnp.where(expand(comb == OP_NOT, picked),
+                                         inv, picked)
+                    else:
+                        cur = _gather_rows(
+                            slabs[pd], jnp.where(valid, dst_row, 0),
+                            block_axis)
+                        cu = _bitcast_uint(cur)
+                        pu = _bitcast_uint(picked)
+                        ru = jnp.where(expand(comb == OP_AND, cu),
+                                       cu & pu, cu | pu)
+                        data = jax.lax.bitcast_convert_type(ru, picked.dtype)
+                    slabs[pd] = _scatter_rows(slabs[pd], data, dst_row,
+                                              valid, block_axis)
         return tuple(slabs)
 
     mapped = shard_map(
@@ -558,7 +690,7 @@ def sharded_fused_dispatch(pools: Sequence, zero_blocks: Sequence, plan, *,
     else:  # no cross-slab traffic: zero-length transfer tables, no permutes
         s = plan.n_shards
         send = jnp.zeros((0, s, 1), jnp.int32)
-        recv = jnp.full((0, s, 1, 3), -1, jnp.int32)
+        recv = jnp.full((0, s, 1, 4), -1, jnp.int32)
     runner = _sharded_runner(mesh, tuple(pool_axes), tuple(plan.deltas),
                              len(pools), block_axis, use_pallas, interpret,
                              primary, tuple(replicated))

@@ -67,9 +67,18 @@ def fused_dispatch(pools, zero_blocks, cmds, block_axis=0, primary=None):
     block count); *staging* pools only receive ``OP_CROSS_POOL_COPY`` rows
     that name them in a global ``base[pool] + block`` id, where ``base``
     is the prefix sum of the pool block counts (the PoolGroup address
-    space).  None = every pool is primary."""
-    from repro.kernels.fused_dispatch import (OP_CROSS_POOL_COPY,
-                                              OP_ZERO_INIT, _as_primary)
+    space).  None = every pool is primary.
+
+    Bitwise compute rows (``OP_AND``/``OP_OR``/``OP_NOT``) carry TWO
+    sources packed into the src field — ``src = a * total + b`` over the
+    same global-id space (``total`` = sum of the pool block counts;
+    ``OP_NOT`` packs ``b == a``) — and a *global-id* dst, so fingerprint
+    rows can land in staging pools.  Sources are gathered from the
+    pre-flush state and combined through a same-width unsigned-int
+    bitcast, so float pools AND/OR/NOT their raw bit patterns."""
+    from repro.kernels.fused_dispatch import (OP_AND, OP_CROSS_POOL_COPY,
+                                              OP_NOT, OP_OR, OP_ZERO_INIT,
+                                              _as_primary, _bitcast_uint)
     pools = list(pools)
     n = len(pools)
     primary = _as_primary(primary, n)
@@ -80,8 +89,10 @@ def fused_dispatch(pools, zero_blocks, cmds, block_axis=0, primary=None):
     for nb in sizes:
         bases.append(run)
         run += nb
+    total = run
     op, s, d = cmds[:, 0], cmds[:, 1], cmds[:, 2]
     is_cross = op == OP_CROSS_POOL_COPY
+    is_bitwise = (op == OP_AND) | (op == OP_OR) | (op == OP_NOT)
 
     def pool_of(ids):
         """Per-row (base, in_pool[p]) decode of global cross-pool ids."""
@@ -93,10 +104,19 @@ def fused_dispatch(pools, zero_blocks, cmds, block_axis=0, primary=None):
             base = jnp.where(m, bases[p], base)
         return base, inp
 
+    # two-source decode: a/b are plain global ids once unpacked (clamped to
+    # zero on non-bitwise rows so the masks below stay well-formed)
+    a_g = jnp.where(is_bitwise, s // total, 0)
+    b_g = jnp.where(is_bitwise, s % total, 0)
     s_base, s_in = pool_of(s)
     d_base, d_in = pool_of(d)
+    a_base, a_in = pool_of(a_g)
+    b_base, b_in = pool_of(b_g)
+    glb_dst = is_cross | is_bitwise          # rows whose dst is a global id
     s_loc = jnp.where(is_cross, s - s_base, s)
-    d_loc = jnp.where(is_cross, d - d_base, d)
+    d_loc = jnp.where(glb_dst, d - d_base, d)
+    a_loc = a_g - a_base
+    b_loc = b_g - b_base
 
     def gather(arr, idx):
         cl = jnp.clip(idx, 0, arr.shape[ba] - 1)
@@ -106,6 +126,18 @@ def fused_dispatch(pools, zero_blocks, cmds, block_axis=0, primary=None):
         shape = [1] * rows.ndim
         shape[ba] = cond.shape[0]
         return cond.reshape(shape)
+
+    def gather_global(loc, in_masks, pd):
+        """Gather per-row blocks addressed by a global id decoded to
+        ``(loc, in_masks)`` — start from the dst pool, override from every
+        other pool the id actually names (the cross-pool select idiom)."""
+        rows = gather(pools[pd], loc)
+        for ps in range(n):
+            if ps == pd:
+                continue
+            rows = jnp.where(expand(in_masks[ps], rows),
+                             gather(pools[ps], loc).astype(rows.dtype), rows)
+        return rows
 
     out = []
     for pd in range(n):
@@ -125,10 +157,17 @@ def fused_dispatch(pools, zero_blocks, cmds, block_axis=0, primary=None):
                 zb.reshape((1, 1) + zb.shape[1:]),
                 (pool.shape[0], cmds.shape[0]) + pool.shape[2:])
         rows = jnp.where(expand(op == OP_ZERO_INIT, rows), zrows, rows)
+        # bitwise compute rows: combine both sources bit-for-bit
+        au = _bitcast_uint(gather_global(a_loc, a_in, pd))
+        bu = _bitcast_uint(gather_global(b_loc, b_in, pd))
+        ru = jnp.where(expand(op == OP_AND, au), au & bu,
+                       jnp.where(expand(op == OP_OR, au), au | bu, ~au))
+        brows = jax.lax.bitcast_convert_type(ru, pool.dtype)
+        rows = jnp.where(expand(is_bitwise, rows), brows, rows)
         if primary[pd]:
-            valid = (op >= 0) & (d >= 0) & (~is_cross | d_in[pd])
-        else:   # staging pool: only cross-pool rows addressed to it land
-            valid = is_cross & (d >= 0) & d_in[pd]
+            valid = (op >= 0) & (d >= 0) & (~glb_dst | d_in[pd])
+        else:   # staging pool: only global-id rows addressed to it land
+            valid = glb_dst & (d >= 0) & d_in[pd]
         safe = jnp.where(valid, d_loc, sizes[pd])
         out.append(pool.at[safe].set(rows, mode="drop") if ba == 0
                    else pool.at[:, safe].set(rows, mode="drop"))

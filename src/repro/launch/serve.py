@@ -11,6 +11,15 @@ The serving loop is the paper's application showcase:
 * ``fork`` — parallel sampling / beam search shares every prompt page by
   refcount (zero bytes), CoW-splitting lazily on the first divergent append;
 * fresh pages are BuZ-lazy-zeroed (ZI metadata bit);
+* ``dedup_admit=True`` — **dedup-on-admit**: every staged prompt page is
+  fingerprinted with an XOR fold (:func:`page_fingerprint` — XOR composed
+  from the engine's new in-memory bitwise opcode identities, ``x ^ y ==
+  (x | y) & ~(x & y)``), and pages whose chained fingerprint matches a
+  live registry entry collapse onto the donor's block: the dupe's
+  promotion rows are skipped, its staging slots return to the ring, and
+  the shared block rides the round's single fused launch exactly like a
+  CoW fork share.  The first divergent append CoW-splits, and greedy
+  tokens stay bitwise-identical to a dedup-off run;
 * each decode round drains the engine's **serve CommandStream** ONCE —
   promotions + CoW splits + tail inits are captured onto the stream
   (``stream.capture()``) and ride one fused launch at ``stream.flush()``,
@@ -80,11 +89,48 @@ class DemotedSeq:
     extras: Optional[dict]       #: non-dense host state, if any
 
 
+#: 64-bit fold constants (splitmix64 / FNV mixes) for the page fingerprint
+_FP_MASK = (1 << 64) - 1
+_FP_WORD = 0x9E3779B97F4A7C15
+_FP_POS = 0xC2B2AE3D27D4EB4F
+_FP_CHAIN = 0x100000001B3
+
+
+def xor_fold(acc: int, word: int) -> int:
+    """One XOR-fold step over 64-bit words, composed EXACTLY from the
+    engine's in-memory bitwise opcode identities: ``x ^ y == (x | y) &
+    ~(x & y)`` — an ``OP_OR``, an ``OP_AND``, an ``OP_NOT``, and a final
+    ``OP_AND``.  The host-side software analogue of folding a block
+    fingerprint in DRAM with the Ambit triple-row ops the fused dispatch
+    now executes (``memand``/``memor``/``memnot``)."""
+    both = acc & word           # OP_AND
+    either = acc | word         # OP_OR
+    return (either & (~both & _FP_MASK)) & _FP_MASK   # OP_AND of OP_NOT
+
+
+def page_fingerprint(chain: int, tokens) -> int:
+    """Chained fingerprint of one prompt page: position-salted token
+    words folded with :func:`xor_fold`, mixed into the previous page's
+    fingerprint (``chain``) so equal keys mean equal page *prefixes*, not
+    just equal pages.  Dedup-on-admit keys its prefix registry with
+    these (and verifies the raw tokens on every hit, so a fold collision
+    can never corrupt a sequence)."""
+    fp = chain & _FP_MASK
+    for i, t in enumerate(tokens):
+        word = ((int(t) + 1) * _FP_WORD + (i + 1) * _FP_POS) & _FP_MASK
+        fp = xor_fold((fp * _FP_CHAIN) & _FP_MASK, word)
+    # fold the page's token count so a short tail page can never alias a
+    # full page that starts with the same tokens
+    return xor_fold(fp, (len(tokens) * _FP_POS) & _FP_MASK)
+
+
 class ServingEngine:
     """Continuous-batching serving facade over RowCloneEngine +
     PagedCoWCache: admission (prefill + staged promotion), CoW fork,
-    preemption by demotion (:meth:`demote`/:meth:`resume`), and greedy
-    decode rounds whose bulk movement drains as one fused launch."""
+    preemption by demotion (:meth:`demote`/:meth:`resume`), dedup-on-admit
+    (``dedup_admit=True`` — identical prompt prefixes across tenants
+    collapse onto shared CoW blocks at admission), and greedy decode
+    rounds whose bulk movement drains as one fused launch."""
 
     #: ``max_admit_pages`` sentinel: keep full-size staging twins (every
     #: KV block has a staging slot) instead of a recycled ring
@@ -100,7 +146,7 @@ class ServingEngine:
                  fault_plan=None, auto_recover: bool = False,
                  ckpt_pages: int = 0, ckpt_dir: Optional[str] = None,
                  ckpt_window: Optional[int] = None,
-                 spill_pages: int = 0):
+                 spill_pages: int = 0, dedup_admit: bool = False):
         """``max_admit_pages`` sizes the staging pools as a RING of that
         many slots instead of a full-size twin of the KV pools — slots
         recycle at every round's flush, so the ring only needs to hold
@@ -133,6 +179,19 @@ class ServingEngine:
         ckpt tick) and runs :meth:`recover` in place — the next round
         serves normally.  Admissions evicted by a recovery land in
         ``evicted_sids`` for the caller to re-admit.
+
+        Dedup-on-admit: ``dedup_admit=True`` (fused staging only) keeps a
+        prefix registry of chained page fingerprints
+        (:func:`page_fingerprint`).  An admission whose prompt pages
+        match live registry entries shares the donor blocks by refcount
+        instead of promoting its own staged copies — the matched
+        promotion rows never enqueue, the staging slots return to the
+        ring immediately, and resident KV bytes (:meth:`kv_bytes_live`)
+        grow by only the unmatched pages.  Registered pages pin one
+        registry refcount so their bytes can never be recycled under a
+        live entry; :meth:`free` of the registering sequence drops its
+        entries.  Under sharded batches a donor block is only shared
+        into a sequence pinned to the same batch group.
 
         Preemption: ``spill_pages > 0`` reserves that many EXTRA spill
         slots for :meth:`demote` / :meth:`resume` — the scheduler's
@@ -261,6 +320,17 @@ class ServingEngine:
         #: (an extra launch), breaking the 1.0 launches/round contract
         self._free_after_flush: List[int] = []
         self._admission_ordinal = 0
+        #: dedup-on-admit prefix registry: chained page fingerprint ->
+        #: (donor block id, raw page tokens) — the token tuple is checked
+        #: on every hit, so fingerprint collisions degrade to a miss
+        self.dedup_admit = bool(dedup_admit) and fused_staging
+        self._dedup_registry: Dict[int, Tuple[int, Tuple[int, ...]]] = {}
+        #: registry keys registered per sid (free() drops them and
+        #: releases the registry's own block refcount)
+        self._dedup_keys: Dict[int, List[int]] = {}
+        self.dedup_hits = 0           #: admissions that shared >= 1 page
+        self.dedup_pages_shared = 0   #: prompt pages satisfied by sharing
+        self.dedup_bytes_saved = 0    #: KV bytes those pages never took
         self.last_recovery: Optional[RecoveryReport] = None
         self.pool_ckpt: Optional[PoolCheckpoint] = None
         if self.ckpt_pages:
@@ -364,7 +434,10 @@ class ServingEngine:
             # the promotion rides the round's serve stream (drained by
             # decode_round's stream.flush — one launch for the round)
             pairs = list(zip(stage_ids, blocks))
-            stream.promote_staged(pairs)
+            if self.dedup_admit:
+                pairs = self._dedup_pages(sid, prompt, stage_ids, blocks)
+            if pairs:
+                stream.promote_staged(pairs)
             self._staged_sids.append(sid)
             self._pending_promotions[sid] = pairs
             st = extras
@@ -386,6 +459,62 @@ class ServingEngine:
         # extra per-seq state (ssm/hybrid/encdec) kept host-side per slot
         self._store_extra_state(sid, st)
         return sid
+
+    def _dedup_pages(self, sid: int, prompt: np.ndarray,
+                     stage_ids: List[int],
+                     blocks: List[int]) -> List[Tuple[int, int]]:
+        """Collapse this admission's prompt pages onto registered donor
+        blocks where the chained fingerprints (and raw tokens) match.
+        Returns the surviving (stage slot, block) promotion pairs; matched
+        pages share the donor by refcount, their staging slots return to
+        the ring, and unmatched pages register as future donors (the
+        registry holds its own refcount on each donor block, so a donor's
+        bytes outlive CoW splits and frees of any individual sharer)."""
+        seq = self.cache.seqs[sid]
+        page = self.cache.page
+        new_blocks = list(blocks)
+        keep: List[Tuple[int, int]] = []
+        released: List[int] = []
+        registered: List[int] = []
+        chain = 0
+        for j, b in enumerate(blocks):
+            toks = tuple(int(t) for t in prompt[j * page:(j + 1) * page])
+            chain = page_fingerprint(chain, toks)
+            hit = self._dedup_registry.get(chain)
+            if hit is not None and hit[1] == toks and (
+                    self.cache.batch_groups == 1
+                    or self.cache.group_of_block(hit[0]) == seq.group):
+                donor = hit[0]
+                self.engine.alloc.share([donor])
+                new_blocks[j] = donor
+                released.append(stage_ids[j])
+                self.dedup_pages_shared += 1
+                self.dedup_bytes_saved += self.engine._block_bytes()
+            else:
+                keep.append((stage_ids[j], b))
+                if hit is None:
+                    # register as a donor: the registry's own refcount
+                    # pins the block (and its promoted bytes) while the
+                    # entry lives
+                    self.engine.alloc.share([b])
+                    self._dedup_registry[chain] = (b, toks)
+                    registered.append(chain)
+        if registered:
+            self._dedup_keys[sid] = registered
+        if released:
+            self.dedup_hits += 1
+            self.engine.release_stage_blocks(released)
+            self.cache.remap_blocks(sid, new_blocks)
+        return keep
+
+    def kv_bytes_live(self) -> int:
+        """Primary-pool KV bytes backed by currently-allocated blocks —
+        the dedup-on-admit headline: admissions whose prompt pages
+        collapse onto shared donor blocks grow this by less than their
+        page count (``BENCH_dispatch.json`` v8 ``dedup_admit`` leg)."""
+        alloc = self.engine.alloc
+        used = alloc.num_blocks - alloc.total_free()
+        return used * self.engine._block_bytes()
 
     def _store_extra_state(self, sid, st):
         extras = {}
@@ -425,6 +554,12 @@ class ServingEngine:
           "evict" a sequence that no longer exists;
         * the ``_extras`` entry (conv/ssm/cross-attention host state) is
           dropped — previously it accumulated forever under churn;
+        * dedup-on-admit registry entries this sid registered are
+          invalidated (their registry refcount released) so no future
+          admission can match a donor whose bytes may recycle — and a
+          queued promotion into a block a LIVE dupe still shares is kept
+          queued rather than retired: the dupe's page depends on exactly
+          that write landing;
         * a DEMOTED sid releases its spill parking slots instead (no
           cache sequence exists for it)."""
         parked = self.demoted.pop(sid, None)
@@ -432,9 +567,20 @@ class ServingEngine:
             self.engine.release_spill_slots(parked.slots)
             self._extras.pop(sid, None)
             return
+        for key in self._dedup_keys.pop(sid, []):
+            blk, _ = self._dedup_registry.pop(key)
+            self.engine.alloc.free([blk])
         pending = self._pending_promotions.pop(sid, None)
         if pending:
-            self.engine.retire_promotions(pending)
+            if self.dedup_admit:
+                # with the registry's refs gone, refcount > 1 on a dst
+                # means a live dupe shares it — its staged write must
+                # still land (the block cannot recycle while the dupe
+                # holds it)
+                pending = [(s, d) for s, d in pending
+                           if not self.engine.alloc.is_shared(d)]
+            if pending:
+                self.engine.retire_promotions(pending)
         if sid in self._staged_sids:
             self._staged_sids.remove(sid)
         self.cache.free_sequence(sid)

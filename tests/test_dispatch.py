@@ -18,11 +18,12 @@ from repro.core import (BUCKETS, BlockRef, PagedCoWCache, RowCloneEngine,
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from repro.kernels import fused_dispatch as fd
-from repro.kernels.fused_dispatch import (OP_BASELINE_COPY,
+from repro.kernels.fused_dispatch import (OP_AND, OP_BASELINE_COPY,
                                           OP_CROSS_POOL_COPY, OP_FPM_COPY,
-                                          OP_NOP, OP_PSM_COPY, OP_ZERO_INIT,
-                                          add_launch_hook,
+                                          OP_NOP, OP_NOT, OP_OR, OP_PSM_COPY,
+                                          OP_ZERO_INIT, add_launch_hook,
                                           fused_dispatch_pallas,
+                                          pack_bitwise_src,
                                           remove_launch_hook)
 
 
@@ -135,6 +136,45 @@ def test_fused_kernel_cross_pool(block_axis):
     else:
         np.testing.assert_array_equal(np.asarray(out[0])[:, 9],
                                       np.asarray(v)[:, 2])
+
+
+@pytest.mark.parametrize("block_axis", [0, 1])
+def test_fused_kernel_bitwise(block_axis):
+    """OP_AND/OP_OR/OP_NOT rows in one table: srcB rides packed in the
+    src field (``src = a_gid * total + b_gid`` over the stacked global-id
+    space) and results match a numpy uint32 oracle to the exact bit, on
+    both the interpret-mode kernel body and the jnp reference."""
+    nblk = 16
+    total = 2 * nblk
+    pools, zbs = _mk_pools(nblk, block_axis, seed=11)
+    pk = lambda a, b: pack_bitwise_src(a, b, total)
+    rows = [
+        [OP_AND, pk(0 * nblk + 1, 1 * nblk + 2), 0 * nblk + 9],
+        [OP_OR, pk(1 * nblk + 3, 0 * nblk + 4), 1 * nblk + 10],
+        [OP_NOT, pk(0 * nblk + 5, 0 * nblk + 5), 1 * nblk + 11],
+        [OP_NOT, pk(1 * nblk + 6, 1 * nblk + 6), 0 * nblk + 12],
+    ]
+    table = np.full((8, 3), OP_NOP, np.int32)
+    table[:len(rows)] = rows
+    cmds = jnp.asarray(table)
+    out_k = fused_dispatch_pallas([p.copy() for p in pools], zbs, cmds,
+                                  block_axis=block_axis, interpret=True)
+    out_r = kref.fused_dispatch(pools, zbs, cmds, block_axis=block_axis)
+    k, v = (np.asarray(p) for p in pools)
+    sel = (lambda arr, b: arr[b]) if block_axis == 0 \
+        else (lambda arr, b: arr[:, b])
+    u = lambda x: np.ascontiguousarray(x).view(np.uint32)
+    want = {
+        ("k", 9): u(sel(k, 1)) & u(sel(v, 2)),
+        ("v", 10): u(sel(v, 3)) | u(sel(k, 4)),
+        ("v", 11): ~u(sel(k, 5)),
+        ("k", 12): ~u(sel(v, 6)),
+    }
+    for out in (out_k, out_r):
+        got = {"k": np.asarray(out[0]), "v": np.asarray(out[1])}
+        for (pool, b), bits in want.items():
+            np.testing.assert_array_equal(u(sel(got[pool], b)), bits,
+                                          err_msg=f"{pool}[{b}]")
 
 
 # ---------------------------------------------------------------------------
@@ -286,6 +326,83 @@ def test_engine_cross_pool_copy_matches_seed_cross():
     np.testing.assert_array_equal(np.asarray(eng.pools["v"]),
                                   np.asarray(ref))
     assert eng.stats.cross_pool_copies == 2
+
+
+def _ubits(x):
+    """Uint32 bit view for exact-bit comparison of bitwise results."""
+    return np.ascontiguousarray(np.asarray(x)).view(np.uint32)
+
+
+def test_engine_bitwise_matches_seed_fanout_one_launch():
+    """A mixed AND/OR/NOT + copy batch: the fused engine drains it as ONE
+    launch, the seed fan-out takes several, and the two leave
+    bit-identical pools — stats agree on both paths."""
+    fused = _mk_engine(seed=21, use_fused=True)
+    legacy = _mk_engine(seed=21, use_fused=False)
+    recs = {}
+    for eng in (fused, legacy):
+        eng.alloc.mark_written([1, 2, 3, 8])
+        with LaunchRecorder() as rec, eng.batch():
+            eng.memcopy([(8, 40)])
+            eng.memand([(1, 2, 30)])                 # int fan-out: k AND v
+            eng.memor([(BlockRef("k", 2), BlockRef("v", 3),
+                        BlockRef("v", 31))])         # cross-pool BlockRefs
+            eng.memnot([(3, 32)])
+        recs[eng.use_fused] = rec.events
+        # int fan-out enqueues one row per primary pool: 2 + 1 + 2
+        assert eng.stats.bitwise_ops == 5
+        assert eng.stats.bytes_bitwise > 0
+    assert [e[2] for e in recs[True]] == ["fused"]
+    assert len(recs[False]) > 1                      # the fan-out removed
+    assert fused.stats.bytes_bitwise == legacy.stats.bytes_bitwise
+    np.testing.assert_array_equal(
+        _ubits(fused.pools["k"][30]),
+        _ubits(fused.pools["k"][1]) & _ubits(fused.pools["k"][2]))
+    np.testing.assert_array_equal(
+        _ubits(fused.pools["v"][31]),
+        _ubits(fused.pools["k"][2]) | _ubits(fused.pools["v"][3]))
+    np.testing.assert_array_equal(_ubits(fused.pools["v"][32]),
+                                  ~_ubits(fused.pools["v"][3]))
+    for name in fused.pools:
+        np.testing.assert_array_equal(_ubits(fused.pools[name]),
+                                      _ubits(legacy.pools[name]),
+                                      err_msg=name)
+
+
+@pytest.mark.parametrize("use_fused", [True, False])
+def test_engine_bitwise_in_place_dst_is_source(use_fused):
+    """dst == srcA and dst == srcB within one row are legal in-place
+    updates: sources are gathered before the scatter lands on every
+    dispatch path."""
+    eng = _mk_engine(seed=23, use_fused=use_fused)
+    eng.alloc.mark_written([4, 5, 6])
+    old4 = _ubits(eng.pools["k"][4]).copy()
+    old5 = _ubits(eng.pools["k"][5]).copy()
+    old6 = _ubits(eng.pools["k"][6]).copy()
+    with eng.batch():
+        eng.memand([(4, 5, 4)])          # dst == srcA
+    with eng.batch():
+        eng.memor([(6, 5, 5)])           # dst == srcB
+    with eng.batch():
+        eng.memnot([(6, 6)])             # dst == the single source
+    np.testing.assert_array_equal(_ubits(eng.pools["k"][4]), old4 & old5)
+    np.testing.assert_array_equal(_ubits(eng.pools["k"][5]), old6 | old5)
+    np.testing.assert_array_equal(_ubits(eng.pools["k"][6]), ~old6)
+
+
+def test_membitwise_rejects_unpackable_pool_group():
+    """srcB packing must stay within int32 (``a_gid * total + b_gid``):
+    an engine whose PoolGroup exceeds the 46340-block bound still
+    constructs and copies fine, but bitwise verbs raise a descriptive
+    ValueError instead of silently wrapping the packed id."""
+    nblk = 46341                          # total 46341 -> 46341^2 > int32
+    alloc = SubarrayAllocator(nblk, 1)
+    pools = {"k": jnp.zeros((nblk, 1, 2), jnp.float32)}
+    eng = RowCloneEngine(pools, alloc, max_requests=8)
+    eng.alloc.mark_written([1, 2])
+    eng.memcopy([(1, 3)])                 # plain opcodes stay legal
+    with pytest.raises(ValueError, match="46340"):
+        eng.memand([(1, 2, 4)])
 
 
 # ---------------------------------------------------------------------------

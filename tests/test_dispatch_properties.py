@@ -3,12 +3,19 @@ bitwise-identical pools across {seed fan-out, single-slab fused, mesh fused}
 with consistent launch accounting.
 
 Streams mix every opcode (FPM/PSM/baseline-adjacent copies, zero-init —
-materialized and lazy — and cross-pool copies), include duplicate
-destinations (exercising the hazard auto-flush), **adjacent WAR-on-source
-patterns** (copy out of a block, then rewrite it in the same stream — the
-pattern the overlapped DMA drain's spacer rows must keep safe), src==dst
-no-ops, lazy-zero sources (the ZI alias fast path), overflow past the top
-512 bucket, and both ``block_axis`` layouts.  Engines carry staging pools (k_stage/v_stage) of
+materialized and lazy — cross-pool copies, and the TWO-SOURCE bitwise
+compute rows ``memand``/``memor``/``memnot`` — int fan-out and
+cross-pool BlockRef triples, srcB packed into the src field), include
+duplicate destinations (exercising the hazard auto-flush — a dup dst
+against EITHER source of a bitwise row counts), **adjacent
+WAR-on-source patterns** (copy out of a block, then rewrite it in the
+same stream — the pattern the overlapped DMA drain's spacer rows must
+keep safe; bitwise rows contribute two read sets), src==dst no-ops and
+in-place bitwise rows (dst == srcA or srcB), lazy-zero sources (the ZI
+alias fast path), overflow past the top 512 bucket, and both
+``block_axis`` layouts.  Pool parity is asserted on UINT BIT VIEWS —
+AND/OR/NOT over float pools manufacture arbitrary bit patterns
+(including NaNs, which float equality would conflate).  Engines carry staging pools (k_stage/v_stage) of
 INDEPENDENT size — full twins and staging rings smaller than the KV pools
 (the PoolGroup prefix-sum address space) — so streams also drive
 heterogeneous staging↔KV cross-pool traffic: promotions, demotions,
@@ -38,7 +45,11 @@ from repro.kernels import fused_dispatch as fd
 # replay — programs are plain JSON)
 # ---------------------------------------------------------------------------
 
-KINDS = ("copy", "copy", "zero", "lazy", "cross", "cross", "war")
+KINDS = ("copy", "copy", "zero", "lazy", "cross", "cross", "war",
+         "bit", "bit")
+
+#: all four pools a BlockRef bitwise row may draw sources/dst from
+BIT_POOLS = ("k", "v", "k_stage", "v_stage")
 
 #: cross-pool pool pairs: primary↔primary plus every staging flavour —
 #: promotion (stage→primary), demotion (primary→stage), stage→stage
@@ -84,6 +95,26 @@ def gen_program(rng: random.Random, nblk: int, n_instr: int,
                 prog.append(["war", [[a, b], [c, a]], None])
             else:
                 prog.append(["war", [[a, b]], a])
+        elif kind == "bit":
+            # two-source compute rows: AND/OR (triples) or NOT (pairs),
+            # either as primary-id fan-out or as cross-pool BlockRefs
+            # over all four pools.  Dup dsts (vs either source) and
+            # in-place rows (dst == srcA or srcB) arise by construction.
+            op = rng.choice(["and", "or", "not"])
+            n = rng.randint(1, 4)
+            if rng.random() < 0.5:
+                width = 2 if op == "not" else 3
+                rows = [[rng.randrange(nblk) for _ in range(width)]
+                        for _ in range(n)]
+                prog.append(["bit", op, rows, "int"])
+            else:
+                rows = []
+                for _ in range(n):
+                    refs = [[p, rng.randrange(sizes[p])]
+                            for p in (rng.choice(BIT_POOLS) for _ in
+                                      range(2 if op == "not" else 3))]
+                    rows.append(refs)
+                prog.append(["bit", op, rows, "ref"])
         else:
             n = rng.randint(1, 4)
             sp, dp = rng.choice(CROSS_POOL_PAIRS)
@@ -113,6 +144,14 @@ def run_program(eng: RowCloneEngine, prog):
                     eng.memcopy([tuple(p) for p in instr[1]])
                     if instr[2] is not None:
                         eng.materialize_zeros([instr[2]])
+                elif instr[0] == "bit":
+                    op, rows, mode = instr[1], instr[2], instr[3]
+                    if mode == "int":
+                        args = [tuple(r) for r in rows]
+                    else:
+                        args = [tuple(BlockRef(p, i) for p, i in r)
+                                for r in rows]
+                    getattr(eng, "mem" + op)(args)
                 else:
                     sp, dp = instr[2], instr[3]
                     eng.memcopy_cross([(BlockRef(sp, s), BlockRef(dp, d))
@@ -142,9 +181,13 @@ def mk_engine(nblk, block_axis, use_fused, mesh=None, nslabs=4, seed=0,
 
 
 def assert_pools_equal(a: RowCloneEngine, b: RowCloneEngine, ctx=""):
+    """Bitwise pool parity through uint8 views: bitwise opcodes on float
+    pools produce arbitrary bit patterns (incl. NaNs), and float equality
+    would conflate distinct NaN encodings."""
     for name in a.pools:
-        np.testing.assert_array_equal(np.asarray(a.pools[name]),
-                                      np.asarray(b.pools[name]),
+        av = np.ascontiguousarray(np.asarray(a.pools[name]))
+        bv = np.ascontiguousarray(np.asarray(b.pools[name]))
+        np.testing.assert_array_equal(av.view(np.uint8), bv.view(np.uint8),
                                       err_msg=f"pool {name} {ctx}")
 
 
@@ -234,8 +277,10 @@ def test_property_crash_replay_bitwise(seed, block_axis, n_instr):
     assert rep.pools_lost == ()
     assert rep.replayed_flushes == replayable
     for name in eng.pools:
+        # uint view: replayed compute rows must match to the exact bit
         np.testing.assert_array_equal(
-            np.asarray(eng.pools[name]), want[name],
+            np.ascontiguousarray(np.asarray(eng.pools[name])).view(np.uint8),
+            np.ascontiguousarray(want[name]).view(np.uint8),
             err_msg=f"pool {name} after replay (seed={seed} cut={cut})")
 
 
@@ -370,7 +415,8 @@ for i in range(3):
     rep = eng.recover(snapshot=snap)
     for name in eng.pools:
         np.testing.assert_array_equal(
-            np.asarray(eng.pools[name]), want[name],
+            np.ascontiguousarray(np.asarray(eng.pools[name])).view(np.uint8),
+            np.ascontiguousarray(want[name]).view(np.uint8),
             err_msg=f"pool {name} case={i} ba={ba} cut={cut}")
     results.append({"replayed": rep.replayed_flushes,
                     "restored": len(rep.pools_restored)})

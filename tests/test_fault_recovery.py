@@ -68,9 +68,14 @@ def pools_of(eng):
 
 
 def assert_pools_equal(a, b):
+    """Bitwise comparison via uint views: compute rows (AND/OR/NOT)
+    manufacture arbitrary float bit patterns that float equality would
+    conflate (distinct NaN encodings compare equal)."""
     assert sorted(a) == sorted(b)
     for name in a:
-        np.testing.assert_array_equal(a[name], b[name], err_msg=name)
+        np.testing.assert_array_equal(
+            np.ascontiguousarray(a[name]).view(np.uint8),
+            np.ascontiguousarray(b[name]).view(np.uint8), err_msg=name)
 
 
 # ---------------------------------------------------------------------------
@@ -160,6 +165,79 @@ def test_midflush_abort_journals_prefix_and_redrains():
     assert set(rep2.pools_restored) == set(init) and not rep2.pools_lost
     assert rep2.replayed_flushes == len(eng.journal.records) == 2
     assert_pools_equal(pools_of(eng), want)
+
+
+def test_midflush_abort_with_compute_rows_replays_bitwise():
+    """Crash mid-flush on a table carrying two-source compute rows
+    (AND/OR/NOT mixed with copies): the journaled prefix + recovered
+    suffix re-drain, then snapshot+replay, both land bit-identical pools
+    — journal records hold the packed srcB rows verbatim, so replay
+    rebuilds the exact two-source tables."""
+    nblk = 2048
+    copies = [(i, 1000 + i) for i in range(200)]
+    ands = [(200 + i, 400 + i, 1200 + i) for i in range(200)]
+    nots = [(600 + i, 1400 + i) for i in range(100)]
+
+    def drive(eng):
+        eng.alloc.mark_written([s for s, _ in copies] +
+                               [a for a, _, _ in ands] +
+                               [b for _, b, _ in ands] +
+                               [s for s, _ in nots])
+        with eng.batch():
+            eng.memcopy(copies)
+            eng.memand(ands)      # fans out per primary pool: 400 rows
+            eng.memnot(nots)      # 200 rows -> 800 total, two chunks
+
+    clean = mk_engine(nblk=nblk)
+    eng = mk_engine(nblk=nblk)
+    init = pools_of(eng)
+    plan = FaultPlan(midflush_aborts=(eng.next_flush_index,))
+    with plan.active(eng):
+        with pytest.raises(InjectedFault):
+            drive(eng)
+    # the 512-row dispatched prefix is journaled (aborted record), the
+    # undispatched suffix — all compute rows — is stashed for recover()
+    assert eng.journal.records[-1].aborted
+    assert len(eng.journal.records[-1].rows) == 512
+    assert len(eng._aborted[0].suffix) == 800 - 512
+    rep = eng.recover()
+    assert rep.redrained_flushes == 1
+    drive(clean)
+    assert_pools_equal(pools_of(eng), pools_of(clean))
+    # crash again AFTER recovery: snapshot+journal replay across the
+    # aborted-prefix record and the re-drain record stays bitwise exact
+    want = pools_of(eng)
+    for p in eng.pools.values():
+        p.delete()
+    rep2 = eng.recover(snapshot=PoolSnapshot(index=-1, arrays=init))
+    assert set(rep2.pools_restored) == set(init) and not rep2.pools_lost
+    assert rep2.replayed_flushes == len(eng.journal.records) == 2
+    assert_pools_equal(pools_of(eng), want)
+
+
+def test_launch_failure_on_bitwise_flush_recovers_bitwise():
+    """A launch failure aborting a flush of ONLY compute rows: recover()
+    re-drains the stashed rows and the pools match a failure-free twin
+    to the exact bit."""
+    clean = mk_engine()
+    eng = mk_engine()
+    for e in (clean, eng):
+        e.alloc.mark_written([1, 2, 3])
+    plan = FaultPlan(launch_failures=(eng.next_flush_index,))
+    with plan.active(eng):
+        with pytest.raises(InjectedFault):
+            with eng.batch():
+                eng.memand([(1, 2, 8)])
+                eng.memor([(2, 3, 9)])
+                eng.memnot([(3, 10)])
+    assert plan.fired == [("launch_failure", 0)]
+    rep = eng.recover()
+    assert rep.redrained_flushes == 1
+    with clean.batch():
+        clean.memand([(1, 2, 8)])
+        clean.memor([(2, 3, 9)])
+        clean.memnot([(3, 10)])
+    assert_pools_equal(pools_of(eng), pools_of(clean))
 
 
 def test_redrain_retries_with_backoff_then_succeeds():

@@ -15,7 +15,12 @@ fused staging path is byte-for-byte identical to the seed's ad-hoc
   bulk-movement launch per fused round (launch-count hook);
 * mesh (subprocess, 8 host devices): the sharded-batch serving tables —
   ``batch_groups=2`` local share-mask columns — decode the same greedy
-  tokens as the single-device engine.
+  tokens as the single-device engine;
+* dedup-on-admit: fingerprint-matched prompt pages collapse onto shared
+  CoW blocks at admission (identical prompts across tenants), shrinking
+  resident KV while greedy tokens stay bitwise-equal to a dedup-off twin
+  at <= 1 launch/round — first divergent append CoW-splits the shared
+  tail (CPU and mesh legs).
 """
 import random
 
@@ -486,6 +491,101 @@ def test_ring_exhaustion_flushes_and_recycles(served):
 # mesh leg: sharded-batch serving tables (local share-mask columns)
 # ---------------------------------------------------------------------------
 
+# ---------------------------------------------------------------------------
+# dedup-on-admit: fingerprint-matched prompt pages share CoW blocks
+# ---------------------------------------------------------------------------
+
+def test_dedup_identical_prompts_share_blocks_bitwise_tokens(served):
+    """Two tenants admitting the SAME prompt: the dupe's pages (full AND
+    the partial tail) collapse onto the donor's blocks, resident KV
+    shrinks, every round stays one fused launch, greedy tokens are
+    bitwise-equal to a dedup-off twin, and the first append CoW-splits
+    the shared tail while the full prompt pages stay shared."""
+    from repro.launch.serve import ServingEngine
+    cfg, params = served
+    on = ServingEngine(cfg, params, max_seqs=8, dedup_admit=True)
+    off = ServingEngine(cfg, params, max_seqs=8)
+    page = on.cache.page
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(2, cfg.vocab_size,
+                          size=2 * page + page // 2).astype(np.int32)
+    a = on.add_request(prompt.copy())
+    b = on.add_request(prompt.copy())
+    # the dupe runs on the donor's blocks — all three pages, tail included
+    assert on.cache.blocks_of(a) == on.cache.blocks_of(b)
+    assert on.dedup_hits == 1 and on.dedup_pages_shared == 3
+    assert all(on.engine.alloc.is_shared(blk)
+               for blk in on.cache.blocks_of(a))
+    for p in (prompt.copy(), prompt.copy()):
+        off.add_request(p)
+    assert on.kv_bytes_live() < off.kv_bytes_live()
+    rounds = []
+    for _ in range(3):
+        with fd_hook() as ev:
+            on.decode_round()
+        rounds.append([m for _, _, m in ev])
+        assert on.last_ticket.launches <= 1   # the decode ticket itself
+        off.decode_round()
+    assert on.tokens == off.tokens       # bitwise-equal greedy tokens
+    for rnd, mechs in enumerate(rounds):
+        assert all(m == "fused" for m in mechs), (rnd, mechs)
+        # round 0 carries one extra flush: the shared tail's CoW split
+        assert len(mechs) <= (2 if rnd == 0 else 1), (rnd, mechs)
+    # first divergent append split the shared tail; full pages still shared
+    ba, bb = on.cache.blocks_of(a), on.cache.blocks_of(b)
+    assert ba[:2] == bb[:2]
+    assert ba[2] != bb[2]
+    assert all(on.engine.alloc.is_shared(blk) for blk in ba[:2])
+
+
+def test_dedup_shares_only_common_prefix_pages(served):
+    """Prompts that agree on the first pages but diverge later share
+    exactly the common-prefix pages — the chained fingerprint makes a
+    same-content page at a different history a MISS, never a false
+    share."""
+    from repro.launch.serve import ServingEngine
+    cfg, params = served
+    on = ServingEngine(cfg, params, max_seqs=8, dedup_admit=True)
+    page = on.cache.page
+    rng = np.random.default_rng(9)
+    p1 = rng.integers(2, cfg.vocab_size, size=3 * page).astype(np.int32)
+    p2 = p1.copy()
+    p2[-1] = 2 + (int(p2[-1]) - 1) % (cfg.vocab_size - 2)  # last tok differs
+    a = on.add_request(p1)
+    b = on.add_request(p2)
+    ba, bb = on.cache.blocks_of(a), on.cache.blocks_of(b)
+    assert ba[:2] == bb[:2]              # common prefix shared
+    assert ba[2] != bb[2]                # divergent page NOT shared
+    assert on.dedup_pages_shared == 2
+    # same bytes, different position/history: page 0's content re-admitted
+    # as page 1 of a third prompt must not match (chained fp)
+    p3 = np.concatenate([p1[:page], p1[:page], p1[:page]])
+    c = on.add_request(p3)
+    bc = on.cache.blocks_of(c)
+    assert bc[0] == ba[0]                # page 0 matches the donor
+    assert bc[1] not in ba               # page 1 is a fresh block
+    assert on.dedup_pages_shared == 3
+
+
+def test_dedup_registry_drops_with_registering_sequence(served):
+    """Registry entries die with the sequence that registered them: after
+    the donor frees, a re-admission gets FRESH blocks (no stale donor),
+    then becomes the new donor for later dupes."""
+    from repro.launch.serve import ServingEngine
+    cfg, params = served
+    on = ServingEngine(cfg, params, max_seqs=8, dedup_admit=True)
+    page = on.cache.page
+    rng = np.random.default_rng(13)
+    prompt = rng.integers(2, cfg.vocab_size, size=2 * page).astype(np.int32)
+    a = on.add_request(prompt.copy())
+    on.free(a)
+    b = on.add_request(prompt.copy())    # registry emptied: a clean miss
+    assert on.dedup_hits == 0
+    c = on.add_request(prompt.copy())    # b is the new donor
+    assert on.dedup_hits == 1
+    assert on.cache.blocks_of(b) == on.cache.blocks_of(c)
+
+
 MESH_SERVE_CHILD = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -628,6 +728,46 @@ for _ in range(3):
 results["repl_tokens_match"] = bool(repl.tokens == repl_cpu.tokens)
 results["repl_mechs_fused"] = bool(all(
     m == "fused_mesh" for m in repl_mechs))
+
+# dedup-on-admit, mesh leg: identical prompts across tenants collapse
+# onto shared blocks WITHIN a batch group (group-pinned sharing only),
+# greedy tokens match the dedup-off twin, rounds stay one collective
+# launch, and block placement stays group-sound after CoW splits
+ded_off = ServingEngine(cfg, params, mesh=mesh, max_seqs=8,
+                        max_blocks_per_seq=8, num_slabs=4)
+ded_on = ServingEngine(cfg, params, mesh=mesh, max_seqs=8,
+                       max_blocks_per_seq=8, num_slabs=4,
+                       dedup_admit=True)
+rng5 = np.random.default_rng(17)
+page = ded_on.cache.page
+canon = [rng5.integers(2, cfg.vocab_size,
+                       size=2 * page + page // 2).astype(np.int32)
+         for _ in range(2)]
+sid_pairs = [(ded_off.add_request(canon[t % 2].copy()),
+              ded_on.add_request(canon[t % 2].copy()))
+             for t in range(4)]
+ded_mechs = []
+hook5 = lambda n, p, m: ded_mechs.append(m)
+for rnd in range(3):
+    ded_off.decode_round()
+    n0 = len(ded_mechs)
+    fd.add_launch_hook(hook5)
+    ded_on.decode_round()
+    fd.remove_launch_hook(hook5)
+    # round 0 carries the shared-tail CoW split flushes on top of the
+    # decode ticket; later rounds must be a single collective launch
+    assert ded_on.last_ticket.launches <= 1, ded_mechs
+    assert len(ded_mechs) - n0 <= (3 if rnd == 0 else 1), ded_mechs
+results["dedup_tokens_match"] = bool(all(
+    ded_off.tokens[a] == ded_on.tokens[b] for a, b in sid_pairs))
+results["dedup_mechs_fused"] = bool(all(
+    m == "fused_mesh" for m in ded_mechs))
+results["dedup_hits"] = int(ded_on.dedup_hits)
+results["dedup_kv_on"] = int(ded_on.kv_bytes_live())
+results["dedup_kv_off"] = int(ded_off.kv_bytes_live())
+results["dedup_group_ok"] = bool(all(
+    ded_on.cache.group_of_block(b) == seq.group
+    for seq in ded_on.cache.seqs.values() for b in seq.blocks))
 print("RESULTS:" + json.dumps(results))
 """
 
@@ -662,3 +802,11 @@ def test_sharded_batch_serving_decodes_like_single_device(tmp_path):
     assert res["repl_sharding_hint"] == [], res
     assert res["repl_tokens_match"], res
     assert res["repl_mechs_fused"], res
+    # dedup-on-admit on the mesh: identical prompts share group-pinned
+    # blocks, greedy tokens bitwise-match the dedup-off twin, rounds stay
+    # one collective launch, and every block stays in its sequence's group
+    assert res["dedup_tokens_match"], res
+    assert res["dedup_mechs_fused"], res
+    assert res["dedup_hits"] >= 1, res
+    assert res["dedup_kv_on"] < res["dedup_kv_off"], res
+    assert res["dedup_group_ok"], res

@@ -256,6 +256,132 @@ def test_space_war_rows_unit():
     assert space_war_rows(spaced, locate, primary) == spaced
 
 
+# ---------------------------------------------------------------------------
+# two-source bitwise hazard matrix — OP_AND/OP_OR/OP_NOT rows read TWO
+# blocks (srcB packed into the src field), and every hazard rule must
+# apply to EITHER source
+# ---------------------------------------------------------------------------
+
+def _u32(x):
+    """Uint bit view — bitwise results on float pools must be compared
+    to the exact bit, not through float equality."""
+    return np.ascontiguousarray(np.asarray(x)).view(np.uint32)
+
+
+def test_bitwise_raw_on_srcb_autoflushes():
+    """A bitwise row whose SECOND source reads a pending destination is a
+    RAW hazard: the queue flushes the earlier write before admitting it,
+    so the AND gathers the copied bytes."""
+    eng = mk_engine(seed=20)
+    eng.alloc.mark_written([1, 2])
+    with Hook() as mechs, eng.batch():
+        eng.memcopy([(1, 5)])            # pending write on 5
+        eng.memand([(2, 5, 9)])          # srcB = 5 -> auto-flush first
+        assert eng.queue.stats.hazard_flushes == 1
+        assert mechs == ["fused"]        # the copy drained early
+    want = _u32(eng.pools["k"][2]) & _u32(eng.pools["k"][1])
+    np.testing.assert_array_equal(_u32(eng.pools["k"][9]), want)
+
+
+def test_bitwise_waw_on_dst_autoflushes():
+    """Rewriting a bitwise row's pending destination is a WAW hazard —
+    the compute row must land before the overwrite."""
+    eng = mk_engine(seed=21)
+    eng.alloc.mark_written([1, 2, 3])
+    with eng.batch():
+        eng.memor([(1, 2, 9)])
+        eng.memcopy([(3, 9)])            # WAW on the OR's dst
+        assert eng.queue.stats.hazard_flushes == 1
+    np.testing.assert_array_equal(_u32(eng.pools["k"][9]),
+                                  _u32(eng.pools["k"][3]))
+
+
+def test_bitwise_war_on_srcb_admitted_and_spaced():
+    """Rewriting a bitwise row's srcB in the same stream is WAR: admitted
+    without a flush, counted, spaced for the overlapped drain — and the
+    AND reads the OLD bytes on both dispatch paths, bitwise."""
+    fused, legacy = mk_engine(seed=22), mk_engine(seed=22, use_fused=False)
+    old2 = _u32(fused.pools["k"][2]).copy()
+    old3 = _u32(fused.pools["k"][3]).copy()
+    for eng in (fused, legacy):
+        eng.alloc.mark_written([2, 3, 7])
+        with Hook() as mechs, eng.batch():
+            eng.memand([(2, 3, 9)])
+            eng.memcopy([(7, 3)])        # rewrites srcB 3: WAR, admitted
+        assert eng.queue.stats.hazard_flushes == 0
+        assert eng.queue.stats.war_hazards == 1
+        assert eng.queue.stats.spacer_rows >= 1
+        if eng.use_fused:
+            assert mechs == ["fused"]    # the pair shares ONE launch
+    assert fused.queue.stats.spacer_rows == legacy.queue.stats.spacer_rows
+    np.testing.assert_array_equal(_u32(fused.pools["k"][9]), old2 & old3)
+    for n in fused.pools:
+        np.testing.assert_array_equal(_u32(fused.pools[n]),
+                                      _u32(legacy.pools[n]), err_msg=n)
+
+
+def test_cross_stream_conflict_on_srcb_drains_other_stream():
+    """Cross-stream hazards see both sources: a bitwise enqueue whose
+    srcB another stream will WRITE drains the writer first (the gather
+    must observe its bytes), and a write to a block a bitwise stream
+    will READ drains the reader first (its gather must see the old
+    bytes)."""
+    eng = mk_engine(seed=24)
+    eng.alloc.mark_written([3, 4])
+    w, c = eng.stream("w"), eng.stream("c")
+    w.memcopy([(3, 8)])
+    c.memand([(4, 8, 12)])               # srcB 8 pending in w -> w drains
+    assert eng.stats.cross_stream_flushes == 1
+    assert len(w) == 0 and len(c) == 2   # two fanned rows still pending
+    c.flush()
+    want = _u32(eng.pools["k"][4]) & _u32(eng.pools["k"][3])
+    np.testing.assert_array_equal(_u32(eng.pools["k"][12]), want)
+    # WAR direction: a writer stream touching a pending bitwise SOURCE
+    eng.alloc.mark_written([5, 6])
+    r, w2 = eng.stream("r"), eng.stream("w2")
+    r.memor([(5, 6, 14)])
+    old6 = _u32(eng.pools["k"][6]).copy()
+    w2.memcopy([(3, 6)])                 # rewrites r's pending srcB 6
+    assert eng.stats.cross_stream_flushes == 2
+    assert len(r) == 0                   # reader drained before the write
+    w2.flush()
+    np.testing.assert_array_equal(_u32(eng.pools["k"][14]),
+                                  _u32(eng.pools["k"][5]) | old6)
+
+
+def test_retire_bitwise_row_rebuilds_both_source_sets():
+    """retire() of a queued two-source row rebuilds BOTH pending-source
+    sets from the survivors — a stale srcB entry would pin staging slots
+    (or trip later hazard checks) forever."""
+    eng = mk_engine(seed=26)
+    eng.alloc.mark_written([2, 3])
+    s = eng.stream("bit")
+    s.memand([(2, 3, 9)])                # fans out: one row per primary
+    q = s.queue
+    ki, vi = eng.group.index("k"), eng.group.index("v")
+    for pi in (ki, vi):
+        assert q.has_pending_read((pi, 2)) and q.has_pending_read((pi, 3))
+        assert q.has_pending_write((pi, 9))
+    locate = eng.group.locate
+    k_row = [row for row in q.pending if locate(row[2])[0] == ki]
+    assert len(k_row) == 1
+    assert q.retire(k_row) == 1
+    # the k row's reads AND write are gone; the v row's survive intact
+    assert not q.has_pending_read((ki, 2))
+    assert not q.has_pending_read((ki, 3))
+    assert not q.has_pending_write((ki, 9))
+    assert q.has_pending_read((vi, 2)) and q.has_pending_read((vi, 3))
+    assert q.has_pending_write((vi, 9))
+    assert q.stats.retired == 1
+    old_k9 = _u32(eng.pools["k"][9]).copy()
+    t = s.flush()
+    assert t.commands == 1               # only the surviving v row drained
+    np.testing.assert_array_equal(_u32(eng.pools["k"][9]), old_k9)
+    np.testing.assert_array_equal(
+        _u32(eng.pools["v"][9]),
+        _u32(eng.pools["v"][2]) & _u32(eng.pools["v"][3]))
+
+
 def test_stage_slots_guarded_by_pending_reads():
     """A staging slot whose promotion is queued on one stream stays out
     of the free list while OTHER streams flush; it recycles only when

@@ -40,6 +40,17 @@ REQUIRED_SYMBOLS = (
     "repro.core.rowclone.RowCloneEngine.retire_promotions",
     "repro.core.rowclone.RowCloneEngine.demote_to_spill",
     "repro.core.cow_cache.PagedCoWCache.remap_blocks",
+    # bitwise opcodes (Ambit follow-on) + dedup-on-admit surface
+    "repro.core.rowclone.RowCloneEngine.memand",
+    "repro.core.rowclone.RowCloneEngine.memor",
+    "repro.core.rowclone.RowCloneEngine.memnot",
+    "repro.core.stream.CommandStream.memand",
+    "repro.core.stream.CommandStream.memor",
+    "repro.core.stream.CommandStream.memnot",
+    "repro.kernels.fused_dispatch.pack_bitwise_src",
+    "repro.launch.serve.xor_fold",
+    "repro.launch.serve.page_fingerprint",
+    "repro.launch.serve.ServingEngine.kv_bytes_live",
 )
 
 #: dataclass-generated or inherited members that need no prose of their own
