@@ -1,8 +1,11 @@
 # Tier-1 verification and smoke benchmarks.
 #
 #   make test         - the tier-1 suite (ROADMAP.md "Tier-1 verify"):
-#                       docstring lint, then the mesh dispatch suite,
-#                       then the rest
+#                       static lint (rowlint + docstring lint), then the
+#                       mesh dispatch suite, then the rest
+#   make lint         - static contract checks: tools/rowlint.py (opcode
+#                       registry, stacked-id arithmetic, pool-mutation,
+#                       stream-mirror rules) + the docstring lint
 #   make test-mesh    - multi-device mesh dispatch tests only (the tests
 #                       fork 8-host-device subprocesses themselves; the
 #                       exported XLA_FLAGS also covers any future
@@ -32,10 +35,13 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 PY := PYTHONPATH=$(PYTHONPATH) python
 MESH_FLAGS := XLA_FLAGS=--xla_force_host_platform_device_count=8
 
-.PHONY: test test-mesh test-fault test-fast check-docs bench-smoke bench-serve bench-traffic bench
+.PHONY: test test-mesh test-fault test-fast lint check-docs bench-smoke bench-serve bench-traffic bench
 
-test: check-docs test-mesh test-fault
+test: lint test-mesh test-fault
 	$(PY) -m pytest -x -q -m "not mesh and not fault"
+
+lint: check-docs
+	$(PY) tools/rowlint.py
 
 test-mesh:
 	$(MESH_FLAGS) $(PY) -m pytest -x -q -m mesh

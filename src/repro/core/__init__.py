@@ -10,8 +10,12 @@ from repro.core.cmdqueue import (BUCKETS, CommandQueue, QueueStats,
 from repro.core.cow_cache import PagedCoWCache, Sequence
 from repro.core.journal import (AbortedFlush, JournalRecord, PoolSnapshot,
                                 RecoveryError, RecoveryReport, TicketJournal)
+from repro.core.opcodes import (BITWISE_OPS, MAX_PACK_BLOCKS, OPCODES,
+                                OpSpec, UnknownOpcodeError, opspec)
 from repro.core.poolspec import BlockRef, PoolGroup, PoolSpec
 from repro.core.rowclone import EngineStats, RowCloneEngine
+from repro.core.sanitizer import (DrainSanitizer, Finding, SanitizerError,
+                                  SanitizerReport, sanitize_enabled)
 from repro.core.stream import CommandStream, FlushTicket
 
 __all__ = [
@@ -40,4 +44,15 @@ __all__ = [
     "AbortedFlush",
     "RecoveryError",
     "RecoveryReport",
+    "OPCODES",
+    "OpSpec",
+    "opspec",
+    "UnknownOpcodeError",
+    "BITWISE_OPS",
+    "MAX_PACK_BLOCKS",
+    "DrainSanitizer",
+    "Finding",
+    "SanitizerError",
+    "SanitizerReport",
+    "sanitize_enabled",
 ]

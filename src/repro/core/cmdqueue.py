@@ -58,13 +58,13 @@ from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+from repro.core.opcodes import (ALL_PRIMARY, BITWISE_OPS, OP_AND,
+                                OP_BASELINE_COPY, OP_CROSS_POOL_COPY,
+                                OP_FPM_COPY, OP_NOP, OP_NOT, OP_OR,
+                                OP_PSM_COPY, OP_ZERO_INIT, keys_clash,
+                                opspec, pack_bitwise_src, row_rw,
+                                unpack_bitwise_src)
 from repro.core.poolspec import PoolGroup
-from repro.kernels.fused_dispatch import (BITWISE_OPS, OP_AND,
-                                          OP_BASELINE_COPY,
-                                          OP_CROSS_POOL_COPY, OP_FPM_COPY,
-                                          OP_NOP, OP_NOT, OP_OR, OP_PSM_COPY,
-                                          OP_ZERO_INIT, pack_bitwise_src,
-                                          unpack_bitwise_src)
 
 #: padding buckets — the only command-table lengths ever jit-compiled
 BUCKETS: Tuple[int, ...] = (8, 32, 128, 512)
@@ -79,52 +79,11 @@ def bucket_size(n: int) -> int:
     return BUCKETS[-1]
 
 
-#: hazard-key pool index standing for "every primary pool" (plain opcodes
-#: move the named block in all of them at once)
-ALL_PRIMARY = -1
-
-
-def _row_rw(op: int, s: int, d: int, locate, total: Optional[int] = None):
-    """The ``(reads, writes)`` hazard keys of one table row, each a tuple
-    of ``(pool, block)`` with :data:`ALL_PRIMARY` meaning every primary
-    pool.  ``locate`` decodes cross-pool stacked ids for whatever address
-    space the row lives in (the PoolGroup's global ids, or a ShardPlan
-    slab's local prefix-sum ids).
-
-    Two-source bitwise rows (``OP_AND``/``OP_OR``/``OP_NOT``) read BOTH
-    packed sources — ``total`` is the address-space size the packing used
-    (``group.total_blocks`` globally, the slab-local stacked total inside
-    a ShardPlan) and is required whenever such a row can appear."""
-    if op == OP_CROSS_POOL_COPY:
-        return (locate(s),), (locate(d),)
-    if op == OP_ZERO_INIT:
-        return (), ((ALL_PRIMARY, d),)
-    if op in BITWISE_OPS:
-        if total is None:
-            raise ValueError("bitwise row needs the packing total to "
-                             "decode its two sources")
-        a, b = unpack_bitwise_src(s, total)
-        reads = (locate(a),) if a == b else (locate(a), locate(b))
-        return reads, (locate(d),)
-    return ((ALL_PRIMARY, s),), ((ALL_PRIMARY, d),)
-
-
-def _keys_clash(a: Tuple[int, int], b: Tuple[int, int],
-                primary: Tuple[bool, ...]) -> bool:
-    """Do two ``(pool, block)`` hazard keys touch overlapping bytes?
-    :data:`ALL_PRIMARY` expands to the primary pool set on either side; a
-    staging-pool key only collides with an exact pool match."""
-    pa, ba = a
-    pb, bb = b
-    if ba != bb:
-        return False
-    if pa == pb:
-        return True
-    if pa == ALL_PRIMARY:
-        return primary[pb]
-    if pb == ALL_PRIMARY:
-        return primary[pa]
-    return False
+# hazard-key decode + clash rules live in the core/opcodes.py registry
+# (one source of truth shared with the sanitizer and the engine); the
+# seed-era private names survive as aliases for in-tree callers
+_row_rw = row_rw
+_keys_clash = keys_clash
 
 
 def space_war_rows(rows: Sequence[Tuple[int, int, int]], locate,
@@ -288,10 +247,15 @@ def partition_commands(rows: Iterable[Tuple[int, int, int]], *,
     for op, s, d in rows:
         if op < 0:
             continue
-        if op == OP_ZERO_INIT:
+        # classification derives from the opcode's registry contract
+        # (core/opcodes.py): source-less rows are always slab-local,
+        # two-source compute rows split per travelling source, global-id
+        # rows resolve through the group, primary-space rows through ss0
+        sp = opspec(op)
+        if sp.src_kind == "none":
             local[d // ss0].append((op, -1, d % ss0))
             continue
-        if op in BITWISE_OPS:
+        if sp.is_compute:
             a, b = unpack_bitwise_src(s, group.total_blocks)
             pa, ab = group.locate(a)
             pb, bb = group.locate(b)
@@ -339,7 +303,7 @@ def partition_commands(rows: Iterable[Tuple[int, int, int]], *,
                         (rb, pb, pd, ld, op))
             n_transfer += 1
             continue
-        if op == OP_CROSS_POOL_COPY:
+        if sp.src_kind == "global":
             ps, bs = group.locate(s)
             pd, bd = group.locate(d)
             if replicated[pd]:

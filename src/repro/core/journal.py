@@ -36,6 +36,8 @@ import collections
 import dataclasses
 from typing import Any, Dict, List, Optional, Tuple
 
+from repro.core.opcodes import OP_NOP, row_rw
+
 
 @dataclasses.dataclass(frozen=True)
 class JournalRecord:
@@ -153,8 +155,37 @@ class TicketJournal:
         (restored) pools, in order.  Records carry the spaced rows as
         dispatched, so the rebuilt tables — and the resulting block
         state — are bitwise-identical to the original drains.  Returns
-        the number of flushes replayed."""
+        the number of flushes replayed.
+
+        Every record's rows are validated against the opcode contract
+        registry (core/opcodes.py) BEFORE anything re-drains: opcodes
+        must have :class:`~repro.core.opcodes.OpSpec` entries and every
+        operand must decode under its contract — including the int32
+        two-source packing bound, which is enforced on the replay path
+        exactly as at engine construction.  A journal restored against a
+        mismatched engine (different pool group, truncated rows, a
+        corrupted record) fails here with a descriptive error instead of
+        scattering into the wrong blocks."""
         todo = self.since(after)
+        group = engine.group
+        for rec in todo:
+            for i, (op, s, d) in enumerate(rec.rows):
+                try:
+                    if op < 0:
+                        if (op, s, d) != (OP_NOP, -1, -1):
+                            raise ValueError(
+                                f"padding row must be (OP_NOP, -1, -1), "
+                                f"got ({op}, {s}, {d})")
+                        continue
+                    # registry-driven decode: raises UnknownOpcodeError
+                    # for unregistered opcodes, ValueError for operands
+                    # outside the engine's address space or packing bound
+                    row_rw(op, s, d, group.locate, group.total_blocks)
+                except ValueError as e:
+                    raise RecoveryError(
+                        f"journal record {rec.index} (stream "
+                        f"{rec.stream!r}) row {i} fails the opcode "
+                        f"contract: {e}") from e
         for rec in todo:
             engine._drain_rows(list(rec.rows), record=False,
                                pre_spaced=True)

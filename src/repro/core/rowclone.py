@@ -72,7 +72,10 @@ from repro.core.cmdqueue import (BITWISE_OPS, BUCKETS, CommandQueue, OP_AND,
                                  space_war_rows, unpack_bitwise_src)
 from repro.core.journal import (AbortedFlush, JournalRecord, PoolSnapshot,
                                 RecoveryError, RecoveryReport, TicketJournal)
+from repro.core.opcodes import (ALL_PRIMARY, check_pack_total, opspec,
+                                row_rw)
 from repro.core.poolspec import BlockRef, PoolGroup
+from repro.core.sanitizer import DrainSanitizer, sanitize_enabled
 from repro.core.stream import CommandStream
 from repro.kernels import ops as kops
 from repro.kernels.fused_dispatch import (DrainInfo, _bitcast_uint,
@@ -127,7 +130,8 @@ class RowCloneEngine:
                  enable_zi: bool = True, max_requests: int = 256,
                  block_axis: int = 0, use_fused: bool = True,
                  staging: Optional[Dict[str, str]] = None,
-                 group: Optional[PoolGroup] = None):
+                 group: Optional[PoolGroup] = None,
+                 sanitize: Optional[bool] = None):
         """``block_axis``: which pool axis indexes blocks.  0 = flat pools
         (nblk, ...); 1 = layer-stacked serving pools (L, nblk, ...) where a
         logical block is L physical pages moved together (L independent
@@ -152,7 +156,17 @@ class RowCloneEngine:
         (``promote_staged``), so allocator metadata (ZI bits, refcounts)
         keeps describing primary blocks.  Staging slot ids are
         engine-managed (``stage_blocks``), disjoint from the allocator's
-        free lists."""
+        free lists.
+
+        ``sanitize``: attach the TSAN-style drain sanitizer
+        (core/sanitizer.py) — every flushed chunk is validated against
+        the opcode contract registry before its donating launch (operand
+        decode, staging legality, NOP well-formedness, RAW/WAW absence,
+        WAR adjacency, ShardPlan partitioning) and shadow-executed
+        through the jnp oracle on host copies with a bitwise diff.
+        ``None`` (the default) reads the ``REPRO_SANITIZE`` env var.  The
+        sanitizer issues no extra device launches, so launch accounting
+        (and the 1-launch-per-flush gates) is unchanged."""
         self.alloc = allocator
         self.mesh = mesh
         self.enable_fpm = enable_fpm
@@ -170,6 +184,11 @@ class RowCloneEngine:
         # group order is the table order everywhere — realign the dict
         self.pools = {name: pools[name] for name in group.names}
         self.stats = EngineStats()
+        if sanitize is None:
+            sanitize = sanitize_enabled()
+        #: the attached drain sanitizer, or None (core/sanitizer.py)
+        self.sanitizer: Optional[DrainSanitizer] = \
+            DrainSanitizer(self) if sanitize else None
         # every engine owns a DEFAULT CommandStream: the seed-era public
         # calls (memcopy/flush/batch) are thin wrappers over it; callers
         # wanting explicit asynchrony mint more with stream().  The
@@ -505,8 +524,15 @@ class RowCloneEngine:
                 table = np.full((bucket_size(len(chunk)), 3), OP_NOP,
                                 np.int32)
                 table[:len(chunk)] = np.asarray(chunk, np.int32)
+                san = self.sanitizer
+                shadow_pre = None
+                if san is not None:
+                    san.check_table(table, flush=idx, chunk=ci)
+                    shadow_pre = san.shadow_snapshot()
                 launches += self._dispatch_table(table, len(chunk),
                                                  queue=queue)
+                if shadow_pre is not None:
+                    san.check_shadow(shadow_pre, table)
             except Exception:
                 if record:
                     done = spaced[:lo]
@@ -542,11 +568,13 @@ class RowCloneEngine:
         for op, s, d in rows:
             if op < 0:
                 continue
-            if op == OP_CROSS_POOL_COPY or op in BITWISE_OPS:
-                pd, _ = self.group.locate(int(d))
-                hit.add(self.group.names[pd])
-            else:
-                hit.update(self.primary_names)
+            _, writes = row_rw(op, s, d, self.group.locate,
+                               self.group.total_blocks)
+            for p, _b in writes:
+                if p == ALL_PRIMARY:
+                    hit.update(self.primary_names)
+                else:
+                    hit.add(self.group.names[p])
         return tuple(n for n in self.group.names if n in hit)
 
     # ------------------------------------------------------------------
@@ -568,17 +596,12 @@ class RowCloneEngine:
         if not lost_idx:
             return False
         op, s, d = row
-        if op in BITWISE_OPS:
-            a, b = unpack_bitwise_src(int(s), self.group.total_blocks)
-            pa, _ = self.group.locate(a)
-            pb, _ = self.group.locate(b)
-            pd, _ = self.group.locate(int(d))
-            return pa in lost_idx or pb in lost_idx or pd in lost_idx
-        if op != OP_CROSS_POOL_COPY:
-            return False
-        ps, _ = self.group.locate(int(s))
-        pd, _ = self.group.locate(int(d))
-        return ps in lost_idx or pd in lost_idx
+        # registry-driven decode: plain opcodes key ALL_PRIMARY (-1),
+        # which is never a lost pool index, so only exact-pool operands
+        # (cross-pool / bitwise rows) can make a row unrecoverable
+        reads, writes = row_rw(op, s, d, self.group.locate,
+                               self.group.total_blocks)
+        return any(p in lost_idx for p, _b in reads + writes)
 
     def recover(self, snapshot: Optional[PoolSnapshot] = None,
                 max_retries: int = 3, backoff: float = 0.05,
@@ -854,10 +877,9 @@ class RowCloneEngine:
 
     def _membitwise(self, op: int, rows) -> int:
         total = self.group.total_blocks
-        if total * total - 1 > np.iinfo(np.int32).max:
-            raise ValueError(
-                f"bitwise srcB packing overflows int32: group has {total} "
-                f"blocks (> 46340) — shrink the pool group or split it")
+        # registry-enforced int32 bound — the same check runs on every
+        # pack/unpack (enqueue, retire, journal replay), not just here
+        check_pack_total(total)
         for a, b, d, dref in rows:
             self._cur_queue.enqueue(op, pack_bitwise_src(a, b, total), d)
             self.stats.bitwise_ops += 1
@@ -1207,20 +1229,16 @@ class RowCloneEngine:
         source?  (Replicated→replicated writes drain collectively — every
         shard applies them to its replica.)"""
         for op, s, d in table:
-            if int(op) in BITWISE_OPS:
-                a, b = unpack_bitwise_src(int(s), self.group.total_blocks)
-                pa, _ = self.group.locate(a)
-                pb, _ = self.group.locate(b)
-                pd, _ = self.group.locate(int(d))
-                if replicated[pd] and not (replicated[pa]
-                                           and replicated[pb]):
-                    return True
+            op = int(op)
+            # only global-dst rows (cross-pool / bitwise, per the
+            # registry) can write a replicated pool from a sharded source
+            if op < 0 or opspec(op).dst_kind != "global":
                 continue
-            if int(op) != OP_CROSS_POOL_COPY:
-                continue
-            ps, _ = self.group.locate(int(s))
-            pd, _ = self.group.locate(int(d))
-            if replicated[pd] and not replicated[ps]:
+            reads, writes = row_rw(op, int(s), int(d), self.group.locate,
+                                   self.group.total_blocks)
+            pd = writes[0][0]
+            if replicated[pd] and any(not replicated[p]
+                                      for p, _b in reads):
                 return True
         return False
 
@@ -1237,6 +1255,8 @@ class RowCloneEngine:
         rows = [(int(op), int(s), int(d)) for op, s, d in table if op >= 0]
         plan = partition_commands(rows, n_shards=n_shards, group=self.group,
                                   replicated=replicated)
+        if self.sanitizer is not None:
+            self.sanitizer.check_plan(rows, plan, replicated)
         # journal the plan shape (not the tables — rows reproduce those):
         # a replayed drain rebuilding a different signature would compile
         # a new collective, which the plan_sig makes observable

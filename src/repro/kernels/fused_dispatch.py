@@ -75,36 +75,27 @@ from jax.experimental.pallas import tpu as pltpu
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
-
-OP_NOP = -1
-OP_FPM_COPY = 0
-OP_PSM_COPY = 1
-OP_BASELINE_COPY = 2
-OP_ZERO_INIT = 3
-OP_CROSS_POOL_COPY = 4
-OP_AND = 5
-OP_OR = 6
-OP_NOT = 7
-
-OPCODE_NAMES = {
-    OP_NOP: "nop",
-    OP_FPM_COPY: "fpm_copy",
-    OP_PSM_COPY: "psm_copy",
-    OP_BASELINE_COPY: "baseline_copy",
-    OP_ZERO_INIT: "zero_init",
-    OP_CROSS_POOL_COPY: "cross_pool_copy",
-    OP_AND: "and",
-    OP_OR: "or",
-    OP_NOT: "not",
-}
-
-#: compute opcodes — two-source bitwise rows (Ambit triple-row activation).
-#: ``src`` packs BOTH sources over the global-id space: ``a * total + b``
-#: (``total`` = sum of pool block counts; ``OP_NOT`` packs ``b == a``),
-#: ``dst`` is a global id like ``OP_CROSS_POOL_COPY``'s.
-BITWISE_OPS = (OP_AND, OP_OR, OP_NOT)
+# the opcode table is DECLARED once, in the core/opcodes.py registry; the
+# kernel (like the CommandQueue and the jnp reference) derives its switch
+# sets from it.  The names are re-exported here for the long-standing
+# import surface (cmdqueue/tests import OP_* from this module).
+from repro.core.opcodes import (BITWISE_OPS, OP_AND, OP_BASELINE_COPY,
+                                OP_CROSS_POOL_COPY, OP_FPM_COPY, OP_NOP,
+                                OP_NOT, OP_OR, OP_PSM_COPY, OP_ZERO_INIT,
+                                OPCODE_NAMES, PLAIN_COPY_OPS,
+                                pack_bitwise_src, unpack_bitwise_src)
 
 _UINTS = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32, 8: jnp.uint64}
+
+
+def _op_in(op, values):
+    """Fold a registry-derived opcode set into one traced predicate —
+    the kernel/reference switch tables stay in lockstep with the
+    ``core/opcodes.py`` registry instead of hand-listing members."""
+    pred = op == values[0]
+    for v in values[1:]:
+        pred = pred | (op == v)
+    return pred
 
 
 def _bitcast_uint(arr):
@@ -116,18 +107,6 @@ def _bitcast_uint(arr):
         return arr
     return jax.lax.bitcast_convert_type(arr, _UINTS[dt.itemsize])
 
-
-def pack_bitwise_src(a: int, b: int, total: int) -> int:
-    """Pack two global source ids into one int32 src field: ``a*total+b``.
-
-    ``total`` is the PoolGroup's total block count; ``total**2`` must fit
-    int32 (checked at engine construction — ``total <= 46340``)."""
-    return a * total + b
-
-
-def unpack_bitwise_src(src: int, total: int) -> Tuple[int, int]:
-    """Invert :func:`pack_bitwise_src` → ``(a, b)`` global ids."""
-    return src // total, src % total
 
 # ---------------------------------------------------------------------------
 # launch accounting — the hook tests and benchmarks use to assert "one
@@ -292,8 +271,7 @@ def _make_kernel(n_pools: int, block_axis: int, sizes: Tuple[int, ...],
             sm = sem.at[slot]
 
             if issue:
-                @pl.when(((op == OP_AND) | (op == OP_OR) | (op == OP_NOT))
-                         & (d >= 0))
+                @pl.when(_op_in(op, BITWISE_OPS) & (d >= 0))
                 def _():
                     # two-source compute row: src packs a*total+b; dst is a
                     # global id.  Synchronous DMA round-trip through VMEM —
@@ -332,8 +310,7 @@ def _make_kernel(n_pools: int, block_axis: int, sizes: Tuple[int, ...],
 
             @pl.when((op >= 0) & (d >= 0))
             def _():
-                @pl.when((op == OP_FPM_COPY) | (op == OP_PSM_COPY) |
-                         (op == OP_BASELINE_COPY))
+                @pl.when(_op_in(op, PLAIN_COPY_OPS))
                 def _():
                     for p in range(n_pools):
                         if primary[p]:

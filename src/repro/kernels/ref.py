@@ -76,9 +76,10 @@ def fused_dispatch(pools, zero_blocks, cmds, block_axis=0, primary=None):
     rows can land in staging pools.  Sources are gathered from the
     pre-flush state and combined through a same-width unsigned-int
     bitcast, so float pools AND/OR/NOT their raw bit patterns."""
-    from repro.kernels.fused_dispatch import (OP_AND, OP_CROSS_POOL_COPY,
-                                              OP_NOT, OP_OR, OP_ZERO_INIT,
-                                              _as_primary, _bitcast_uint)
+    from repro.core.opcodes import (BITWISE_OPS, OP_AND, OP_CROSS_POOL_COPY,
+                                    OP_OR, OP_ZERO_INIT)
+    from repro.kernels.fused_dispatch import (_as_primary, _bitcast_uint,
+                                              _op_in)
     pools = list(pools)
     n = len(pools)
     primary = _as_primary(primary, n)
@@ -92,7 +93,9 @@ def fused_dispatch(pools, zero_blocks, cmds, block_axis=0, primary=None):
     total = run
     op, s, d = cmds[:, 0], cmds[:, 1], cmds[:, 2]
     is_cross = op == OP_CROSS_POOL_COPY
-    is_bitwise = (op == OP_AND) | (op == OP_OR) | (op == OP_NOT)
+    # membership derives from the core/opcodes.py registry — adding a
+    # compute opcode updates this switch without touching the reference
+    is_bitwise = _op_in(op, BITWISE_OPS)
 
     def pool_of(ids):
         """Per-row (base, in_pool[p]) decode of global cross-pool ids."""

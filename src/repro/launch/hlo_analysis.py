@@ -26,7 +26,7 @@ DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "s16": 2,
                "u16": 2, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1}
 SHAPE_RE = re.compile(r"\b(" + "|".join(DTYPE_BYTES) + r")\[([0-9,]*)\]")
-OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*"
+HLO_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*"
                    r"(?P<type>\([^)]*\)|[\w\[\]\{\},\/\* ]+?)\s*"
                    r"(?P<op>[\w\-]+)\(")
 TRIP_RE = re.compile(r'known_trip_count[":{\s]+n[":\s]+(\d+)')
@@ -152,7 +152,7 @@ class HloCost:
         out = {"flops": 0.0, "bytes": 0.0, "wire_bytes": 0.0}
         out.update({c: 0.0 for c in COLLECTIVES})
         clean = _strip_meta(line)
-        m = OP_RE.match(clean)
+        m = HLO_OP_RE.match(clean)
         if not m:
             return out
         op = m.group("op")

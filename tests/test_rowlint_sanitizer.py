@@ -1,0 +1,331 @@
+"""Mutation tests for the static/dynamic contract checkers (PR 9).
+
+Three legs:
+
+* **rowlint mutations** — the linter passes on the real tree, then each
+  rule (RC101..RC104) is exercised by seeding its violation into a
+  copied tree and asserting the lint catches exactly that rule (plus the
+  line-waiver escape hatch).
+* **sanitizer violations** — hand-built corrupt tables driven through
+  ``RowCloneEngine(sanitize=True)``'s drain path must raise
+  :class:`SanitizerError` with the right check id and leave pool bytes
+  untouched (fail-stop), including a shadow-execution diff seeded by
+  corrupting the dispatch kernel.
+* **REPRO_SANITIZE=1 streams** — the dispatch property streams run on a
+  sanitized engine and a plain twin: bitwise-equal pools, identical
+  launch events (the oracle issues no launches), zero findings.
+"""
+import dataclasses
+import pathlib
+import random
+import shutil
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO))     # the `tools` package (rowlint)
+
+from tools import rowlint  # noqa: E402
+
+from repro.core import (RowCloneEngine, SubarrayAllocator,  # noqa: E402
+                        opcodes as oc)
+from repro.core.cmdqueue import partition_commands  # noqa: E402
+from repro.core.journal import JournalRecord, RecoveryError  # noqa: E402
+from repro.core.opcodes import (MAX_PACK_BLOCKS, OP_AND,  # noqa: E402
+                                OP_FPM_COPY, OP_NOP, check_pack_total,
+                                pack_bitwise_src, unpack_bitwise_src)
+from repro.core.sanitizer import (DrainSanitizer,  # noqa: E402
+                                  SanitizerError)
+from repro.kernels import ops as kops  # noqa: E402
+from test_dispatch_properties import (assert_pools_equal,  # noqa: E402
+                                      gen_program, mk_engine, run_program)
+
+
+# ---------------------------------------------------------------------------
+# rowlint: clean tree + seeded mutations
+# ---------------------------------------------------------------------------
+
+def _copy_tree(tmp_path: pathlib.Path) -> pathlib.Path:
+    """Copy src/repro + tools into a scratch root rowlint can lint."""
+    root = tmp_path / "mutant"
+    (root / "src").mkdir(parents=True)
+    ignore = shutil.ignore_patterns("__pycache__")
+    shutil.copytree(REPO / "src" / "repro", root / "src" / "repro",
+                    ignore=ignore)
+    shutil.copytree(REPO / "tools", root / "tools", ignore=ignore)
+    return root
+
+
+def _rules(violations):
+    return {v.rule for v in violations}
+
+
+def test_rowlint_clean_on_real_tree():
+    assert rowlint.lint(REPO) == []
+
+
+def test_rowlint_rc101_unregistered_opcode(tmp_path):
+    root = _copy_tree(tmp_path)
+    mod = root / "src" / "repro" / "core" / "cmdqueue.py"
+    mod.write_text(mod.read_text() + "\n_MUTANT = OP_STRIDED_COPY\n")
+    found = rowlint.lint(root)
+    assert _rules(found) == {"RC101"}
+    assert any("OP_STRIDED_COPY" in v.message for v in found)
+
+
+def test_rowlint_rc101_waiver_suppresses(tmp_path):
+    root = _copy_tree(tmp_path)
+    mod = root / "src" / "repro" / "core" / "cmdqueue.py"
+    mod.write_text(mod.read_text()
+                   + "\n_MUTANT = OP_STRIDED_COPY  "
+                     "# rowlint: disable=RC101\n")
+    assert rowlint.lint(root) == []
+
+
+def test_rowlint_rc102_stacked_id_arithmetic(tmp_path):
+    root = _copy_tree(tmp_path)
+    mod = root / "src" / "repro" / "core" / "journal.py"
+    mod.write_text(mod.read_text()
+                   + "\n\ndef _mutant_gid(pool, nblk, block):\n"
+                     "    return pool * nblk + block\n")
+    assert _rules(rowlint.lint(root)) == {"RC102"}
+
+
+def test_rowlint_rc102_legal_in_poolspec(tmp_path):
+    # the codec module itself is the one allowed home for the arithmetic
+    root = _copy_tree(tmp_path)
+    mod = root / "src" / "repro" / "core" / "poolspec.py"
+    mod.write_text(mod.read_text()
+                   + "\n\ndef _mutant_gid(pool, nblk, block):\n"
+                     "    return pool * nblk + block\n")
+    assert rowlint.lint(root) == []
+
+
+def test_rowlint_rc103_pool_mutation(tmp_path):
+    root = _copy_tree(tmp_path)
+    mod = root / "src" / "repro" / "core" / "journal.py"
+    mod.write_text(mod.read_text()
+                   + "\n\ndef _mutant_write(engine, name, arr):\n"
+                     "    engine.pools[name] = arr\n")
+    assert _rules(rowlint.lint(root)) == {"RC103"}
+
+
+def test_rowlint_rc104_verb_without_mirror(tmp_path):
+    root = _copy_tree(tmp_path)
+    mod = root / "src" / "repro" / "core" / "rowclone.py"
+    src = mod.read_text()
+    verb = ('    def memswap(self, pairs):\n'
+            '        """Mutant verb: enqueues with no stream mirror."""\n'
+            '        for s, d in pairs:\n'
+            '            self._queues["default"].enqueue(0, s, d)\n'
+            '\n'
+            '    def memand(')
+    assert "    def memand(" in src
+    mod.write_text(src.replace("    def memand(", verb, 1))
+    found = rowlint.lint(root)
+    assert _rules(found) == {"RC104"}
+    # both halves of the rule fire: no mirror AND no check_docs pin
+    assert any("no\nCommandStream mirror" in v.message
+               or "no CommandStream mirror" in v.message for v in found)
+    assert any("check_docs pin" in v.message for v in found)
+
+
+def test_rowlint_rc104_dropped_pin(tmp_path):
+    # deleting a REQUIRED_SYMBOLS pin for an existing verb is caught too
+    root = _copy_tree(tmp_path)
+    docs = root / "tools" / "check_docs.py"
+    src = docs.read_text()
+    pin = '    "repro.core.stream.CommandStream.memcopy",\n'
+    assert pin in src
+    docs.write_text(src.replace(pin, "", 1))
+    found = rowlint.lint(root)
+    assert _rules(found) == {"RC104"}
+    assert any("memcopy" in v.message for v in found)
+
+
+# ---------------------------------------------------------------------------
+# sanitizer: seeded violations fail stopped, with the right check id
+# ---------------------------------------------------------------------------
+
+def _sane_engine(nblk=8):
+    alloc = SubarrayAllocator(nblk, 4, reserved_zero_per_slab=1)
+    pools = {
+        "k": jax.random.normal(jax.random.key(0), (nblk, 4, 8)),
+        "k_stage": jax.random.normal(jax.random.key(1), (nblk, 4, 8)),
+    }
+    return RowCloneEngine(pools, alloc, max_requests=64, use_fused=True,
+                          staging={"k_stage": "k"}, sanitize=True)
+
+
+def _pool_bytes(eng):
+    return {n: np.asarray(p).tobytes() for n, p in eng.pools.items()}
+
+
+def _assert_drain_fails(eng, rows, check):
+    before = _pool_bytes(eng)
+    with pytest.raises(SanitizerError) as ei:
+        eng._drain_rows(rows, pre_spaced=True)
+    assert check in {f.check for f in ei.value.report.findings}
+    assert not ei.value.report.ok
+    # fail-stop: the violating chunk never dispatched
+    assert _pool_bytes(eng) == before
+
+
+def test_sanitizer_catches_adjacent_war():
+    # row 1 writes block 0, which row 0 reads: the dropped-spacer race
+    _assert_drain_fails(_sane_engine(),
+                        [(OP_FPM_COPY, 0, 1), (OP_FPM_COPY, 2, 0)],
+                        "war-adjacency")
+
+
+def test_sanitizer_catches_raw_pair():
+    # row 1 reads block 1, which row 0 writes: must have been flush-split
+    _assert_drain_fails(_sane_engine(),
+                        [(OP_FPM_COPY, 0, 1), (OP_NOP, -1, -1),
+                         (OP_FPM_COPY, 1, 2)],
+                        "raw-waw-free")
+
+
+def test_sanitizer_catches_malformed_nop():
+    _assert_drain_fails(_sane_engine(), [(OP_NOP, 3, 7)],
+                        "nop-well-formed")
+
+
+def test_sanitizer_catches_misdeclared_dst():
+    eng = _sane_engine()
+    total = eng.group.total_blocks
+    # a bitwise row whose dst is outside the global id space
+    _assert_drain_fails(eng, [(OP_AND, pack_bitwise_src(1, 2, total),
+                               total + 5)],
+                        "operand-contract")
+
+
+def test_sanitizer_catches_unknown_opcode():
+    _assert_drain_fails(_sane_engine(), [(42, 0, 1)], "opcode-registry")
+
+
+def test_sanitizer_catches_staging_illegal_dst(monkeypatch):
+    # no shipped opcode forbids staging destinations, so tighten the
+    # registry entry for cross-pool copies and aim one at the stage ring
+    eng = _sane_engine()
+    sp = oc.OPCODES[oc.OP_CROSS_POOL_COPY]
+    monkeypatch.setitem(oc.OPCODES, oc.OP_CROSS_POOL_COPY,
+                        dataclasses.replace(sp, staging_dst_ok=False))
+    gid = eng.group.base("k_stage") + 1
+    _assert_drain_fails(eng, [(oc.OP_CROSS_POOL_COPY, 0, gid)],
+                        "staging-legality")
+
+
+def test_sanitizer_shadow_diff(monkeypatch):
+    # corrupt the real dispatch: the jnp oracle disagrees bitwise
+    eng = _sane_engine()
+    real = kops.fused_dispatch
+
+    def bad(pools, zero_blocks, cmds, **kw):
+        out = list(real(pools, zero_blocks, cmds, **kw))
+        out[0] = out[0].at[2].add(1.0)
+        return tuple(out)
+
+    monkeypatch.setattr(kops, "fused_dispatch", bad)
+    with pytest.raises(SanitizerError) as ei:
+        eng._drain_rows([(OP_FPM_COPY, 0, 1)], pre_spaced=True)
+    assert {f.check for f in ei.value.report.findings} == {"shadow-diff"}
+
+
+def test_sanitizer_clean_drain_reports():
+    eng = _sane_engine()
+    eng._drain_rows([(OP_FPM_COPY, 0, 1), (OP_NOP, -1, -1),
+                     (OP_FPM_COPY, 2, 3)], pre_spaced=True)
+    san = eng.sanitizer
+    assert san.tables_checked == 1 and san.shadow_runs == 1
+    assert all(r.ok for r in san.reports)
+    # reports[0] is the table receipt, reports[-1] the shadow receipt
+    assert san.reports[0].rows == 2
+    assert "war-adjacency" in san.reports[0].checks
+    assert san.reports[-1].checks == ("shadow-diff",)
+
+
+def test_sanitizer_plan_partition():
+    eng = mk_engine(16, 0, True)
+    san = DrainSanitizer(eng)
+    rows = [(OP_FPM_COPY, 0, 1), (OP_FPM_COPY, 8, 9)]
+    replicated = tuple([False] * len(eng.group))
+    plan = partition_commands(rows, n_shards=2, group=eng.group,
+                              replicated=replicated)
+    san.check_plan(rows, plan, replicated)          # exact partition: ok
+    assert san.plans_checked == 1
+    with pytest.raises(SanitizerError) as ei:
+        # a row the plan never partitioned: want/got sets diverge
+        san.check_plan(rows + [(OP_FPM_COPY, 4, 5)], plan, replicated)
+    assert "plan-partition" in {f.check for f in ei.value.report.findings}
+
+
+# ---------------------------------------------------------------------------
+# journal replay + packing-bound contract enforcement
+# ---------------------------------------------------------------------------
+
+def test_replay_rejects_unregistered_opcode():
+    eng = _sane_engine()
+    eng.journal.append(JournalRecord(stream="x", index=99,
+                                     rows=((42, 0, 1),)))
+    with pytest.raises(RecoveryError, match="opcode contract"):
+        eng.journal.replay(eng, after=98)
+
+
+def test_replay_rejects_malformed_padding():
+    eng = _sane_engine()
+    eng.journal.append(JournalRecord(stream="x", index=99,
+                                     rows=((OP_NOP, 3, 7),)))
+    with pytest.raises(RecoveryError, match="padding row"):
+        eng.journal.replay(eng, after=98)
+
+
+def test_replay_rejects_packed_src_outside_square():
+    eng = _sane_engine()
+    total = eng.group.total_blocks
+    eng.journal.append(JournalRecord(stream="x", index=99,
+                                     rows=((OP_AND, total * total, 1),)))
+    with pytest.raises(RecoveryError, match="opcode contract"):
+        eng.journal.replay(eng, after=98)
+
+
+def test_pack_bitwise_bound():
+    check_pack_total(MAX_PACK_BLOCKS)
+    with pytest.raises(ValueError):
+        check_pack_total(MAX_PACK_BLOCKS + 1)
+    with pytest.raises(ValueError):
+        pack_bitwise_src(0, 0, MAX_PACK_BLOCKS + 1)
+    s = pack_bitwise_src(3, 5, 100)
+    assert unpack_bitwise_src(s, 100) == (3, 5)
+    with pytest.raises(ValueError):
+        unpack_bitwise_src(100 * 100, 100)
+
+
+# ---------------------------------------------------------------------------
+# REPRO_SANITIZE=1: property streams, sanitized vs plain twin
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_sanitized_streams_bitwise_and_launch_parity(monkeypatch, seed):
+    rng = random.Random(seed)
+    prog = gen_program(rng, 16, 6)
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    eng_s = mk_engine(16, 0, True, seed=seed)
+    assert eng_s.sanitizer is not None     # env attached the sanitizer
+    monkeypatch.setenv("REPRO_SANITIZE", "0")
+    eng_p = mk_engine(16, 0, True, seed=seed)
+    assert eng_p.sanitizer is None
+
+    events_s = run_program(eng_s, prog)
+    events_p = run_program(eng_p, prog)
+
+    # the oracle shadow issues no launches: identical accounting
+    assert events_s == events_p
+    assert_pools_equal(eng_s, eng_p, ctx=f"sanitized twin seed={seed}")
+    san = eng_s.sanitizer
+    assert san.tables_checked > 0
+    assert san.shadow_runs == san.tables_checked
+    assert all(r.ok for r in san.reports)

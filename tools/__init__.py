@@ -1,0 +1,3 @@
+"""Repo tooling package (check_docs docstring lint, rowlint static
+checks) — importable so check_docs REQUIRED_SYMBOLS can pin the rowlint
+rule functions by dotted path."""

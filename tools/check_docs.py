@@ -14,8 +14,14 @@ from __future__ import annotations
 
 import importlib
 import inspect
+import os
 import pkgutil
 import sys
+
+# make `tools.rowlint` pins resolvable when run as `python
+# tools/check_docs.py` (sys.path[0] is tools/, not the repo root)
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(
+    __file__))))
 
 PACKAGES = ("repro.core", "repro.kernels", "repro.models.paged",
             "repro.launch")
@@ -51,6 +57,28 @@ REQUIRED_SYMBOLS = (
     "repro.launch.serve.xor_fold",
     "repro.launch.serve.page_fingerprint",
     "repro.launch.serve.ServingEngine.kv_bytes_live",
+    # opcode contract registry + drain sanitizer + rowlint (PR 9): every
+    # enqueueing engine verb's CommandStream mirror is pinned (rowlint
+    # RC104 cross-checks this list against the engine's call graph)
+    "repro.core.opcodes.OpSpec",
+    "repro.core.opcodes.opspec",
+    "repro.core.opcodes.row_rw",
+    "repro.core.opcodes.check_pack_total",
+    "repro.core.sanitizer.DrainSanitizer",
+    "repro.core.sanitizer.SanitizerReport",
+    "repro.core.sanitizer.SanitizerError",
+    "repro.core.sanitizer.sanitize_enabled",
+    "tools.rowlint.check_opcode_registry",
+    "tools.rowlint.check_stacked_ids",
+    "tools.rowlint.check_pool_mutation",
+    "tools.rowlint.check_verb_mirrors",
+    "repro.core.stream.CommandStream.memcopy",
+    "repro.core.stream.CommandStream.memcopy_cross",
+    "repro.core.stream.CommandStream.meminit",
+    "repro.core.stream.CommandStream.materialize_zeros",
+    "repro.core.stream.CommandStream.promote_staged",
+    "repro.core.stream.CommandStream.demote_to_spill",
+    "repro.core.stream.CommandStream.promote_spilled",
 )
 
 #: dataclass-generated or inherited members that need no prose of their own

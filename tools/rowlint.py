@@ -1,0 +1,295 @@
+"""rowlint — AST static checks for the opcode/addressing contracts.
+
+The opcode contract registry (src/repro/core/opcodes.py) is only a single
+source of truth while nothing bypasses it.  This linter walks the ASTs of
+every module under ``src/repro`` and fails (exit 1) on contract bypasses:
+
+* **RC101 opcode-registry** — an ``OP_*`` identifier with no
+  :class:`OpSpec` entry in the registry.  A new opcode must declare its
+  contract (arity, operand addressing, staging legality) before any
+  source file can reference it.
+* **RC102 stacked-id-arithmetic** — raw stacked-id arithmetic
+  (``pool * nblk + block`` / ``... * total_blocks + ...``) outside
+  ``core/poolspec.py``.  Global ids are built by ``PoolGroup.gid`` /
+  ``base()`` and decoded by ``locate()``; hand-rolled arithmetic silently
+  breaks when pools stop sharing one block count.
+* **RC103 pool-buffer-mutation** — direct assignment into an engine's
+  pool buffers (``engine.pools[name] = ...``) outside the engine's own
+  dispatch module (``core/rowclone.py``).  Every other byte movement
+  must ride the command queue (or carry an explicit waiver where the
+  write is a documented out-of-band path, e.g. decode-step jit results).
+* **RC104 stream-mirror** — a public ``RowCloneEngine`` verb that
+  (transitively) enqueues commands but has no same-named
+  ``CommandStream`` mirror, or no ``check_docs.py`` REQUIRED_SYMBOLS pin
+  for that mirror.  The async surface must cover every enqueueing verb,
+  and the pin keeps it from silently disappearing.
+
+Waive a single line with a trailing ``# rowlint: disable=RC1xx`` comment
+(comma-separate several rule ids).  Run from the repo root:
+
+    python tools/rowlint.py [--root DIR]
+
+Wired into ``make lint`` (and hence ``make test``).  The linter is
+stdlib-only: the registry is loaded by file path, never through the
+``repro`` package, so no jax import is needed.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import importlib.util
+import pathlib
+import re
+import sys
+from typing import Dict, List, Set
+
+#: method names that put a command on a queue — RC104's enqueue sinks
+ENQUEUE_METHODS = {"enqueue", "enqueue_copy", "enqueue_zero"}
+#: identifier names whose multiply-add use marks raw stacked-id math
+STACK_KEYWORDS = {"nblk", "total_blocks"}
+#: the one module allowed to do stacked-id arithmetic (it IS the codec)
+STACK_HOME = "core/poolspec.py"
+#: modules allowed to assign pool buffers (the dispatch/recovery paths)
+POOL_MUTATION_HOME = ("core/rowclone.py",)
+
+_OP_NAME = re.compile(r"^OP_[A-Z0-9_]+$")
+_WAIVER = re.compile(r"#\s*rowlint:\s*disable=([A-Z0-9, ]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One lint finding: rule id, file, line, and what went wrong."""
+
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+def load_registry_constants(root: pathlib.Path) -> Set[str]:
+    """Load the ``OP_*`` constant names of the opcode registry by FILE
+    path (``src/repro/core/opcodes.py``) — stdlib-only, so the linter
+    never imports the jax-heavy ``repro`` package."""
+    path = root / "src" / "repro" / "core" / "opcodes.py"
+    spec = importlib.util.spec_from_file_location("_rowlint_opcodes", path)
+    mod = importlib.util.module_from_spec(spec)
+    # dataclass processing resolves the defining module through
+    # sys.modules, so register before exec
+    sys.modules[spec.name] = mod
+    try:
+        spec.loader.exec_module(mod)
+    finally:
+        sys.modules.pop(spec.name, None)
+    return set(mod.CONSTANT_NAMES)
+
+
+def line_waivers(source: str) -> Dict[int, Set[str]]:
+    """Per-line rule waivers from ``# rowlint: disable=...`` comments."""
+    out: Dict[int, Set[str]] = {}
+    for i, line in enumerate(source.splitlines(), start=1):
+        m = _WAIVER.search(line)
+        if m:
+            out[i] = {r.strip() for r in m.group(1).split(",") if r.strip()}
+    return out
+
+
+def _terminal_name(node) -> str:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return ""
+
+
+def check_opcode_registry(tree: ast.AST, rel: str,
+                          constants: Set[str]) -> List[Violation]:
+    """RC101: every ``OP_*`` identifier (name or attribute) must be a
+    registered constant of the core/opcodes.py :data:`OPCODES` registry —
+    an opcode used before its contract is declared fails the lint."""
+    out = []
+    for node in ast.walk(tree):
+        name = _terminal_name(node)
+        if _OP_NAME.match(name) and name not in constants:
+            out.append(Violation(
+                "RC101", rel, node.lineno,
+                f"opcode constant {name} has no OpSpec entry in the "
+                "core/opcodes.py registry — declare its contract first"))
+    return out
+
+
+def check_stacked_ids(tree: ast.AST, rel: str) -> List[Violation]:
+    """RC102: raw stacked-id arithmetic (a multiply by ``nblk`` /
+    ``total_blocks`` inside an addition) is only legal in
+    ``core/poolspec.py`` — everywhere else global ids go through the
+    PoolGroup's ``gid``/``base``/``locate`` codec."""
+    if rel.endswith(STACK_HOME):
+        return []
+    out = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.BinOp)
+                and isinstance(node.op, ast.Add)):
+            continue
+        for side in (node.left, node.right):
+            if isinstance(side, ast.BinOp) and \
+                    isinstance(side.op, ast.Mult) and \
+                    any(_terminal_name(x) in STACK_KEYWORDS
+                        for x in (side.left, side.right)):
+                out.append(Violation(
+                    "RC102", rel, node.lineno,
+                    "raw stacked-id arithmetic (`pool * nblk + block`); "
+                    "build global ids with PoolGroup.gid()/base() "
+                    "(core/poolspec.py) instead"))
+    return out
+
+
+def check_pool_mutation(tree: ast.AST, rel: str) -> List[Violation]:
+    """RC103: assignment into a pool buffer (``<x>.pools[...] = ...``)
+    outside the engine's own dispatch module — all other bulk movement
+    must ride the command queue, or carry an explicit line waiver at a
+    documented out-of-band write site."""
+    if any(rel.endswith(h) for h in POOL_MUTATION_HOME):
+        return []
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, ast.AugAssign):
+            targets = [node.target]
+        else:
+            continue
+        for t in targets:
+            # only attribute access (`engine.pools[...]`) marks an
+            # engine-owned buffer; a bare local dict named `pools` (e.g.
+            # pool construction helpers) is not a mutation of live state
+            if isinstance(t, ast.Subscript) and \
+                    isinstance(t.value, ast.Attribute) and \
+                    t.value.attr == "pools":
+                out.append(Violation(
+                    "RC103", rel, node.lineno,
+                    "direct pool-buffer mutation bypasses the command "
+                    "queue (enqueue through the engine, or waive a "
+                    "documented out-of-band write)"))
+    return out
+
+
+def _class_methods(tree: ast.AST, cls_name: str) -> Dict[str,
+                                                         ast.FunctionDef]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == cls_name:
+            return {n.name: n for n in node.body
+                    if isinstance(n, ast.FunctionDef)}
+    return {}
+
+
+def check_verb_mirrors(root: pathlib.Path) -> List[Violation]:
+    """RC104: every public ``RowCloneEngine`` method that transitively
+    enqueues commands (reaches ``enqueue``/``enqueue_copy``/
+    ``enqueue_zero`` through self-calls) must have a same-named
+    ``CommandStream`` mirror AND a ``REQUIRED_SYMBOLS`` pin
+    (``repro.core.stream.CommandStream.<verb>``) in
+    ``tools/check_docs.py`` — the async surface covers every verb, and
+    the pin stops a mirror from silently vanishing."""
+    src = root / "src" / "repro" / "core"
+    eng_rel = "src/repro/core/rowclone.py"
+    eng_tree = ast.parse((src / "rowclone.py").read_text())
+    methods = _class_methods(eng_tree, "RowCloneEngine")
+    direct: Set[str] = set()
+    calls: Dict[str, Set[str]] = {}
+    for name, fn in methods.items():
+        calls[name] = set()
+        for node in ast.walk(fn):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)):
+                continue
+            if node.func.attr in ENQUEUE_METHODS:
+                direct.add(name)
+            if isinstance(node.func.value, ast.Name) and \
+                    node.func.value.id == "self" and \
+                    node.func.attr in methods:
+                calls[name].add(node.func.attr)
+    reaching = set(direct)
+    changed = True
+    while changed:
+        changed = False
+        for name, callees in calls.items():
+            if name not in reaching and callees & reaching:
+                reaching.add(name)
+                changed = True
+
+    stream_tree = ast.parse((src / "stream.py").read_text())
+    mirrors = set(_class_methods(stream_tree, "CommandStream"))
+    docs_tree = ast.parse((root / "tools" / "check_docs.py").read_text())
+    pins: Set[str] = set()
+    for node in ast.walk(docs_tree):
+        if isinstance(node, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == "REQUIRED_SYMBOLS"
+                for t in node.targets):
+            for c in ast.walk(node.value):
+                if isinstance(c, ast.Constant) and isinstance(c.value, str):
+                    pins.add(c.value)
+
+    out = []
+    for verb in sorted(reaching):
+        if verb.startswith("_"):
+            continue
+        line = methods[verb].lineno
+        if verb not in mirrors:
+            out.append(Violation(
+                "RC104", eng_rel, line,
+                f"engine verb {verb!r} enqueues commands but has no "
+                "CommandStream mirror (core/stream.py)"))
+        pin = f"repro.core.stream.CommandStream.{verb}"
+        if pin not in pins:
+            out.append(Violation(
+                "RC104", eng_rel, line,
+                f"engine verb {verb!r} has no check_docs pin {pin!r} in "
+                "tools/check_docs.py REQUIRED_SYMBOLS"))
+    return out
+
+
+def lint(root: pathlib.Path) -> List[Violation]:
+    """Run every rule over ``<root>/src/repro``; returns the surviving
+    (un-waived) violations, sorted by file and line."""
+    constants = load_registry_constants(root)
+    violations: List[Violation] = []
+    pkg = root / "src" / "repro"
+    for path in sorted(pkg.rglob("*.py")):
+        rel = str(path.relative_to(root))
+        source = path.read_text()
+        tree = ast.parse(source, filename=rel)
+        waived = line_waivers(source)
+        found = (check_opcode_registry(tree, rel, constants)
+                 + check_stacked_ids(tree, rel)
+                 + check_pool_mutation(tree, rel))
+        violations += [v for v in found
+                       if v.rule not in waived.get(v.line, ())]
+    violations += check_verb_mirrors(root)
+    return sorted(violations, key=lambda v: (v.path, v.line, v.rule))
+
+
+def main(argv=None) -> int:
+    """CLI entry: lint the tree, print violations, exit 1 on any."""
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=None,
+                    help="repo root (default: the linter's grandparent "
+                         "directory)")
+    args = ap.parse_args(argv)
+    root = pathlib.Path(args.root) if args.root else \
+        pathlib.Path(__file__).resolve().parent.parent
+    violations = lint(root)
+    for v in violations:
+        print(v)
+    if violations:
+        print(f"rowlint: {len(violations)} violation(s)")
+        return 1
+    print("rowlint: clean (RC101 opcode-registry, RC102 stacked-ids, "
+          "RC103 pool-mutation, RC104 stream-mirror)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
