@@ -29,13 +29,19 @@
 #                       preemption must hold <= 1.0 launch/round, keep
 #                       bitwise resume parity, and not regress p99 token
 #                       latency > 1.5x vs committed BENCH_dispatch.json
+#   make bench-autotune - profiler-driven constant sweep (bucket set,
+#                       overlap, staging-ring capacity, delta-signature
+#                       bound): writes configs/tuned/<backend>.json,
+#                       which the engines load at startup.  The --check
+#                       gate (run by bench-serve) fails if a committed
+#                       profile regresses us_per_flush vs the defaults
 #   make bench        - full paper-figure benchmark sweep
 
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 PY := PYTHONPATH=$(PYTHONPATH) python
 MESH_FLAGS := XLA_FLAGS=--xla_force_host_platform_device_count=8
 
-.PHONY: test test-mesh test-fault test-fast lint check-docs bench-smoke bench-serve bench-traffic bench
+.PHONY: test test-mesh test-fault test-fast lint check-docs bench-smoke bench-serve bench-traffic bench-autotune bench
 
 test: lint test-mesh test-fault
 	$(PY) -m pytest -x -q -m "not mesh and not fault"
@@ -59,10 +65,14 @@ bench-smoke:
 	$(PY) benchmarks/bench_dispatch.py
 
 bench-serve: bench-traffic
+	$(PY) benchmarks/bench_autotune.py --check
 	$(PY) benchmarks/bench_dispatch.py --serve-smoke
 
 bench-traffic:
 	$(PY) benchmarks/bench_dispatch.py --traffic-smoke
+
+bench-autotune:
+	$(PY) benchmarks/bench_autotune.py
 
 bench:
 	$(PY) -m benchmarks.run

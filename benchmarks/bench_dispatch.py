@@ -46,10 +46,17 @@ pages collapse into shared CoW blocks on admission, so peak resident KV
 bytes drop while greedy tokens stay bitwise-equal to a dedup-off twin
 at <= 1.0 launches/round.
 
+Schema v9 adds the ``autotune`` section: a summary of the committed
+per-backend TunedProfile (``configs/tuned/<backend>.json``, written by
+``benchmarks/bench_autotune.py``) — the constants the profiler-driven
+sweep picked and the measured ``us_per_flush`` win vs the hand-picked
+defaults — and all wall-clock loops now time through the shared
+``repro.obs`` stopwatch instead of raw ``time.perf_counter()``.
+
 Emits ``BENCH_dispatch.json``:
 
 {
-  "schema": "bench_dispatch/v8",
+  "schema": "bench_dispatch/v9",
   "backend": "cpu" | "tpu",
   "block": [page, KVH, D], "nblk": int, "pools": ["k", "v"],
   "rows": [{
@@ -151,6 +158,11 @@ Emits ``BENCH_dispatch.json``:
       "dedup_hits": int, "pages_shared": int, "bytes_saved": int,
       "tokens_match": bool,      # greedy tokens bitwise == dedup-off
       "max_launches_per_round": float   # gate: <= 1.0
+  },
+  "autotune": {                # committed TunedProfile summary (v9)
+      "profile": {...} | null, # TunedProfile.to_dict() minus sweep rows
+      "path": str,             # configs/tuned/<backend>.json
+      "tuned_vs_default_us_ratio": float  # < 1.0 = tuned wins
   }
 }
 
@@ -165,7 +177,6 @@ import json
 import os
 import subprocess
 import sys
-import time
 from typing import Dict, List, Optional
 
 import jax
@@ -174,6 +185,7 @@ import numpy as np
 
 from repro.core import RowCloneEngine, SubarrayAllocator
 from repro.kernels import fused_dispatch as fd
+from repro.obs import metrics as obs_metrics
 
 BLOCK = (16, 2, 64)          # page x KVH x head_dim
 NBLK = 1024
@@ -228,10 +240,10 @@ def _bench_path(use_fused: bool, batch: int, mesh=None,
         eng.stats = type(eng.stats)()   # per-flush byte accounting below
         times = []
         for r in range(reps):
-            t0 = time.perf_counter()
-            _flush_once(eng, batch, 100 + r)
-            jax.block_until_ready(list(eng.pools.values()))
-            times.append(time.perf_counter() - t0)
+            with obs_metrics.Stopwatch() as sw:
+                _flush_once(eng, batch, 100 + r)
+                jax.block_until_ready(list(eng.pools.values()))
+            times.append(sw.s)
     finally:
         fd.remove_launch_hook(hook)
     bytes_moved = eng.stats.bytes_fpm + eng.stats.bytes_psm + \
@@ -286,10 +298,10 @@ def _bench_bitwise_path(use_fused: bool, batch: int, reps: int = REPS):
         eng.stats = type(eng.stats)()
         times = []
         for r in range(reps):
-            t0 = time.perf_counter()
-            _flush_bitwise(eng, batch, 100 + r)
-            jax.block_until_ready(list(eng.pools.values()))
-            times.append(time.perf_counter() - t0)
+            with obs_metrics.Stopwatch() as sw:
+                _flush_bitwise(eng, batch, 100 + r)
+                jax.block_until_ready(list(eng.pools.values()))
+            times.append(sw.s)
     finally:
         fd.remove_launch_hook(hook)
     return eng, {
@@ -410,16 +422,16 @@ def _bench_serve_path(path: str, fused_staging: bool,
     try:
         for r in range(SERVE_ROUNDS):
             n0 = len(events)
-            t0 = time.perf_counter()
-            if r < SERVE_ADMIT_ROUNDS:
-                sids.append(eng.add_request(rng.integers(
-                    2, cfg.vocab_size, size=24).astype(np.int32)))
-            if r == SERVE_ADMIT_ROUNDS:
-                eng.fork(sids[0], 1)     # CoW splits on later appends
-            eng.decode_round()
-            jax.block_until_ready([eng.engine.pools["k"],
-                                   eng.engine.pools["v"]])
-            times.append(time.perf_counter() - t0)
+            with obs_metrics.Stopwatch() as sw:
+                if r < SERVE_ADMIT_ROUNDS:
+                    sids.append(eng.add_request(rng.integers(
+                        2, cfg.vocab_size, size=24).astype(np.int32)))
+                if r == SERVE_ADMIT_ROUNDS:
+                    eng.fork(sids[0], 1)     # CoW splits on later appends
+                eng.decode_round()
+                jax.block_until_ready([eng.engine.pools["k"],
+                                       eng.engine.pools["v"]])
+            times.append(sw.s)
             launches.append(len(events) - n0)
             admitted.append(r < SERVE_ADMIT_ROUNDS)
     finally:
@@ -468,14 +480,14 @@ def _bench_burst_path(path: str, double_buffer: bool) -> Dict:
     try:
         for r in range(BURST_ROUNDS):
             n0 = len(events)
-            t0 = time.perf_counter()
-            for _ in range(BURST_ADMITS):
-                eng.add_request(rng.integers(
-                    2, cfg.vocab_size, size=24).astype(np.int32))
-            eng.decode_round()
-            jax.block_until_ready([eng.engine.pools["k"],
-                                   eng.engine.pools["v"]])
-            times.append(time.perf_counter() - t0)
+            with obs_metrics.Stopwatch() as sw:
+                for _ in range(BURST_ADMITS):
+                    eng.add_request(rng.integers(
+                        2, cfg.vocab_size, size=24).astype(np.int32))
+                eng.decode_round()
+                jax.block_until_ready([eng.engine.pools["k"],
+                                       eng.engine.pools["v"]])
+            times.append(sw.s)
             launches.append(len(events) - n0)
     finally:
         fd.remove_launch_hook(hook)
@@ -950,10 +962,31 @@ def _run_mesh_section() -> Optional[Dict]:
     }
 
 
+def _autotune_section() -> Dict:
+    """Summarize the committed TunedProfile for this backend (schema v9):
+    which constants the autotuner picked and the measured win vs the
+    hand-picked defaults.  ``profile`` is null when nothing is committed
+    (run ``make bench-autotune`` to produce one)."""
+    from repro.obs.autotune import load_profile, profile_path
+    prof = load_profile()
+    path = str(profile_path())
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if path.startswith(repo_root + os.sep):        # keep committed JSON
+        path = os.path.relpath(path, repo_root)    # machine-independent
+    if prof is None:
+        return {"profile": None, "path": path}
+    ratio = (prof.us_per_flush / prof.baseline_us_per_flush
+             if prof.baseline_us_per_flush else None)
+    out = prof.to_dict()
+    out.pop("swept", None)           # full sweep rows live in the profile
+    return {"profile": out, "path": path,
+            "tuned_vs_default_us_ratio": ratio}
+
+
 def run(skip_mesh: bool = False, skip_serve: bool = False) -> Dict:
     """Full benchmark: single-device dispatch A/B, the mesh leg, the
-    serve_round/serve_traffic sections, and the v8 bitwise/dedup legs.
-    Returns the schema-v8 result dict."""
+    serve_round/serve_traffic sections, the v8 bitwise/dedup legs, and
+    the v9 autotune summary.  Returns the schema-v9 result dict."""
     rows = []
     for batch in BATCHES:
         for use_fused in (True, False):
@@ -963,7 +996,7 @@ def run(skip_mesh: bool = False, skip_serve: bool = False) -> Dict:
     speedup = (np.mean([r["us_per_flush"] for r in small_s]) /
                np.mean([r["us_per_flush"] for r in small_f]))
     return {
-        "schema": "bench_dispatch/v8",
+        "schema": "bench_dispatch/v9",
         "backend": jax.default_backend(),
         "block": list(BLOCK),
         "nblk": NBLK,
@@ -976,6 +1009,7 @@ def run(skip_mesh: bool = False, skip_serve: bool = False) -> Dict:
         else _run_traffic_section(skip_mesh),
         "bitwise": _run_bitwise_section(),
         "dedup_admit": None if skip_serve else _run_dedup_section(),
+        "autotune": _autotune_section(),
     }
 
 

@@ -18,7 +18,6 @@ deltas (the quantity the paper's energy numbers are made of).
 """
 from __future__ import annotations
 
-import time
 from typing import Dict, List
 
 import jax
@@ -28,6 +27,7 @@ import numpy as np
 from repro.configs import RowCloneConfig, get_config
 from repro.core.migration import execute as migrate_execute, plan_rebalance
 from repro.launch.serve import ServingEngine
+from repro.obs import metrics as obs_metrics
 from repro.launch.train import train_loop
 from repro.models import build_model, split_params
 
@@ -40,13 +40,13 @@ def _mk_engine(cfg, params, on: bool, max_seqs=16):
 def _forkbench(cfg, params, on: bool) -> Dict:
     eng = _mk_engine(cfg, params, on)
     rng = np.random.default_rng(0)
-    t0 = time.perf_counter()
-    sid = eng.add_request(rng.integers(2, cfg.vocab_size,
-                                       size=48).astype(np.int32))
-    eng.fork(sid, 4)
-    for _ in range(6):
-        eng.decode_round()
-    dt = time.perf_counter() - t0
+    with obs_metrics.Stopwatch() as sw:
+        sid = eng.add_request(rng.integers(2, cfg.vocab_size,
+                                           size=48).astype(np.int32))
+        eng.fork(sid, 4)
+        for _ in range(6):
+            eng.decode_round()
+    dt = sw.s
     s = eng.engine.stats
     return dict(wall_s=dt,
                 bytes_compute=s.bytes_baseline,
@@ -57,16 +57,16 @@ def _forkbench(cfg, params, on: bool) -> Dict:
 
 def _buz_init(cfg, params, on: bool) -> Dict:
     eng = _mk_engine(cfg, params, on, max_seqs=32)
-    t0 = time.perf_counter()
-    sids = []
-    for i in range(24):
-        sids.append(eng.cache.new_sequence(prompt_len=64))
-    if not on:
-        # baseline must materialize zeros for every fresh block
-        pend = eng.engine.alloc.pending_zero(
-            [b for s in sids for b in eng.cache.blocks_of(s)])
-        eng.engine.materialize_zeros(pend)
-    dt = time.perf_counter() - t0
+    with obs_metrics.Stopwatch() as sw:
+        sids = []
+        for i in range(24):
+            sids.append(eng.cache.new_sequence(prompt_len=64))
+        if not on:
+            # baseline must materialize zeros for every fresh block
+            pend = eng.engine.alloc.pending_zero(
+                [b for s in sids for b in eng.cache.blocks_of(s)])
+            eng.engine.materialize_zeros(pend)
+    dt = sw.s
     s = eng.engine.stats
     nblk = sum(len(eng.cache.blocks_of(s_)) for s_ in sids)
     return dict(wall_s=dt, blocks=nblk,
@@ -77,10 +77,10 @@ def _buz_init(cfg, params, on: bool) -> Dict:
 def _checkpoint(on: bool) -> Dict:
     import tempfile
     d = tempfile.mkdtemp()
-    t0 = time.perf_counter()
-    train_loop("yi-6b", steps=12, batch=2, seq_len=64, smoke=True,
-               ckpt_dir=d, checkpoint_every=3, log_every=100)
-    dt = time.perf_counter() - t0
+    with obs_metrics.Stopwatch() as sw:
+        train_loop("yi-6b", steps=12, batch=2, seq_len=64, smoke=True,
+                   ckpt_dir=d, checkpoint_every=3, log_every=100)
+    dt = sw.s
     return dict(wall_s=dt, checkpoints=4)
 
 
@@ -106,10 +106,10 @@ def _migrate(cfg, params, on: bool) -> Dict:
     for _ in range(4):
         sid = eng.cache.new_sequence(prompt_len=64, prefer_slab=0)
         eng.engine.alloc.mark_written(eng.cache.blocks_of(sid))
-    t0 = time.perf_counter()
-    plan = plan_rebalance(eng.cache)
-    stats = migrate_execute(plan, eng.cache, chunk_blocks=8)
-    dt = time.perf_counter() - t0
+    with obs_metrics.Stopwatch() as sw:
+        plan = plan_rebalance(eng.cache)
+        stats = migrate_execute(plan, eng.cache, chunk_blocks=8)
+    dt = sw.s
     return dict(wall_s=dt, moved=stats["moved_blocks"],
                 bytes_ici=eng.engine.stats.bytes_psm,
                 bytes_compute=eng.engine.stats.bytes_baseline)

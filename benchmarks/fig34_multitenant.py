@@ -40,7 +40,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 from typing import Dict, List
 
 import jax
@@ -48,6 +47,7 @@ import numpy as np
 
 from repro.configs import RowCloneConfig, get_config
 from repro.launch.scheduler import RequestScheduler, TenantSpec
+from repro.obs import metrics as obs_metrics
 from repro.launch.serve import ServingEngine
 from repro.models import build_model, split_params
 
@@ -65,29 +65,30 @@ def _run_mix(cfg, params, n_copy: int, n_plain: int, on: bool) -> float:
     for _ in range(n_copy):
         copyers.append(eng.add_request(
             rng.integers(2, cfg.vocab_size, size=32).astype(np.int32)))
-    t0 = time.perf_counter()
-    for r in range(ROUNDS):
-        # copy-intensive tenants fork every round (children freed after one
-        # round — a churning CoW workload)
-        kids = []
-        for sid in copyers:
-            kids.extend(eng.fork(sid, 1))
-        if not on:
-            # baseline: forks must physically copy every block up front.
-            # The remap goes through the cache's PUBLIC resettlement API
-            # (remap_blocks frees the stale blocks and rebuilds the
-            # device tables) — no reaching into private cache state
+    with obs_metrics.Stopwatch() as sw:
+        for r in range(ROUNDS):
+            # copy-intensive tenants fork every round (children freed
+            # after one round — a churning CoW workload)
+            kids = []
+            for sid in copyers:
+                kids.extend(eng.fork(sid, 1))
+            if not on:
+                # baseline: forks must physically copy every block up
+                # front.  The remap goes through the cache's PUBLIC
+                # resettlement API (remap_blocks frees the stale blocks
+                # and rebuilds the device tables) — no reaching into
+                # private cache state
+                for sid in kids:
+                    fresh = []
+                    for b in eng.cache.blocks_of(sid):
+                        nb = eng.engine.alloc.alloc_near(b)
+                        eng.engine.memcopy([(b, nb)])
+                        fresh.append(nb)
+                    eng.cache.remap_blocks(sid, fresh)
+            eng.decode_round()
             for sid in kids:
-                fresh = []
-                for b in eng.cache.blocks_of(sid):
-                    nb = eng.engine.alloc.alloc_near(b)
-                    eng.engine.memcopy([(b, nb)])
-                    fresh.append(nb)
-                eng.cache.remap_blocks(sid, fresh)
-        eng.decode_round()
-        for sid in kids:
-            eng.free(sid)
-    return time.perf_counter() - t0
+                eng.free(sid)
+    return sw.s
 
 
 def run() -> List[Dict]:
@@ -143,8 +144,7 @@ def _arrivals(pattern: str, rng, round_index: int) -> Dict[str, int]:
 
 
 def _pct(xs: List[float], q: float) -> float:
-    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs \
-        else 0.0
+    return obs_metrics.percentile(xs, q)
 
 
 @dataclasses.dataclass
@@ -204,9 +204,9 @@ def run_traffic(pattern: str = "poisson", rounds: int = 48, seed: int = 0,
                     .astype(np.int32),
                     max_new_tokens=max_new_tokens)
                 last_emit[rid] = r
-        t0 = time.perf_counter()
-        rep = sched.step()
-        round_times.append(time.perf_counter() - t0)
+        with obs_metrics.Stopwatch() as sw:
+            rep = sched.step()
+        round_times.append(sw.s)
         launches.append(rep.launches)
         for rid, req in sched.requests.items():
             new = req.generated - prev_gen.get(rid, 0)

@@ -20,7 +20,6 @@ EXPERIMENTS.md).
 """
 from __future__ import annotations
 
-import time
 from typing import Dict, List
 
 import jax
@@ -28,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import RowCloneEngine, SubarrayAllocator
+from repro.obs import metrics as obs_metrics
 from repro.kernels import ops as kops
 
 # --- TPU v5e path model (per byte) ---
@@ -45,11 +45,11 @@ BLOCK = (64, 8, 128)        # page x KVH x head_dim  (bf16: 128 KiB -> per-
 
 def _time(fn, *args, n=20):
     fn(*args)  # compile/warm
-    t0 = time.perf_counter()
-    for _ in range(n):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / n * 1e6  # us
+    with obs_metrics.Stopwatch() as sw:
+        for _ in range(n):
+            out = fn(*args)
+        jax.block_until_ready(out)
+    return sw.us / n
 
 
 def run() -> List[Dict]:
@@ -90,9 +90,9 @@ def run() -> List[Dict]:
     srcs = alloc.alloc(m, prefer_slab=0)
     eng.meminit(srcs)             # lazy-zero so copies alias
     dsts = alloc.alloc(m, prefer_slab=0)
-    t0 = time.perf_counter()
-    eng.memcopy(list(zip(srcs, dsts)))
-    us = (time.perf_counter() - t0) * 1e6 / m
+    with obs_metrics.Stopwatch() as sw:
+        eng.memcopy(list(zip(srcs, dsts)))
+    us = sw.us / m
     rows.append(dict(mech="copy-zi-alias", measured_us=us, derived_us=0.0,
                      energy_uJ=0.0, occupancy_us=0.0, bytes_compute=0,
                      bytes_ici=0))
@@ -124,9 +124,9 @@ def run() -> List[Dict]:
                      bytes_ici=0))
 
     b2 = alloc.alloc(m, prefer_slab=1)
-    t0 = time.perf_counter()
-    eng.meminit(b2)
-    us = (time.perf_counter() - t0) * 1e6 / m
+    with obs_metrics.Stopwatch() as sw:
+        eng.meminit(b2)
+    us = sw.us / m
     rows.append(dict(mech="zero-zi", measured_us=us, derived_us=0.0,
                      energy_uJ=0.0, occupancy_us=0.0, bytes_compute=0,
                      bytes_ici=0))

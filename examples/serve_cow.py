@@ -10,7 +10,6 @@ Table 1 / Fig 2 quantities.
     PYTHONPATH=src python examples/serve_cow.py --arch yi-6b --requests 4
 """
 import argparse
-import time
 
 import jax
 import numpy as np
@@ -18,6 +17,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import BlockRef
 from repro.launch.serve import ServingEngine
+from repro.obs import metrics as obs_metrics
 from repro.models import build_model, split_params
 
 
@@ -78,19 +78,19 @@ def main():
         p = np.exp(z) / np.exp(z).sum()
         return int(rng.choice(len(p), p=p))
 
-    t0 = time.time()
     # keep only the tickets' COUNTERS: a retained ticket pins its
     # post-drain pool snapshot alive on backends without donation
     rounds = moved_rounds = total_cmds = max_launches = 0
-    for step in range(args.new_tokens):
-        eng.decode_round(sample_fn=sampler)
-        t = eng.last_ticket
-        rounds += 1
-        if t is not None and t.moved:
-            moved_rounds += 1
-            total_cmds += t.commands
-            max_launches = max(max_launches, t.launches)
-    dt = time.time() - t0
+    with obs_metrics.Stopwatch() as sw:
+        for step in range(args.new_tokens):
+            eng.decode_round(sample_fn=sampler)
+            t = eng.last_ticket
+            rounds += 1
+            if t is not None and t.moved:
+                moved_rounds += 1
+                total_cmds += t.commands
+                max_launches = max(max_launches, t.launches)
+    dt = sw.s
     n = len(eng.cache.seqs)
     print(f"[serve] generated {args.new_tokens} tokens x {n} sequences in "
           f"{dt:.1f}s ({args.new_tokens * n / dt:.1f} tok/s on CPU)")

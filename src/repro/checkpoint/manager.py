@@ -73,7 +73,7 @@ class CheckpointManager:
             np.savez(os.path.join(tmp, "arrays.npz"), **host)
             manifest = {
                 "step": step,
-                "time": time.time(),
+                "time": time.time(),  # rowlint: disable=RC105 (manifest time-of-day stamp)
                 "keys": sorted(host),
                 "shapes": {k: list(v.shape) for k, v in host.items()},
                 "dtypes": {k: str(v.dtype) for k, v in host.items()},

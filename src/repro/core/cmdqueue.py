@@ -61,13 +61,50 @@ import numpy as np
 from repro.core.opcodes import (ALL_PRIMARY, BITWISE_OPS, OP_AND,
                                 OP_BASELINE_COPY, OP_CROSS_POOL_COPY,
                                 OP_FPM_COPY, OP_NOP, OP_NOT, OP_OR,
-                                OP_PSM_COPY, OP_ZERO_INIT, keys_clash,
-                                opspec, pack_bitwise_src, row_rw,
-                                unpack_bitwise_src)
+                                OP_PSM_COPY, OP_ZERO_INIT, OPCODE_NAMES,
+                                keys_clash, opspec, pack_bitwise_src,
+                                row_rw, unpack_bitwise_src)
 from repro.core.poolspec import PoolGroup
+from repro.obs import metrics as obs_metrics
 
-#: padding buckets — the only command-table lengths ever jit-compiled
-BUCKETS: Tuple[int, ...] = (8, 32, 128, 512)
+#: the hand-picked bucket set (what :func:`set_buckets` restores on None)
+DEFAULT_BUCKETS: Tuple[int, ...] = (8, 32, 128, 512)
+
+#: padding buckets — the only command-table lengths ever jit-compiled.
+#: Module-global so a tuned profile can retarget it process-wide
+#: (:func:`set_buckets`); read through :func:`get_buckets`/
+#: :func:`top_bucket` rather than a from-import, which would freeze the
+#: import-time value.
+BUCKETS: Tuple[int, ...] = DEFAULT_BUCKETS
+
+
+def set_buckets(buckets: Optional[Sequence[int]]) -> Tuple[int, ...]:
+    """Retarget the process-wide bucket set (``None`` restores
+    :data:`DEFAULT_BUCKETS`).  The autotuner's knob: buckets must be
+    strictly increasing positive ints; every later flush pads to the new
+    set (pool bytes are unaffected — padding rows are ``OP_NOP``).
+    Returns the installed tuple."""
+    global BUCKETS
+    if buckets is None:
+        BUCKETS = DEFAULT_BUCKETS
+        return BUCKETS
+    bs = tuple(int(b) for b in buckets)
+    if not bs or any(b <= 0 for b in bs) or list(bs) != sorted(set(bs)):
+        raise ValueError(f"buckets must be strictly increasing positive "
+                         f"ints, got {buckets!r}")
+    BUCKETS = bs
+    return BUCKETS
+
+
+def get_buckets() -> Tuple[int, ...]:
+    """The current process-wide bucket set (see :func:`set_buckets`)."""
+    return BUCKETS
+
+
+def top_bucket() -> int:
+    """The largest bucket — the overflow chunk size every drain path
+    splits long tables at."""
+    return BUCKETS[-1]
 
 
 def bucket_size(n: int) -> int:
@@ -449,6 +486,17 @@ class CommandQueue:
         # pool indices (ALL_PRIMARY = the block in every primary pool)
         self._pending_dsts: Dict[int, Set[int]] = {}
         self._pending_srcs: Dict[int, Set[int]] = {}
+        # wall-clock of the oldest pending row (queue-residency metric);
+        # None while empty — armed on first enqueue, popped by the drain
+        self._first_enqueue_t: Optional[float] = None
+
+    def pop_residency_us(self) -> float:
+        """Microseconds the OLDEST pending row sat queued (0.0 when the
+        residency clock is unarmed) — read-and-reset, called once per
+        drain so ``FlushTicket.timing.queue_residency_us`` measures
+        first-enqueue -> flush for each flush independently."""
+        t0, self._first_enqueue_t = self._first_enqueue_t, None
+        return 0.0 if t0 is None else (obs_metrics.now() - t0) * 1e6
 
     def __len__(self) -> int:
         return len(self._cmds)
@@ -521,9 +569,13 @@ class CommandQueue:
         if any(self.has_pending_write(k) for k in skeys) \
                 or self.has_pending_write(dkey):
             self.stats.hazard_flushes += 1
+            obs_metrics.inc("queue.hazard_flushes", stream=self.name)
             self.flush()
         elif self.has_pending_read(dkey):
             self.stats.war_hazards += 1
+            obs_metrics.inc("queue.war_hazards", stream=self.name)
+        if self._first_enqueue_t is None:
+            self._first_enqueue_t = obs_metrics.now()
         self._cmds.append((int(opcode), int(src), int(dst)))
         self._pending_dsts.setdefault(dkey[1], set()).add(dkey[0])
         for skey in skeys:
@@ -532,6 +584,8 @@ class CommandQueue:
         if note is not None:
             note(self)      # engine tracks queues with pending work only
         self.stats.enqueued += 1
+        obs_metrics.inc("queue.enqueued", stream=self.name,
+                        opcode=OPCODE_NAMES.get(int(opcode), str(opcode)))
         self.stats.max_pending = max(self.stats.max_pending, len(self._cmds))
 
     def enqueue_copy(self, opcode: int,
@@ -605,7 +659,9 @@ class CommandQueue:
             for skey in skeys:
                 self._pending_srcs.setdefault(skey[1], set()).add(skey[0])
         self.stats.retired += removed
+        obs_metrics.inc("queue.retired", removed, stream=self.name)
         if not kept:
+            self._first_enqueue_t = None
             drained = getattr(self.engine, "_note_drained", None)
             if drained is not None:
                 drained(self)
@@ -621,6 +677,7 @@ class CommandQueue:
         cmds, self._cmds = self._cmds, []
         self._pending_dsts = {}
         self._pending_srcs = {}
+        self._first_enqueue_t = None
         drained = getattr(self.engine, "_note_drained", None)
         if drained is not None:
             drained(self)
@@ -629,6 +686,10 @@ class CommandQueue:
 
 __all__ = [
     "BUCKETS",
+    "DEFAULT_BUCKETS",
+    "set_buckets",
+    "get_buckets",
+    "top_bucket",
     "ALL_PRIMARY",
     "bucket_size",
     "space_war_rows",

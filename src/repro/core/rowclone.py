@@ -64,16 +64,17 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.core.allocator import SubarrayAllocator
-from repro.core.cmdqueue import (BITWISE_OPS, BUCKETS, CommandQueue, OP_AND,
+from repro.core.cmdqueue import (BITWISE_OPS, CommandQueue, OP_AND,
                                  OP_BASELINE_COPY, OP_CROSS_POOL_COPY,
                                  OP_FPM_COPY, OP_NOP, OP_NOT, OP_OR,
                                  OP_PSM_COPY, OP_ZERO_INIT, bucket_size,
                                  pack_bitwise_src, partition_commands,
-                                 space_war_rows, unpack_bitwise_src)
+                                 space_war_rows, top_bucket,
+                                 unpack_bitwise_src)
 from repro.core.journal import (AbortedFlush, JournalRecord, PoolSnapshot,
                                 RecoveryError, RecoveryReport, TicketJournal)
-from repro.core.opcodes import (ALL_PRIMARY, check_pack_total, opspec,
-                                row_rw)
+from repro.core.opcodes import (ALL_PRIMARY, OPCODE_NAMES, check_pack_total,
+                                opspec, row_rw)
 from repro.core.poolspec import BlockRef, PoolGroup
 from repro.core.sanitizer import DrainSanitizer, sanitize_enabled
 from repro.core.stream import CommandStream
@@ -81,6 +82,9 @@ from repro.kernels import ops as kops
 from repro.kernels.fused_dispatch import (DrainInfo, _bitcast_uint,
                                           check_drain, notify_launch)
 from repro.models.paged import pool_shard_axes, pool_shard_count
+from repro.obs import metrics as obs_metrics
+from repro.obs.autotune import load_profile
+from repro.obs.trace import FlushTiming, span
 
 
 @dataclasses.dataclass
@@ -131,7 +135,8 @@ class RowCloneEngine:
                  block_axis: int = 0, use_fused: bool = True,
                  staging: Optional[Dict[str, str]] = None,
                  group: Optional[PoolGroup] = None,
-                 sanitize: Optional[bool] = None):
+                 sanitize: Optional[bool] = None,
+                 overlap: Optional[bool] = None):
         """``block_axis``: which pool axis indexes blocks.  0 = flat pools
         (nblk, ...); 1 = layer-stacked serving pools (L, nblk, ...) where a
         logical block is L physical pages moved together (L independent
@@ -166,7 +171,15 @@ class RowCloneEngine:
         through the jnp oracle on host copies with a bitwise diff.
         ``None`` (the default) reads the ``REPRO_SANITIZE`` env var.  The
         sanitizer issues no extra device launches, so launch accounting
-        (and the 1-launch-per-flush gates) is unchanged."""
+        (and the 1-launch-per-flush gates) is unchanged.
+
+        ``overlap``: the fused Pallas drain's overlapped-DMA toggle.
+        ``None`` (the default) resolves through this backend's
+        :class:`~repro.obs.autotune.TunedProfile` when one is committed
+        under ``configs/tuned/`` (kwarg > profile > built-in True) —
+        per-engine autotuned knobs apply here; process-wide ones
+        (bucket set, delta-signature bound) only via the explicit
+        ``repro.obs.autotune.apply_profile``."""
         self.alloc = allocator
         self.mesh = mesh
         self.enable_fpm = enable_fpm
@@ -175,6 +188,14 @@ class RowCloneEngine:
         self.max_requests = max_requests
         self.block_axis = block_axis
         self.use_fused = use_fused
+        #: this backend's committed TunedProfile, or None (obs/autotune.py)
+        self.profile = load_profile()
+        if overlap is None:
+            overlap = self.profile.overlap if self.profile is not None \
+                else True
+        self.overlap = bool(overlap)
+        #: FlushTiming of the most recent drain (FlushTicket.timing source)
+        self.last_drain_timing: Optional[FlushTiming] = None
         if group is None:
             group = PoolGroup.from_pools(pools, block_axis=block_axis,
                                          staging=staging)
@@ -243,6 +264,12 @@ class RowCloneEngine:
         # of the slot — the queues' source-hazard tracking)
         self._stage_free: List[int] = list(range(stage_cap - 1, -1, -1))
         self._stage_inflight: List[int] = []
+        # slots parked above the adaptive ring limit (set_stage_limit):
+        # excluded from stage_blocks until the limit is raised again
+        self._stage_parked: List[int] = []
+        # a degraded recover()'s sticky ring cap: the adaptive ring may
+        # shrink below it but regrow-on-demand never exceeds it
+        self._stage_degraded_cap: Optional[int] = None
         # preemption demotion: primary pool name -> its spill twin, plus
         # the engine-owned demotion slot space (a sub-range of the spill
         # pools handed over by enable_demotion — the rest of the spill
@@ -361,8 +388,57 @@ class RowCloneEngine:
     def stage_slots_free(self) -> int:
         """Staging slots currently on the free list (slots whose queued
         promotion has not drained are excluded — admission policy can
-        pre-check capacity without forcing an early flush)."""
+        pre-check capacity without forcing an early flush; slots parked
+        above the adaptive ring limit are excluded too)."""
         return len(self._stage_free)
+
+    @property
+    def stage_limit(self) -> Optional[int]:
+        """The adaptive staging-ring clamp (:meth:`set_stage_limit`):
+        usable slots are ids ``< stage_limit``.  None = full capacity."""
+        return self._stage_limit
+
+    def set_stage_limit(self, limit: Optional[int]) -> int:
+        """Clamp the staging ring to ``limit`` usable slots (ids below
+        the limit); slots at or above it park until the limit is raised.
+
+        The adaptive-ring primitive: the serving layer shrinks the ring
+        under sustained low admission pressure (the occupancy gauge says
+        most slots never fill) and regrows it on demand — in-flight and
+        reserved slots are untouched either way, only FREE slots move
+        between the usable and parked lists, so a shrink never invalidates
+        outstanding reservations.  ``None`` (or ``limit >=``
+        :attr:`stage_capacity`) restores the full ring.  A degraded
+        ``recover()`` routes through here too.  Returns the effective
+        usable-slot count."""
+        cap = self.stage_capacity
+        if limit is None or int(limit) >= cap:
+            self._stage_limit = None
+            self._stage_free.extend(self._stage_parked)
+            self._stage_parked = []
+            effective = cap
+        else:
+            lim = max(int(limit), 0)
+            self._stage_limit = lim
+            usable = [s for s in self._stage_free if s < lim] + \
+                [s for s in self._stage_parked if s < lim]
+            parked = [s for s in self._stage_free if s >= lim] + \
+                [s for s in self._stage_parked if s >= lim]
+            self._stage_free = usable
+            self._stage_parked = parked
+            effective = lim
+        obs_metrics.set_gauge("engine.stage_limit", effective)
+        return effective
+
+    def _reclaim_stage_slots(self, slots: Sequence[int]) -> None:
+        """Route freed staging slots to the free list, or to the parked
+        list when the adaptive ring limit excludes their ids."""
+        lim = self._stage_limit
+        if lim is None:
+            self._stage_free.extend(slots)
+            return
+        for s in slots:
+            (self._stage_free if s < lim else self._stage_parked).append(s)
 
     @property
     def spill_capacity(self) -> int:
@@ -502,6 +578,8 @@ class RowCloneEngine:
         rows = [(int(op), int(s), int(d)) for op, s, d in rows]
         idx = self._flush_index
         self._flush_index += 1
+        residency_us = queue.pop_residency_us() if queue is not None else 0.0
+        t_drain = obs_metrics.now()
         if pre_spaced or not self._flush_spacing():
             spaced = rows
         else:
@@ -513,42 +591,65 @@ class RowCloneEngine:
         self._last_plan_sig = None
         name = queue.name if queue is not None else "replay"
         launches = 0
-        top = BUCKETS[-1]
-        for ci, lo in enumerate(range(0, len(spaced), top)):
-            chunk = spaced[lo:lo + top]
-            try:
-                check_drain(DrainInfo(
-                    flush=idx, chunk=ci,
-                    n_commands=sum(1 for r in chunk if r[0] >= 0),
-                    n_pools=len(self.pools), engine=self))
-                table = np.full((bucket_size(len(chunk)), 3), OP_NOP,
-                                np.int32)
-                table[:len(chunk)] = np.asarray(chunk, np.int32)
-                san = self.sanitizer
-                shadow_pre = None
-                if san is not None:
-                    san.check_table(table, flush=idx, chunk=ci)
-                    shadow_pre = san.shadow_snapshot()
-                launches += self._dispatch_table(table, len(chunk),
-                                                 queue=queue)
-                if shadow_pre is not None:
-                    san.check_shadow(shadow_pre, table)
-            except Exception:
-                if record:
-                    done = spaced[:lo]
-                    if any(op >= 0 for op, _, _ in done):
-                        # the chunks that DID dispatch mutated the pools:
-                        # journal them so replay reproduces the partial
-                        # state exactly (recover() re-drains the suffix
-                        # as its own record)
-                        self.journal.append(JournalRecord(
-                            stream=name, index=idx, rows=tuple(done),
-                            plan_sig=self._last_plan_sig,
-                            launches=launches, aborted=True))
-                    self._aborted.append(AbortedFlush(
-                        queue=name, index=idx, rows=tuple(rows),
-                        suffix=tuple(spaced[lo:])))
-                raise
+        table_len = 0
+        top = top_bucket()
+        with span("drain", stream=name, flush=idx):
+            for ci, lo in enumerate(range(0, len(spaced), top)):
+                chunk = spaced[lo:lo + top]
+                try:
+                    check_drain(DrainInfo(
+                        flush=idx, chunk=ci,
+                        n_commands=sum(1 for r in chunk if r[0] >= 0),
+                        n_pools=len(self.pools), engine=self))
+                    table = np.full((bucket_size(len(chunk)), 3), OP_NOP,
+                                    np.int32)
+                    table[:len(chunk)] = np.asarray(chunk, np.int32)
+                    table_len += len(table)
+                    san = self.sanitizer
+                    shadow_pre = None
+                    if san is not None:
+                        san.check_table(table, flush=idx, chunk=ci)
+                        shadow_pre = san.shadow_snapshot()
+                    launches += self._dispatch_table(table, len(chunk),
+                                                     queue=queue)
+                    if shadow_pre is not None:
+                        san.check_shadow(shadow_pre, table)
+                except Exception:
+                    if record:
+                        done = spaced[:lo]
+                        if any(op >= 0 for op, _, _ in done):
+                            # the chunks that DID dispatch mutated the
+                            # pools: journal them so replay reproduces the
+                            # partial state exactly (recover() re-drains
+                            # the suffix as its own record)
+                            self.journal.append(JournalRecord(
+                                stream=name, index=idx, rows=tuple(done),
+                                plan_sig=self._last_plan_sig,
+                                launches=launches, aborted=True))
+                        self._aborted.append(AbortedFlush(
+                            queue=name, index=idx, rows=tuple(rows),
+                            suffix=tuple(spaced[lo:])))
+                    raise
+        drain_us = (obs_metrics.now() - t_drain) * 1e6
+        self.last_drain_timing = FlushTiming(
+            queue_residency_us=residency_us, drain_us=drain_us,
+            table_len=table_len, launches=launches)
+        if obs_metrics.metrics_enabled():
+            op_counts: Dict[int, int] = {}
+            spacers = 0
+            for op, _s, _d in spaced:
+                if op < 0:
+                    spacers += 1
+                else:
+                    op_counts[op] = op_counts.get(op, 0) + 1
+            for op, cnt in op_counts.items():
+                obs_metrics.inc("drain.rows", cnt, stream=name,
+                                opcode=OPCODE_NAMES.get(op, str(op)))
+            if spacers:
+                obs_metrics.inc("drain.spacer_rows", spacers, stream=name)
+            obs_metrics.inc("drain.launches", launches, stream=name)
+            obs_metrics.observe("drain.flush_us", drain_us, stream=name)
+            obs_metrics.observe("drain.table_len", table_len, stream=name)
         if record:
             self.journal.append(JournalRecord(
                 stream=name, index=idx, rows=tuple(spaced),
@@ -667,12 +768,14 @@ class RowCloneEngine:
         # re-promotes or releases via its demoted-sequence registry)
         self._spill_inflight = []
         cap = self.stage_capacity
-        if degraded_stage_capacity is not None:
-            cap = min(cap, int(degraded_stage_capacity))
-            self._stage_limit = cap
-        else:
-            self._stage_limit = None
         self._stage_free = list(range(cap - 1, -1, -1))
+        self._stage_parked = []
+        self._stage_limit = None
+        if degraded_stage_capacity is not None:
+            self._stage_degraded_cap = min(cap, int(degraded_stage_capacity))
+            self.set_stage_limit(self._stage_degraded_cap)
+        else:
+            self._stage_degraded_cap = None
         replayed = 0
         if restored and snapshot is not None:
             replayed = self.journal.replay(self, after=snapshot.index)
@@ -740,6 +843,7 @@ class RowCloneEngine:
         """
         counts = {"fpm": 0, "psm": 0, "baseline": 0}
         bb = self._block_bytes()
+        aliased = 0
         for s, d in pairs:
             s, d = self._primary_id(s), self._primary_id(d)
             # ZI "in-cache copy" fast path: copying a lazily-zero block is a
@@ -748,6 +852,7 @@ class RowCloneEngine:
                 self.alloc.mark_zero([d])
                 self.stats.alias_copies += 1
                 self.stats.bytes_avoided += bb
+                aliased += 1
                 continue
             # mark the dst written NOW, not after the loop: a later pair in
             # this same call may read it as a source (chained (a,b),(b,c))
@@ -774,6 +879,14 @@ class RowCloneEngine:
                 self.stats.baseline_copies += 1
                 self.stats.bytes_baseline += bb
             self._cur_queue.enqueue(op, s, d)
+        if obs_metrics.metrics_enabled():
+            for mech, c in counts.items():
+                if c:
+                    obs_metrics.inc("engine.bytes_moved", c * bb,
+                                    mechanism=mech)
+            if aliased:
+                obs_metrics.inc("engine.bytes_avoided", aliased * bb,
+                                mechanism="alias")
         self._autoflush()
         return counts
 
@@ -820,6 +933,9 @@ class RowCloneEngine:
                                     self.group.gid(d))
             self.stats.cross_pool_copies += 1
             self.stats.bytes_cross += self._pool_block_bytes(d.pool)
+            obs_metrics.inc("engine.bytes_moved",
+                            self._pool_block_bytes(d.pool),
+                            mechanism="cross", pool=d.pool)
             if d.pool in self.primary_names:
                 # dst now holds real data in dst_pool; a block can only
                 # carry the lazy-zero bit when every primary pool's bytes
@@ -884,6 +1000,9 @@ class RowCloneEngine:
             self._cur_queue.enqueue(op, pack_bitwise_src(a, b, total), d)
             self.stats.bitwise_ops += 1
             self.stats.bytes_bitwise += self._pool_block_bytes(dref.pool)
+            obs_metrics.inc("engine.bytes_moved",
+                            self._pool_block_bytes(dref.pool),
+                            mechanism="bitwise", pool=dref.pool)
             if dref.pool in self.primary_names:
                 # dst now holds computed (generally non-zero) bytes
                 self.alloc.mark_written([int(dref.block)])
@@ -943,7 +1062,7 @@ class RowCloneEngine:
     def release_stage_blocks(self, ids: Sequence[int]) -> None:
         """Return reserved staging slots that were never promoted (e.g. an
         admission that failed after ``stage_blocks``)."""
-        self._stage_free.extend(int(b) for b in ids)
+        self._reclaim_stage_slots([int(b) for b in ids])
 
     def promote_staged(self, pairs: Sequence[Tuple[int, object]]) -> int:
         """Promote staged prefill pages into primary pool blocks.
@@ -1108,7 +1227,7 @@ class RowCloneEngine:
                     still.append(slot)
                 else:
                     freed.append(slot)
-            self._stage_free.extend(freed)
+            self._reclaim_stage_slots(freed)
             self._stage_inflight = still
         if self._spill_inflight:
             pidx = [self.group.index(name)
@@ -1139,6 +1258,9 @@ class RowCloneEngine:
             self.alloc.mark_zero(ids)
             self.stats.zero_lazy += len(ids)
             self.stats.bytes_avoided += len(ids) * self._block_bytes()
+            obs_metrics.inc("engine.bytes_avoided",
+                            len(ids) * self._block_bytes(),
+                            mechanism="zero_lazy")
             return 0
         self.materialize_zeros(ids)
         return len(ids)
@@ -1216,7 +1338,8 @@ class RowCloneEngine:
                 new = kops.fused_dispatch(pools, self._get_zero_blocks(),
                                           jnp.asarray(table),
                                           block_axis=self.block_axis,
-                                          primary=self.group.primary)
+                                          primary=self.group.primary,
+                                          overlap=self.overlap)
                 for name, arr in zip(self.pools, new):
                     self.pools[name] = arr
                 self.stats.launches += 1

@@ -44,6 +44,7 @@ import numpy as np
 
 from repro.core.cmdqueue import CommandQueue
 from repro.core.poolspec import BlockRef
+from repro.obs.trace import FlushTiming, span
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +77,9 @@ class FlushTicket:
     #: writes only) never serializes against decode's primary traffic
     _engine: Any = dataclasses.field(repr=False)
     _pools: Dict[str, Any] = dataclasses.field(repr=False)
+    #: drain timing for this flush (queue residency, drain wall-clock,
+    #: padded table length, launches) — None for an empty flush
+    timing: Optional[FlushTiming] = None
 
     @property
     def moved(self) -> bool:
@@ -109,7 +113,8 @@ class FlushTicket:
         stays valid even after decode donates the primaries."""
         import jax
         self._check_live(self.touched)
-        jax.block_until_ready([self._pools[n] for n in self.touched])
+        with span("ticket-wait", stream=self.stream, seq=self.seq):
+            jax.block_until_ready([self._pools[n] for n in self.touched])
         return self
 
     def block_state(self, ref: Union[BlockRef, int]
@@ -267,13 +272,16 @@ class CommandStream:
         rows = self.queue.pending
         n = len(rows)
         index = self.engine.next_flush_index if n else -1
-        launches = self.queue.flush()
+        with span("flush", stream=self.name, seq=self._seq):
+            launches = self.queue.flush()
+        timing = getattr(self.engine, "last_drain_timing", None) if n else None
         ticket = FlushTicket(
             stream=self.name, seq=self._seq, commands=n, launches=launches,
             war_hazards=self.queue.stats.war_hazards,
             spacer_rows=self.queue.stats.spacer_rows,
             index=index, touched=self.engine._touched_pools(rows),
-            _engine=self.engine, _pools=dict(self.engine.pools))
+            _engine=self.engine, _pools=dict(self.engine.pools),
+            timing=timing)
         self._seq += 1
         return ticket
 

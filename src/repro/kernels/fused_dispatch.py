@@ -611,11 +611,40 @@ def _sharded_runner(mesh, pool_axes: Tuple[str, ...], deltas: Tuple[int, ...],
     return jax.jit(mapped, donate_argnums=(4,))
 
 
+#: the hand-picked jit-cache bound (:func:`set_max_delta_signatures`
+#: restores it on None)
+DEFAULT_MAX_DELTA_SIGNATURES = 8
+
 #: distinct (deltas, t) collective signatures compiled per (mesh, pool
 #: structure) before plans fold to the full delta set (jit-cache bound)
-MAX_DELTA_SIGNATURES = 8
+MAX_DELTA_SIGNATURES = DEFAULT_MAX_DELTA_SIGNATURES
 
 _DELTA_SIGS: dict = {}
+
+
+def set_max_delta_signatures(n: Optional[int]) -> int:
+    """Retarget the process-wide delta-signature jit-cache bound (``None``
+    restores :data:`DEFAULT_MAX_DELTA_SIGNATURES`) — the autotuner's
+    knob: a larger bound compiles more collective bodies before folding;
+    a smaller one folds (and pads) sooner.  Clears the per-(mesh, pools)
+    signature memory so the new bound applies from a clean slate.
+    Returns the installed bound."""
+    global MAX_DELTA_SIGNATURES
+    if n is None:
+        MAX_DELTA_SIGNATURES = DEFAULT_MAX_DELTA_SIGNATURES
+    else:
+        n = int(n)
+        if n < 1:
+            raise ValueError(f"max_delta_signatures must be >= 1, got {n}")
+        MAX_DELTA_SIGNATURES = n
+    _DELTA_SIGS.clear()
+    return MAX_DELTA_SIGNATURES
+
+
+def max_delta_signatures() -> int:
+    """The current delta-signature bound (see
+    :func:`set_max_delta_signatures`)."""
+    return MAX_DELTA_SIGNATURES
 
 
 def _bound_delta_signatures(plan, key):

@@ -74,7 +74,8 @@ def _fused_ref_jit(cmds, zero_blocks, pools, *, block_axis, primary=None):
 
 def fused_dispatch(pools, zero_blocks, cmds, *, block_axis: int = 0,
                    use_pallas: Optional[bool] = None,
-                   primary: Optional[tuple] = None):
+                   primary: Optional[tuple] = None,
+                   overlap: bool = True):
     """One launch for a whole flushed command table over every pool.
 
     See kernels/fused_dispatch.py for the opcode table and contract.  On
@@ -82,7 +83,9 @@ def fused_dispatch(pools, zero_blocks, cmds, *, block_axis: int = 0,
     ``use_pallas=True`` to run the kernel body in interpret mode.
     ``primary`` is the per-pool role vector (True = plain opcodes move the
     block there); pools may carry different block counts — cross-pool rows
-    use global prefix-sum-base ids.
+    use global prefix-sum-base ids.  ``overlap`` selects the kernel's
+    overlapped vs serial DMA drain (a tuned-profile knob; the jnp
+    reference has no DMA pipeline, so it ignores it).
     """
     from repro.kernels.fused_dispatch import _as_primary
     primary = _as_primary(primary, len(pools))
@@ -90,7 +93,7 @@ def fused_dispatch(pools, zero_blocks, cmds, *, block_axis: int = 0,
         return fused_dispatch_pallas(pools, zero_blocks, cmds,
                                      block_axis=block_axis,
                                      interpret=_interpret(),
-                                     primary=primary)
+                                     primary=primary, overlap=overlap)
     out = _fused_ref_jit(cmds, tuple(zero_blocks), tuple(pools),
                          block_axis=block_axis, primary=primary)
     notify_launch(int(cmds.shape[0]), len(out), "fused")

@@ -13,7 +13,6 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 import argparse   # noqa: E402
 import json       # noqa: E402
 import re         # noqa: E402
-import time       # noqa: E402
 import traceback  # noqa: E402
 from typing import Dict, Optional, Tuple  # noqa: E402
 
@@ -28,6 +27,7 @@ from repro.launch.mesh import (make_production_mesh, sharding_for,  # noqa: E402
                                tree_shardings)
 from repro.launch.train import TrainState, build_jit_train_step  # noqa: E402
 from repro.models import build_model, split_params  # noqa: E402
+from repro.obs import metrics as obs_metrics  # noqa: E402
 from repro.optim import AdamWState, init_state  # noqa: E402
 
 # TPU v5e hardware model (per chip)
@@ -214,15 +214,15 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool) -> Dict:
     if not ok:
         row.update(status="skip", reason=reason)
         return row
-    t0 = time.time()
+    t0 = obs_metrics.now()
     mesh = make_production_mesh(multi_pod=multi_pod)
     try:
         with mesh:
             jitted, args = build_cell(arch, shape_name, mesh)
             lowered = jitted.lower(*args)
-            t_lower = time.time() - t0
+            t_lower = obs_metrics.now() - t0
             compiled = lowered.compile()
-            t_compile = time.time() - t0 - t_lower
+            t_compile = obs_metrics.now() - t0 - t_lower
             n_chips = int(np.prod(mesh.devices.shape))
             row.update(status="ok", lower_s=round(t_lower, 1),
                        compile_s=round(t_compile, 1),

@@ -52,7 +52,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -67,6 +66,8 @@ from repro.kernels.fused_dispatch import notify_launch
 from repro.launch.mesh import pool_shard_count
 from repro.models import build_model, split_params
 from repro.models.paged import batch_shard_count, make_serving_pools
+from repro.obs import metrics as obs_metrics
+from repro.obs.autotune import load_profile
 
 
 @dataclasses.dataclass
@@ -136,6 +137,10 @@ class ServingEngine:
     #: KV block has a staging slot) instead of a recycled ring
     FULL_TWIN = 0
 
+    #: adaptive-ring observation window: rounds of sustained low
+    #: admission pressure before the staging ring shrinks
+    RING_WINDOW = 4
+
     def __init__(self, cfg, params, mesh=None, max_seqs: int = 16,
                  max_blocks_per_seq: int = 64, num_slabs: int = 4,
                  rc: Optional[RowCloneConfig] = None, impl: str = "ref",
@@ -146,7 +151,8 @@ class ServingEngine:
                  fault_plan=None, auto_recover: bool = False,
                  ckpt_pages: int = 0, ckpt_dir: Optional[str] = None,
                  ckpt_window: Optional[int] = None,
-                 spill_pages: int = 0, dedup_admit: bool = False):
+                 spill_pages: int = 0, dedup_admit: bool = False,
+                 adaptive_ring: bool = True):
         """``max_admit_pages`` sizes the staging pools as a RING of that
         many slots instead of a full-size twin of the KV pools — slots
         recycle at every round's flush, so the ring only needs to hold
@@ -179,6 +185,17 @@ class ServingEngine:
         ckpt tick) and runs :meth:`recover` in place — the next round
         serves normally.  Admissions evicted by a recovery land in
         ``evicted_sids`` for the caller to re-admit.
+
+        ``adaptive_ring=True`` (the default) lets the staging ring track
+        admission pressure: after :data:`RING_WINDOW` consecutive rounds
+        whose admitted pages peak at or below half the usable ring, the
+        ring shrinks (``engine.set_stage_limit``) to twice that peak —
+        free slots above the limit park, cutting the ring's working set;
+        an admission that would not fit the clamped ring regrows it to
+        full capacity BEFORE reserving slots, so admissions never fail
+        or force an early flush because of the clamp.  The
+        ``serve.ring_occupancy`` / ``serve.ring_limit`` gauges and the
+        shrink/regrow counters ride the obs metrics registry.
 
         Dedup-on-admit: ``dedup_admit=True`` (fused staging only) keeps a
         prefix registry of chained page fingerprints
@@ -217,6 +234,13 @@ class ServingEngine:
         shards = pool_shard_count(mesh)
         align = int(np.lcm(num_slabs, shards))
         nblk = -(-nblk // align) * align
+        if max_admit_pages is None:
+            # tuned-profile precedence: an autotuned ring size applies
+            # only when the caller did not pass an explicit kwarg
+            # (kwarg > profile > policy derivation)
+            prof = load_profile()
+            if prof is not None and prof.ring_capacity is not None:
+                max_admit_pages = int(prof.ring_capacity)
         if max_admit_pages is None:
             # admission-policy derivation: the ring must hold one round's
             # worth of staged pages (kwarg stays as an explicit override)
@@ -331,6 +355,13 @@ class ServingEngine:
         self.dedup_hits = 0           #: admissions that shared >= 1 page
         self.dedup_pages_shared = 0   #: prompt pages satisfied by sharing
         self.dedup_bytes_saved = 0    #: KV bytes those pages never took
+        #: adaptive staging-ring controller (fused staging only): shrink
+        #: under sustained low admission pressure, regrow on demand
+        self.adaptive_ring = bool(adaptive_ring) and fused_staging
+        self._ring_window: List[int] = []   #: admitted pages, last rounds
+        self._round_admitted_pages = 0
+        self.ring_shrinks = 0         #: times the controller clamped the ring
+        self.ring_regrows = 0         #: times demand re-opened the full ring
         self.last_recovery: Optional[RecoveryReport] = None
         self.pool_ckpt: Optional[PoolCheckpoint] = None
         if self.ckpt_pages:
@@ -401,6 +432,19 @@ class ServingEngine:
         if self.fused_staging:
             ordinal = self._admission_ordinal
             self._admission_ordinal += 1
+            rce = self.engine
+            ceil = rce._stage_degraded_cap   # None = full capacity
+            if self.adaptive_ring and rce.stage_limit is not None \
+                    and rce.stage_slots_free < len(blocks) \
+                    and (ceil is None or rce.stage_limit < ceil):
+                # regrow on demand: re-open the ring (up to a degraded
+                # recovery's sticky cap) BEFORE reserving, so the
+                # adaptive clamp never fails or early-flushes an
+                # admission the un-clamped ring could hold
+                rce.set_stage_limit(ceil)
+                self.ring_regrows += 1
+                self._ring_window = []
+                obs_metrics.inc("serve.ring_regrows")
             stage_ids = self.engine.stage_blocks(len(blocks))
             try:
                 if self.fault_plan is not None:
@@ -435,6 +479,7 @@ class ServingEngine:
             self.engine.pools["v_stage"] = v_stage  # rowlint: disable=RC103
             # the promotion rides the round's serve stream (drained by
             # decode_round's stream.flush — one launch for the round)
+            self._round_admitted_pages += len(stage_ids)
             pairs = list(zip(stage_ids, blocks))
             if self.dedup_admit:
                 pairs = self._dedup_pages(sid, prompt, stage_ids, blocks)
@@ -725,14 +770,41 @@ class ServingEngine:
     def _post_flush(self) -> None:
         """Round-boundary bookkeeping after the stream flush drained the
         round's bulk movement: staged admissions and resumed sequences
-        are no longer in flight, and demoted victims' blocks (whose
-        demote reads just drained) go back to the allocator."""
+        are no longer in flight, demoted victims' blocks (whose demote
+        reads just drained) go back to the allocator, and the adaptive
+        staging-ring controller takes its per-round sample."""
         self._staged_sids = []
         self._pending_promotions.clear()
         self._resumed = []
         if self._free_after_flush:
             self.engine.alloc.free(self._free_after_flush)
             self._free_after_flush = []
+        eng = self.engine
+        if not eng.staging:
+            return
+        effective = eng.stage_limit if eng.stage_limit is not None \
+            else eng.stage_capacity
+        in_use = eng.stage_capacity - eng.stage_slots_free \
+            - len(eng._stage_parked)
+        obs_metrics.set_gauge("serve.ring_occupancy", in_use)
+        obs_metrics.set_gauge("serve.ring_limit", effective)
+        if not self.adaptive_ring:
+            return
+        self._ring_window.append(self._round_admitted_pages)
+        self._round_admitted_pages = 0
+        if len(self._ring_window) < self.RING_WINDOW:
+            return
+        peak = max(self._ring_window)
+        self._ring_window = []
+        # sustained low pressure: a whole window peaked at <= half the
+        # usable ring -> clamp to 2x that peak (regrow-on-demand covers
+        # any later burst; never below one slot)
+        if effective > 1 and peak <= effective // 2:
+            new_limit = max(2 * peak, 1)
+            if new_limit < effective:
+                eng.set_stage_limit(new_limit)
+                self.ring_shrinks += 1
+                obs_metrics.inc("serve.ring_shrinks")
 
     def _decode_fn(self, params, k_pools, v_pools, table, mask, base,
                    seq_lens, tokens, slot_index):
@@ -884,10 +956,10 @@ def main():
         kids = eng.fork(sids[0], args.fork)
         print(f"[serve] forked seq {sids[0]} -> {kids} "
               f"(CoW shares: {eng.engine.alloc.stats.cow_shares})")
-    t0 = time.time()
-    for step in range(args.steps):
-        eng.decode_round()
-    dt = time.time() - t0
+    with obs_metrics.Stopwatch() as sw:
+        for step in range(args.steps):
+            eng.decode_round()
+    dt = sw.s
     n_live = len(eng.cache.seqs)
     print(f"[serve] {args.steps} rounds x {n_live} seqs in {dt:.2f}s "
           f"({args.steps * n_live / dt:.1f} tok/s)")

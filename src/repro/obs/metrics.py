@@ -1,0 +1,263 @@
+"""Process-local metrics: counters, gauges, histograms — and the one
+sanctioned timing clock.
+
+The engine's bulk movement is instrumented with labeled series cheap
+enough to stay ON in production: ``CommandQueue`` counts enqueues and
+hazard flushes per stream, the fused drain counts rows per opcode and
+observes per-flush wall-clock, ``ServingEngine`` gauges staging-ring
+occupancy, and the scheduler counts per-lane admission/preemption
+traffic.  Everything lands in one :class:`MetricsRegistry` (the process
+registry, :func:`registry`), keyed by ``(name, sorted(labels))`` —
+plain dict increments, no locks, no device work.
+
+This module is also the repo's ONE home for raw wall-clock reads:
+:func:`now`, :class:`Stopwatch`, and :func:`time_us` wrap
+``time.perf_counter`` so every engine path and every benchmark reports
+the same statistic (:func:`percentile` / :func:`summarize`).  rowlint
+rule RC105 rejects ``time.perf_counter()`` / ``time.time()`` calls
+anywhere else (waivable per line at documented sites).
+
+Metrics can be disabled wholesale (:func:`set_metrics_enabled`) — the
+bitwise-parity contract: pools and launch accounting are identical
+metrics-on vs metrics-off (``tests/test_obs.py``), because nothing here
+ever touches device buffers.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
+
+#: a series key: (metric name, sorted (label, value) pairs)
+SeriesKey = Tuple[str, Tuple[Tuple[str, str], ...]]
+
+
+def now() -> float:
+    """Monotonic wall-clock seconds (``time.perf_counter``) — the repo's
+    single sanctioned timing source (rowlint RC105 enforces this)."""
+    return time.perf_counter()
+
+
+def _key(name: str, labels: Dict[str, object]) -> SeriesKey:
+    return (name, tuple(sorted((k, str(v)) for k, v in labels.items())))
+
+
+class MetricsRegistry:
+    """One process's metric store: counters, gauges, and histograms with
+    labeled series.
+
+    Series are keyed ``(name, sorted(labels))``; emission is a dict
+    increment (always-on cheap).  ``enabled=False`` turns every
+    emission into a no-op without touching callers — the registry is
+    host-side only, so enabling/disabling can never change pool bytes
+    or launch accounting."""
+
+    def __init__(self) -> None:
+        self.enabled = True
+        self.counters: Dict[SeriesKey, float] = {}
+        self.gauges: Dict[SeriesKey, float] = {}
+        self.hists: Dict[SeriesKey, List[float]] = {}
+        #: histogram sample cap per series (oldest samples drop)
+        self.hist_cap = 4096
+
+    # -- emission ------------------------------------------------------
+    def inc(self, name: str, value: float = 1.0, **labels) -> None:
+        """Add ``value`` to the counter series ``name{labels}``."""
+        if not self.enabled:
+            return
+        k = _key(name, labels)
+        self.counters[k] = self.counters.get(k, 0.0) + value
+
+    def set_gauge(self, name: str, value: float, **labels) -> None:
+        """Set the gauge series ``name{labels}`` to ``value``."""
+        if not self.enabled:
+            return
+        self.gauges[_key(name, labels)] = float(value)
+
+    def observe(self, name: str, value: float, **labels) -> None:
+        """Append ``value`` to the histogram series ``name{labels}``
+        (bounded at ``hist_cap`` samples; oldest drop)."""
+        if not self.enabled:
+            return
+        h = self.hists.setdefault(_key(name, labels), [])
+        h.append(float(value))
+        if len(h) > self.hist_cap:
+            del h[:len(h) - self.hist_cap]
+
+    # -- reads ---------------------------------------------------------
+    def get(self, name: str, **labels) -> float:
+        """Counter value of ``name{labels}`` (0.0 when never emitted)."""
+        return self.counters.get(_key(name, labels), 0.0)
+
+    def gauge_value(self, name: str, **labels) -> Optional[float]:
+        """Gauge value of ``name{labels}``, or None when never set."""
+        return self.gauges.get(_key(name, labels))
+
+    def hist(self, name: str, **labels) -> List[float]:
+        """Histogram samples of ``name{labels}`` (copy; [] when empty)."""
+        return list(self.hists.get(_key(name, labels), ()))
+
+    def series(self, name: str) -> Dict[Tuple[Tuple[str, str], ...], float]:
+        """Every counter series under ``name``: label tuple -> value."""
+        return {k[1]: v for k, v in self.counters.items() if k[0] == name}
+
+    def snapshot(self) -> Dict[str, Dict]:
+        """Plain-dict dump of every series (counters/gauges/hist
+        summaries) — the ``FlushTicket``-level stats export."""
+        def fmt(k: SeriesKey) -> str:
+            name, labels = k
+            if not labels:
+                return name
+            inner = ",".join(f"{a}={b}" for a, b in labels)
+            return f"{name}{{{inner}}}"
+        return {
+            "counters": {fmt(k): v for k, v in self.counters.items()},
+            "gauges": {fmt(k): v for k, v in self.gauges.items()},
+            "histograms": {fmt(k): summarize(v)
+                           for k, v in self.hists.items()},
+        }
+
+    def reset(self) -> None:
+        """Drop every series (tests and sweep harness isolation)."""
+        self.counters.clear()
+        self.gauges.clear()
+        self.hists.clear()
+
+
+#: the process registry every instrumented module emits into
+_REGISTRY = MetricsRegistry()
+
+
+def registry() -> MetricsRegistry:
+    """The process-local :class:`MetricsRegistry` (one per process)."""
+    return _REGISTRY
+
+
+def inc(name: str, value: float = 1.0, **labels) -> None:
+    """Increment a counter on the process registry (see
+    :meth:`MetricsRegistry.inc`)."""
+    _REGISTRY.inc(name, value, **labels)
+
+
+def set_gauge(name: str, value: float, **labels) -> None:
+    """Set a gauge on the process registry (see
+    :meth:`MetricsRegistry.set_gauge`)."""
+    _REGISTRY.set_gauge(name, value, **labels)
+
+
+def observe(name: str, value: float, **labels) -> None:
+    """Observe a histogram sample on the process registry (see
+    :meth:`MetricsRegistry.observe`)."""
+    _REGISTRY.observe(name, value, **labels)
+
+
+def metrics_enabled() -> bool:
+    """Is the process registry currently recording emissions?"""
+    return _REGISTRY.enabled
+
+
+def set_metrics_enabled(flag: bool) -> bool:
+    """Enable/disable the process registry; returns the PREVIOUS state.
+    Off turns every emission into a no-op — pool bytes and launch
+    accounting are identical either way (host-side only)."""
+    prev = _REGISTRY.enabled
+    _REGISTRY.enabled = bool(flag)
+    return prev
+
+
+# ---------------------------------------------------------------------------
+# timing helpers — the shared statistic every bench reports
+# ---------------------------------------------------------------------------
+
+class Stopwatch:
+    """Context-manager wall-clock timer over :func:`now`.
+
+    >>> with Stopwatch() as sw:
+    ...     work()
+    >>> sw.us       # elapsed microseconds
+    """
+
+    def __init__(self) -> None:
+        self.start = 0.0
+        self.end: Optional[float] = None
+
+    def __enter__(self) -> "Stopwatch":
+        self.start = now()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.end = now()
+
+    @property
+    def s(self) -> float:
+        """Elapsed seconds (running total until the context exits)."""
+        return (self.end if self.end is not None else now()) - self.start
+
+    @property
+    def us(self) -> float:
+        """Elapsed microseconds."""
+        return self.s * 1e6
+
+
+def time_us(fn: Callable[[], object], *, warmup: int = 2,
+            reps: int = 5) -> List[float]:
+    """Run ``fn`` ``warmup`` times untimed, then ``reps`` timed — returns
+    the per-rep wall-clock in MICROSECONDS.  The shared bench timing
+    loop: feed the result to :func:`percentile` / :func:`summarize` so
+    every benchmark reports the same statistic."""
+    for _ in range(warmup):
+        fn()
+    out = []
+    for _ in range(reps):
+        t0 = now()
+        fn()
+        out.append((now() - t0) * 1e6)
+    return out
+
+
+def percentile(xs: Iterable[float], q: float) -> float:
+    """The ``q``-th percentile of ``xs`` (linear interpolation; 0.0 on an
+    empty input) — numpy-free so the linter and tooling can import it."""
+    data = sorted(float(x) for x in xs)
+    if not data:
+        return 0.0
+    if len(data) == 1:
+        return data[0]
+    pos = (len(data) - 1) * (q / 100.0)
+    lo = int(pos)
+    hi = min(lo + 1, len(data) - 1)
+    frac = pos - lo
+    return data[lo] * (1.0 - frac) + data[hi] * frac
+
+
+def summarize(xs: Iterable[float]) -> Dict[str, float]:
+    """p50/p90/p99 + mean/min/max/n summary of a sample list — the one
+    percentile summary every bench and RoundReport uses."""
+    data = [float(x) for x in xs]
+    if not data:
+        return {"n": 0, "p50": 0.0, "p90": 0.0, "p99": 0.0,
+                "mean": 0.0, "min": 0.0, "max": 0.0}
+    return {
+        "n": len(data),
+        "p50": percentile(data, 50),
+        "p90": percentile(data, 90),
+        "p99": percentile(data, 99),
+        "mean": sum(data) / len(data),
+        "min": min(data),
+        "max": max(data),
+    }
+
+
+__all__ = [
+    "MetricsRegistry",
+    "registry",
+    "inc",
+    "set_gauge",
+    "observe",
+    "metrics_enabled",
+    "set_metrics_enabled",
+    "now",
+    "Stopwatch",
+    "time_us",
+    "percentile",
+    "summarize",
+]

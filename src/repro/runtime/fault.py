@@ -33,12 +33,12 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-import time
 from typing import Callable, Dict, Iterator, List, Optional, Set, Tuple
 
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
+from repro.obs import metrics as obs_metrics
 from repro.kernels.fused_dispatch import (DrainInfo, add_drain_guard,
                                           remove_drain_guard)
 
@@ -164,7 +164,7 @@ class HeartbeatLedger:
         self._t0: Optional[float] = None
 
     def step_start(self) -> None:
-        self._t0 = time.monotonic()
+        self._t0 = obs_metrics.now()
 
     def step_end(self, step: int) -> Optional[StragglerReport]:
         if self._t0 is None:
@@ -172,7 +172,7 @@ class HeartbeatLedger:
             # thread observing a step it didn't open): no timing to
             # record, not an error
             return None
-        dt = time.monotonic() - self._t0
+        dt = obs_metrics.now() - self._t0
         self._t0 = None
         self.times.append(dt)
         hist = self.times[-self.window:]

@@ -5,6 +5,12 @@ import os
 # test_multidevice.py.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+# Tests must not depend on a committed configs/tuned/ profile: engines
+# would silently resolve overlap/ring_capacity from it and results would
+# change whenever the autotuner is re-run.  test_obs.py re-enables
+# loading per-test via monkeypatched REPRO_NO_TUNED/REPRO_TUNED_DIR.
+os.environ.setdefault("REPRO_NO_TUNED", "1")
+
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)

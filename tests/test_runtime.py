@@ -65,7 +65,7 @@ def test_straggler_detection(monkeypatch):
     # steps flake under load (a 2x scheduler hiccup IS a straggler)
     from repro.runtime import fault as fault_mod
     clock = {"t": 0.0}
-    monkeypatch.setattr(fault_mod.time, "monotonic", lambda: clock["t"])
+    monkeypatch.setattr(fault_mod.obs_metrics, "now", lambda: clock["t"])
     ledger = HeartbeatLedger(window=20, threshold=2.0)
     for step in range(8):
         ledger.step_start()

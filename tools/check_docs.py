@@ -24,7 +24,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(
     __file__))))
 
 PACKAGES = ("repro.core", "repro.kernels", "repro.models.paged",
-            "repro.launch")
+            "repro.launch", "repro.obs")
 
 #: load-bearing public symbols that must EXIST (and hence get linted):
 #: guards against the async-stream API surface silently disappearing or
@@ -79,6 +79,20 @@ REQUIRED_SYMBOLS = (
     "repro.core.stream.CommandStream.promote_staged",
     "repro.core.stream.CommandStream.demote_to_spill",
     "repro.core.stream.CommandStream.promote_spilled",
+    # obs subsystem (telemetry + profiler-driven autotuning): metric
+    # registry, the one sanctioned clock, spans, and the tuned-profile
+    # startup surface
+    "repro.obs.metrics.MetricsRegistry",
+    "repro.obs.metrics.registry",
+    "repro.obs.metrics.now",
+    "repro.obs.metrics.Stopwatch",
+    "repro.obs.metrics.summarize",
+    "repro.obs.trace.span",
+    "repro.obs.trace.FlushTiming",
+    "repro.obs.autotune.TunedProfile",
+    "repro.obs.autotune.load_profile",
+    "repro.obs.autotune.apply_profile",
+    "tools.rowlint.check_raw_clocks",
 )
 
 #: dataclass-generated or inherited members that need no prose of their own

@@ -23,6 +23,15 @@ every module under ``src/repro`` and fails (exit 1) on contract bypasses:
   ``CommandStream`` mirror, or no ``check_docs.py`` REQUIRED_SYMBOLS pin
   for that mirror.  The async surface must cover every enqueueing verb,
   and the pin keeps it from silently disappearing.
+* **RC105 raw-clock** — a raw ``time.time()`` / ``time.perf_counter()``
+  / ``time.monotonic()`` (or ``_ns`` variant) call outside
+  ``repro/obs``.  All timing rides the obs clock
+  (``repro.obs.metrics.now`` / ``Stopwatch`` / ``time_us``) so spans,
+  histograms and benchmarks agree on one time source; genuine
+  wall-clock-of-day sites (e.g. checkpoint metadata timestamps) carry a
+  line waiver.  Unlike the other rules this one also walks
+  ``benchmarks/`` and ``examples/`` — ad-hoc bench timing is exactly
+  what it exists to catch.
 
 Waive a single line with a trailing ``# rowlint: disable=RC1xx`` comment
 (comma-separate several rule ids).  Run from the repo root:
@@ -52,6 +61,9 @@ STACK_KEYWORDS = {"nblk", "total_blocks"}
 STACK_HOME = "core/poolspec.py"
 #: modules allowed to assign pool buffers (the dispatch/recovery paths)
 POOL_MUTATION_HOME = ("core/rowclone.py",)
+#: ``time`` module callables RC105 bans outside the obs subsystem
+TIME_FUNCS = {"time", "perf_counter", "perf_counter_ns", "monotonic",
+              "monotonic_ns"}
 
 _OP_NAME = re.compile(r"^OP_[A-Z0-9_]+$")
 _WAIVER = re.compile(r"#\s*rowlint:\s*disable=([A-Z0-9, ]+)")
@@ -176,6 +188,29 @@ def check_pool_mutation(tree: ast.AST, rel: str) -> List[Violation]:
     return out
 
 
+def check_raw_clocks(tree: ast.AST, rel: str) -> List[Violation]:
+    """RC105: raw ``time.*`` clock calls outside ``repro/obs`` — timing
+    goes through the obs clock (``repro.obs.metrics.now``/``Stopwatch``/
+    ``time_us``) so engine spans, metric histograms and benchmark
+    readouts share one time source.  Waive genuine time-of-day sites
+    (checkpoint metadata) with ``# rowlint: disable=RC105``."""
+    if "/obs/" in rel.replace("\\", "/"):
+        return []
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr in TIME_FUNCS and \
+                isinstance(node.func.value, ast.Name) and \
+                node.func.value.id == "time":
+            out.append(Violation(
+                "RC105", rel, node.lineno,
+                f"raw time.{node.func.attr}() bypasses the obs clock; "
+                "use repro.obs.metrics (now/Stopwatch/time_us) or waive "
+                "a documented time-of-day site"))
+    return out
+
+
 def _class_methods(tree: ast.AST, cls_name: str) -> Dict[str,
                                                          ast.FunctionDef]:
     for node in ast.walk(tree):
@@ -264,9 +299,23 @@ def lint(root: pathlib.Path) -> List[Violation]:
         waived = line_waivers(source)
         found = (check_opcode_registry(tree, rel, constants)
                  + check_stacked_ids(tree, rel)
-                 + check_pool_mutation(tree, rel))
+                 + check_pool_mutation(tree, rel)
+                 + check_raw_clocks(tree, rel))
         violations += [v for v in found
                        if v.rule not in waived.get(v.line, ())]
+    # benchmarks/ and examples/ are outside the package but are exactly
+    # where ad-hoc wall-clock timing accumulates — RC105 only
+    for extra in ("benchmarks", "examples"):
+        d = root / extra
+        if not d.is_dir():
+            continue
+        for path in sorted(d.rglob("*.py")):
+            rel = str(path.relative_to(root))
+            source = path.read_text()
+            tree = ast.parse(source, filename=rel)
+            waived = line_waivers(source)
+            violations += [v for v in check_raw_clocks(tree, rel)
+                           if v.rule not in waived.get(v.line, ())]
     violations += check_verb_mirrors(root)
     return sorted(violations, key=lambda v: (v.path, v.line, v.rule))
 
@@ -287,7 +336,7 @@ def main(argv=None) -> int:
         print(f"rowlint: {len(violations)} violation(s)")
         return 1
     print("rowlint: clean (RC101 opcode-registry, RC102 stacked-ids, "
-          "RC103 pool-mutation, RC104 stream-mirror)")
+          "RC103 pool-mutation, RC104 stream-mirror, RC105 raw-clock)")
     return 0
 
 
